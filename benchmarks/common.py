@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: the evaluation setup of paper §5.1 on TPU v5e.
+
+Model: deepseek_v32 (the paper's DeepSeek-V3.2 geometry, MLA-profile GQA).
+Deployments: ASAP disaggregated D=4,T=4,E=16 (paper-faithful, 32 chips) vs
+synchronous DP=8,TP=4,EP=32 (DeepSeek report baseline, same 32 chips).
+Workload: Poisson arrivals, Huawei-trace-like clipped lognormal lengths,
+5 s TTFT SLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core.cost_model import CostModel, Deployment
+from repro.core.simulator import SimConfig, run_sim, slo_throughput
+
+CFG = get_config("deepseek_v32")
+ASAP_DEP = Deployment(D=4, T=4, E=16)     # paper-faithful (§4.2)
+SYNC_DEP = Deployment(D=8, T=4, E=32)     # DeepSeek-V3 synchronous baseline
+SLO = 5.0
+
+
+def quick_params(quick: bool):
+    return dict(duration=30.0 if quick else 60.0,
+                refine=0.5 if quick else 0.125)
+
+
+def fmt_table(rows, headers) -> str:
+    widths = [max(len(str(r[i])) for r in rows + [headers])
+              for i in range(len(headers))]
+    def line(vals):
+        return "  ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    sep = "-" * (sum(widths) + 2 * (len(widths) - 1))
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

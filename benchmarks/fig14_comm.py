@@ -1,0 +1,58 @@
+"""Paper Fig 14 — communication latency: sync P2P vs async-dispatch.
+
+Two levels: (a) the latency MODEL on v5e ICI (the numbers used everywhere);
+(b) the PROTOCOL mechanism measured on the real threaded primitives: a busy
+receiver stalls a sync P2P sender but not an async shared-buffer sender.
+"""
+import threading
+import time
+
+from benchmarks.common import ASAP_DEP, CFG, fmt_table
+from repro.core.async_primitives import (DispatchPayload, MoEDeviceBuffer,
+                                         SyncP2P)
+from repro.core.cost_model import CostModel
+
+
+def run(quick: bool = False) -> dict:
+    cm = CostModel(CFG, dep=ASAP_DEP)
+    rows = []
+    for tokens in (512, 1024, 2048, 4096, 8192):
+        a = cm.async_dispatch_latency(tokens) * 1e3
+        s = cm.sync_p2p_dispatch_latency(tokens) * 1e3
+        rows.append((tokens, f"{a:.3f}", f"{s:.3f}", f"{s/a:.1f}x"))
+    # protocol-level wall-clock measurement (threaded primitives)
+    busy = 0.05
+    p2p = SyncP2P()
+
+    def busy_receiver():
+        time.sleep(busy)
+        p2p.recv(timeout=5)
+
+    t = threading.Thread(target=busy_receiver, daemon=True)
+    t.start()
+    t0 = time.monotonic()
+    p2p.send("x", b"x" * 1024, timeout=5)
+    sync_wall = time.monotonic() - t0
+    t.join()
+    buf = MoEDeviceBuffer(D=1, T=1)
+    t0 = time.monotonic()
+    buf.dispatch_send(0, 0, DispatchPayload(0, 0, [1], b"x" * 1024,
+                                            [(0, 0)], [0]))
+    async_wall = time.monotonic() - t0
+    return dict(rows=rows, sync_wall_ms=sync_wall * 1e3,
+                async_wall_ms=async_wall * 1e3)
+
+
+def main(quick: bool = False):
+    r = run(quick)
+    print("== Fig 14: dispatch latency model (v5e ICI) ==")
+    print(fmt_table(r["rows"], ["tokens", "async_ms", "sync_p2p_ms", "ratio"]))
+    print("(paper measures 4x at 1k tokens, 5.8x at 8k on CloudMatrix UB)")
+    print(f"\nprotocol mechanism (threaded runtime, 50ms-busy receiver): "
+          f"sync send stalls {r['sync_wall_ms']:.1f} ms, async send returns "
+          f"in {r['async_wall_ms']:.2f} ms")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Figs 16-18 — ablations: dual-batch interleaving, comm-compute
+overlap (triple stream), bubble-free dispatch (MoE Super Kernel)."""
+from benchmarks.common import ASAP_DEP, CFG, SLO, fmt_table, quick_params
+from repro.core.simulator import SimConfig, run_sim, slo_throughput
+
+ABLATIONS = [
+    ("fig16 dual-batch interleaving", "interleave", "14.3%"),
+    ("fig17 comm-compute overlap", "overlap", "12.4%"),
+    ("fig18 super-kernel dispatch", "super_kernel", "6%"),
+]
+
+
+def run(quick: bool = False) -> dict:
+    qp = quick_params(quick)
+    full = slo_throughput(CFG, "asap", slo=SLO, asap_dep=ASAP_DEP, **qp)
+    rows = []
+    out = {"full": full}
+    for label, flag, paper in ABLATIONS:
+        thr = slo_throughput(CFG, "asap", slo=SLO, asap_dep=ASAP_DEP,
+                             **{flag: False}, **qp)
+        gain = (full / thr - 1) * 100 if thr else float("inf")
+        rows.append((label, thr, full, f"+{gain:.1f}%", paper))
+        out[flag] = thr
+    # Fig 18 also reports a low-RPS TTFT saving ~= L * host_dispatch
+    lo_on = run_sim(CFG, SimConfig(mode="asap", rps=1.0, duration=30.0),
+                    asap_dep=ASAP_DEP).mean_ttft
+    lo_off = run_sim(CFG, SimConfig(mode="asap", rps=1.0, duration=30.0,
+                                    super_kernel=False),
+                     asap_dep=ASAP_DEP).mean_ttft
+    out["rows"] = rows
+    out["superkernel_ttft_saving_ms"] = (lo_off - lo_on) * 1e3
+    return out
+
+
+def main(quick: bool = False):
+    r = run(quick)
+    print("== Figs 16-18: mechanism ablations (SLO throughput) ==")
+    print(fmt_table(r["rows"], ["mechanism", "off_rps", "on_rps", "gain",
+                                "paper_gain"]))
+    print(f"\nsuper-kernel TTFT saving at RPS=1: "
+          f"{r['superkernel_ttft_saving_ms']:.1f} ms "
+          f"(paper: ~13.4 ms = 61 layers x 220 us)")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline table reader: renders EXPERIMENTS.md §Roofline from the dry-run
+JSONL (results/dryrun_baseline.jsonl by default)."""
+import json
+import os
+from collections import OrderedDict
+
+from benchmarks.common import fmt_table
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun_baseline.jsonl")
+
+
+def load(path=DEFAULT_PATH):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return recs
+
+
+def run(quick: bool = False, path=DEFAULT_PATH) -> dict:
+    recs = load(path)
+    rows = []
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != "16x16" or r.get("status") != "ok":
+            continue
+        dom = r["dominant"]
+        terms = {k: r[f"{k}_s"] for k in ("compute", "memory", "collective")}
+        frac = terms["compute"] / max(max(terms.values()), 1e-12)
+        rows.append((arch, shape, f"{terms['compute']:.3f}",
+                     f"{terms['memory']:.3f}", f"{terms['collective']:.3f}",
+                     dom, f"{frac:.3f}",
+                     f"{(r.get('useful_flops_ratio') or 0):.3f}",
+                     f"{r['mem']['peak_hbm_gb']:.1f}"))
+    return dict(rows=rows, n=len(rows))
+
+
+def main(quick: bool = False, path=DEFAULT_PATH):
+    r = run(quick, path)
+    print(f"== Roofline baseline (single-pod 16x16; {r['n']} cells) ==")
+    print(fmt_table(r["rows"],
+                    ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                     "bottleneck", "roofline_frac", "useful_flops",
+                     "peak_hbm_gb"]))
+    print("\nroofline_frac = compute_s / dominant_term (1.0 = compute-bound "
+          "at peak); useful_flops = MODEL_FLOPS / HLO FLOPs")
+    opt_path = path.replace("baseline", "optimized")
+    if os.path.exists(opt_path) and opt_path != path:
+        base, opt = load(path), load(opt_path)
+        rows = []
+        for k in sorted(base):
+            if k[2] != "16x16":
+                continue
+            b, o = base[k], opt.get(k)
+            if not o or b["status"] != "ok" or o["status"] != "ok":
+                continue
+            bd = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            od = max(o["compute_s"], o["memory_s"], o["collective_s"])
+            rows.append((k[0], k[1], f"{bd:.2f}", f"{od:.2f}",
+                         f"{bd/od:.2f}x" if od else "-",
+                         f"{b['mem']['peak_hbm_gb']:.0f}->"
+                         f"{o['mem']['peak_hbm_gb']:.0f}"))
+        print(f"\n== §Perf knob stack applied to every cell "
+              f"(baseline vs optimized dominant term) ==")
+        print(fmt_table(rows, ["arch", "shape", "base_dom_s", "opt_dom_s",
+                               "speedup", "hbm_gb"]))
+    return r
+
+
+if __name__ == "__main__":
+    main()

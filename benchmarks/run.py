@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig13]
+"""
+import argparse
+import importlib
+import time
+import traceback
+
+MODULES = [
+    ("fig3_characterization", "Fig 3/4  workload characterization"),
+    ("fig12_ttft", "Fig 12   mean TTFT vs RPS"),
+    ("fig13_slo", "Fig 13   SLO-compliant throughput"),
+    ("fig14_comm", "Fig 14   async vs sync communication"),
+    ("fig15_decomp", "Fig 15   TTFT decomposition"),
+    ("fig16_18_ablations", "Fig16-18 mechanism ablations"),
+    ("fig19_failures", "Fig 19   fault tolerance (beyond paper)"),
+    ("superkernel_dispatch", "SuperKernel AOT dispatch (structural)"),
+    ("roofline", "Roofline table (from dry-run)"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    t_all = time.time()
+    failures = []
+    for name, title in MODULES:
+        if args.only and args.only not in name:
+            continue
+        print("\n" + "=" * 78)
+        print(f"### {title}")
+        print("=" * 78)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main(quick=args.quick)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+    print("\n" + "=" * 78)
+    print(f"benchmarks done in {time.time()-t_all:.0f}s; "
+          f"failures: {failures or 'none'}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

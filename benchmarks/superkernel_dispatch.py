@@ -1,0 +1,60 @@
+"""Structural verification of the Super Kernel's bubble-free dispatch claim
+(paper Fig 9/10): with stacked weights + runtime layer id, a scan over L MoE
+layers lowers to ONE while loop whose body contains the expert GMMs once —
+i.e. one ahead-of-time-dispatchable program, no per-layer host work. The
+per-layer alternative (layer id as a Python constant) emits L distinct GMM
+call sites.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table
+from repro.kernels.super_gmm.ref import super_gmm_ref
+
+
+def _count(hlo: str, needle: str) -> int:
+    return hlo.count(needle)
+
+
+def run(quick: bool = False) -> dict:
+    L, E, C, d, f = 8, 4, 64, 64, 128
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (L, E, d, f), jnp.bfloat16)
+    xb = jax.random.normal(key, (E, C, d), jnp.bfloat16)
+
+    def scanned(w, xb):  # layer-oblivious: layer id is scan DATA
+        def body(h, lid):
+            return h + super_gmm_ref(lid, w, xb).astype(h.dtype), ()
+        h, _ = jax.lax.scan(body, jnp.zeros((E, C, f), jnp.float32),
+                            jnp.arange(L))
+        return h
+
+    def unrolled(w, xb):  # per-layer kernels: layer id is a constant
+        h = jnp.zeros((E, C, f), jnp.float32)
+        for lid in range(L):
+            h = h + super_gmm_ref(jnp.asarray(lid), w, xb).astype(h.dtype)
+        return h
+
+    hlo_s = jax.jit(scanned).lower(w, xb).compile().as_text()
+    hlo_u = jax.jit(unrolled).lower(w, xb).compile().as_text()
+    dots_s = _count(hlo_s, " dot(")
+    dots_u = _count(hlo_u, " dot(")
+    return dict(layers=L, scanned_gmm_sites=dots_s, unrolled_gmm_sites=dots_u,
+                scanned_has_one_program=dots_s < dots_u)
+
+
+def main(quick: bool = False):
+    r = run(quick)
+    print("== Super Kernel: ahead-of-time dispatch (structural) ==")
+    rows = [("layer-oblivious (scan, layer id = data)", r["scanned_gmm_sites"]),
+            (f"per-layer constants (x{r['layers']} layers)",
+             r["unrolled_gmm_sites"])]
+    print(fmt_table(rows, ["lowering", "GMM call sites in HLO"]))
+    print("\none GMM site independent of depth -> the whole layer loop is a "
+          "single pre-dispatchable program (no per-layer host bubble); "
+          "per-layer constants replicate the kernel per layer.")
+    return r
+
+
+if __name__ == "__main__":
+    main()

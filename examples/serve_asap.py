@@ -1,0 +1,62 @@
+"""End-to-end ASAP serving demo (deliverable: serve a small model with batched
+requests): heterogeneous requests -> length-aware batching -> disaggregated
+asynchronous pipeline (real threads + shared-buffer primitives) -> first
+tokens, with the out-of-order MoE execution made visible.
+
+  PYTHONPATH=src python examples/serve_asap.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.executor import BatchJob, DisaggregatedExecutor
+from repro.core.scheduler import LengthAwareBatcher, pair_batches
+from repro.core.trace import Request
+from repro.models.lm import init_lm_params, lm_head
+
+cfg = get_config("qwen3-moe-235b-a22b").smoke().replace(
+    num_layers=4, num_experts=8, top_k=2)
+params = init_lm_params(jax.random.PRNGKey(0), cfg)
+
+# --- a burst of heterogeneous requests (the DP-imbalance trigger)
+rng = np.random.RandomState(0)
+lengths = rng.choice([8, 12, 16, 24, 32, 48], size=10)
+reqs = [Request(rid=i, arrival=i * 0.01, length=int(l))
+        for i, l in enumerate(lengths)]
+print("request lengths:", list(lengths))
+
+# --- length-aware batching (§3.3.1): batch past the MoE inflection point
+batcher = LengthAwareBatcher(inflection=48, max_tokens=96,
+                             exclusive_cutoff=1_000)
+batches = []
+for r in reqs:
+    batches += batcher.add(r, r.arrival)
+batches += batcher.flush(1.0)
+pairs = pair_batches(batches)
+print(f"-> {len(batches)} batches, {len(pairs)} dual-batch pairs "
+      f"(tokens per batch: {[b.total_tokens for b in batches]})")
+
+# --- run through the disaggregated async pipeline (D=2 groups + E=4 MoE devs)
+S = 48
+jobs = [BatchJob(tokens=rng.randint(0, cfg.vocab_size,
+                                    (len(b.requests), S)).astype(np.int32),
+                 bid=b.bid) for b in batches]
+t0 = time.time()
+ex = DisaggregatedExecutor(params, cfg, D=2, E=4)
+done = ex.run([jobs[0::2], jobs[1::2]])
+print(f"pipeline completed {len(done)} batches in {time.time()-t0:.1f}s")
+
+# --- out-of-order MoE execution (the barrier-free property, §3.4.2)
+moe_events = [(e[1], e[4]) for e in ex.log if e[0] == "moe"][:18]
+print("MoE (device, layer) execution order:", moe_events)
+inversions = sum(1 for a, b in zip(moe_events, moe_events[1:]) if b[1] < a[1])
+print(f"layer-order inversions (out-of-order execution): {inversions}")
+
+# --- first tokens
+for j in done:
+    h = jnp.asarray(j.result[:, -1])
+    first = jnp.argmax(lm_head(params, h, cfg), -1)
+    print(f"batch {j.bid}: first tokens {np.asarray(first)}")

@@ -1,0 +1,58 @@
+"""Train a reduced MoE model for a few hundred steps on CPU, with atomic
+checkpointing + failure recovery (deliverable: end-to-end training driver).
+
+  PYTHONPATH=src python examples/train_moe.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import pipeline_for
+from repro.launch.steps import TrainState, build_train_step
+from repro.models.api import build_api
+from repro.optim.adamw import AdamW
+from repro.runtime.fault_tolerance import ResilientTrainer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_moe")
+args = ap.parse_args()
+
+cfg = get_config("qwen3-moe-235b-a22b").smoke().replace(
+    num_layers=2, num_experts=4, top_k=2, d_model=64, d_ff=128, moe_d_ff=64,
+    vocab_size=256)
+api = build_api(cfg)
+opt = AdamW(lr=1e-3, warmup_steps=20)
+params = api.init(jax.random.PRNGKey(0))
+state = TrainState(params, opt.init(params))
+n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+print(f"training {cfg.name} (reduced, {n/1e6:.2f}M params) for "
+      f"{args.steps} steps")
+
+pipe = pipeline_for(cfg, seq_len=64, global_batch=8)
+step_fn = jax.jit(build_train_step(api, opt))
+losses = []
+
+
+def on_step(step, metrics):
+    losses.append(float(metrics["loss"]))
+    if step % 25 == 0:
+        print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+              f"dropped {float(metrics['dropped_fraction'])*100:.1f}%")
+
+
+trainer = ResilientTrainer(step_fn, pipe, CheckpointManager(args.ckpt_dir),
+                           ckpt_every=50)
+t0 = time.time()
+state, step, metrics = trainer.run(state, args.steps,
+                                   inject_failure_at=args.steps // 2,
+                                   on_step=on_step)
+print(f"\ndone in {time.time()-t0:.0f}s (one failure injected + recovered at "
+      f"step {args.steps//2})")
+print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+      f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})")
+assert losses[-1] < losses[0]

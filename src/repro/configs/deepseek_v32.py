@@ -1,0 +1,33 @@
+"""deepseek_v32 — the PAPER's own model (DeepSeek-V3.2 backbone geometry).
+
+Not part of the assigned 10-arch pool; this is the configuration ASAP §5 runs:
+61L d_model=7168, 256 routed experts top-8 + 1 shared expert, expert d_ff=2048.
+We use a GQA attention backbone in place of MLA/DSA (documented in DESIGN.md —
+MLA/DSA are orthogonal to ASAP's contribution; the paper's own characterization
+keeps the O(s^2) prefill term which GQA preserves). Head geometry matches MLA's
+COMPUTE profile: 128 heads x 192 qk-dim (q_dim 24576), so the quadratic
+attention term — the source of DP imbalance — has the right magnitude relative
+to the MoE stage (paper Fig 3: MoE < 15% of attention latency beyond 16k).
+
+Used by: core benchmarks (Figs 12–18), the simulator's default model, and an
+extra dry-run config.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek_v32",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=8,
+    head_dim=192,
+    d_ff=18432,           # dense-equivalent ffn (first layers in real model)
+    vocab_size=129_280,
+    num_experts=256,
+    top_k=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+)

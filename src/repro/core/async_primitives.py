@@ -1,0 +1,194 @@
+"""Asynchronous communication primitives (paper §3.2) — faithful protocol model.
+
+The paper's distributed shared-memory abstraction, reproduced with real shared
+buffers + bitmap flags + backpressure, executed by the threaded MPMD runtime in
+core/executor.py (each simulated NPU = a thread; buffers = process memory,
+which is exactly the "globally visible buffer" role UB plays on CloudMatrix).
+
+Buffer structure mirrors Table 2:
+
+  MoE device buffer   — D regions × T rows; each row holds (token metadata,
+                        token payload); one T-bit bitmap flag per region.
+  Attn device buffer  — E result segments (+ routing metadata); E-bit bitmap.
+
+Protocol invariants (asserted in tests):
+  * senders never handshake: write + set-flag, then return (async-*-send);
+  * a sender blocks ONLY on backpressure (its previous write not yet drained);
+  * receivers poll flags and drain complete regions out-of-order (§3.4.2);
+  * flags are cleared by the receiver — acknowledgment is implicit.
+
+`SyncP2P` is the blocking baseline used for the Fig 14 comparison: sender and
+receiver rendezvous (handshake) and the transfer occupies both ends.
+
+On a real TPU this layer maps to Pallas `make_async_remote_copy` descriptors +
+semaphore waits (see DESIGN.md §2); the kernel-side analogue of the bitmap flag
+is the DMA completion semaphore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class Bitmap:
+    """An N-bit flag word with condition-variable semantics."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self._bits = 0
+        self._cv = threading.Condition()
+
+    def set_bit(self, i: int):
+        with self._cv:
+            self._bits |= (1 << i)
+            self._cv.notify_all()
+
+    def clear(self):
+        with self._cv:
+            self._bits = 0
+            self._cv.notify_all()
+
+    def test(self, i: int) -> bool:
+        with self._cv:
+            return bool(self._bits & (1 << i))
+
+    def all_set(self) -> bool:
+        with self._cv:
+            return self._bits == (1 << self.n) - 1
+
+    def wait_all(self, timeout: Optional[float] = None) -> bool:
+        with self._cv:
+            return self._cv.wait_for(
+                lambda: self._bits == (1 << self.n) - 1, timeout)
+
+    def wait_clear(self, i: int, timeout: Optional[float] = None) -> bool:
+        """Backpressure: block while bit i is still set."""
+        with self._cv:
+            return self._cv.wait_for(lambda: not (self._bits & (1 << i)),
+                                     timeout)
+
+
+@dataclasses.dataclass
+class DispatchPayload:
+    """One TP member's shard of a dispatched batch-layer (region row)."""
+    layer: int
+    slot: int  # dual-batch slot (0/1) on the sending group
+    counts: Any  # tokens per local expert (metadata ①)
+    tokens: Any  # hidden states (payload ②)
+    token_ids: Any  # positions for combine
+    expert_ids: Any  # local expert index per row
+    weights: Any = None
+
+
+class MoEDeviceBuffer:
+    """Shared buffer resident on one MoE device: D regions × T rows + flags."""
+
+    def __init__(self, D: int, T: int):
+        self.D, self.T = D, T
+        self.rows: List[List[Optional[DispatchPayload]]] = \
+            [[None] * T for _ in range(D)]
+        self.flags = [Bitmap(T) for _ in range(D)]
+
+    # ---- sender side (attention device NPU_ij) ----
+    def dispatch_send(self, dp_i: int, tp_j: int, payload: DispatchPayload,
+                      timeout: Optional[float] = 240.0):
+        """async-dispatch-send: backpressure-wait, write, set flag, return."""
+        if not self.flags[dp_i].wait_clear(tp_j, timeout):
+            raise TimeoutError("dispatch backpressure timeout")
+        self.rows[dp_i][tp_j] = payload
+        self.flags[dp_i].set_bit(tp_j)
+
+    # ---- receiver side (MoE device) ----
+    def poll_ready(self) -> Optional[int]:
+        """Any region with all T flags set (out-of-order across DP groups)."""
+        for i in range(self.D):
+            if self.flags[i].all_set():
+                return i
+        return None
+
+    def dispatch_recv(self, dp_i: int) -> List[DispatchPayload]:
+        """async-dispatch-recv: migrate payload to private memory, clear flags."""
+        assert self.flags[dp_i].all_set(), "recv before region complete"
+        out = list(self.rows[dp_i])  # "migrate to private memory"
+        self.rows[dp_i] = [None] * self.T
+        self.flags[dp_i].clear()  # acknowledge: sender may write again
+        return out  # type: ignore
+
+
+@dataclasses.dataclass
+class CombinePayload:
+    layer: int
+    token_ids: Any
+    expert_ids: Any
+    outputs: Any  # expert results (②)
+
+
+class AttnDeviceBuffer:
+    """Shared buffer on one attention device: E result segments + E-bit flag.
+    One instance per dual-batch slot."""
+
+    def __init__(self, E: int):
+        self.E = E
+        self.segments: List[Optional[CombinePayload]] = [None] * E
+        self.flags = Bitmap(E)
+
+    # ---- sender side (MoE device e) ----
+    def combine_send(self, e: int, payload: CombinePayload,
+                     timeout: Optional[float] = 240.0):
+        if not self.flags.wait_clear(e, timeout):
+            raise TimeoutError("combine backpressure timeout")
+        self.segments[e] = payload
+        self.flags.set_bit(e)
+
+    # ---- receiver side (attention device) ----
+    def combine_recv(self, timeout: Optional[float] = 240.0) -> List[CombinePayload]:
+        """Wait for ALL E segments (empty results still send a marker so the
+        bitmap completes — 'all activated expert results received')."""
+        if not self.flags.wait_all(timeout):
+            raise TimeoutError("combine recv timeout")
+        out = list(self.segments)
+        self.segments = [None] * self.E
+        self.flags.clear()
+        return out  # type: ignore
+
+
+# ---------------------------------------------------------------------------
+# Synchronous P2P baseline (Fig 14)
+# ---------------------------------------------------------------------------
+
+
+class SyncP2P:
+    """Blocking point-to-point: sender and receiver must rendezvous; the
+    transfer completes only once the receiver has accepted it (handshake +
+    receiver-busy stall — the overheads §5.4 attributes to sync P2P)."""
+
+    def __init__(self):
+        self._lock = threading.Condition()
+        self._mailbox: Optional[Tuple[Any, Any]] = None
+        self._ready = False  # receiver parked in recv()
+
+    def send(self, tag: Any, payload: Any, timeout: Optional[float] = 240.0):
+        with self._lock:
+            if not self._lock.wait_for(lambda: self._ready and
+                                       self._mailbox is None, timeout):
+                raise TimeoutError("p2p send: no receiver")
+            self._mailbox = (tag, payload)
+            self._lock.notify_all()
+            # blocking: wait for the receiver to take it (ack)
+            if not self._lock.wait_for(lambda: self._mailbox is None, timeout):
+                raise TimeoutError("p2p send: no ack")
+
+    def recv(self, timeout: Optional[float] = 240.0) -> Tuple[Any, Any]:
+        with self._lock:
+            self._ready = True
+            self._lock.notify_all()
+            if not self._lock.wait_for(lambda: self._mailbox is not None,
+                                       timeout):
+                raise TimeoutError("p2p recv timeout")
+            out = self._mailbox
+            self._mailbox = None
+            self._ready = False
+            self._lock.notify_all()
+            return out

@@ -1,0 +1,256 @@
+"""Threaded MPMD runtime: ASAP's disaggregated asynchronous pipeline with REAL
+JAX compute (mechanism-level reproduction; the performance level lives in
+core/simulator.py, the at-scale SPMD level in launch/).
+
+Topology: D attention DP groups (each a thread; T configurable protocol rows)
++ E MoE device threads, wired by the shared-buffer primitives of
+core/async_primitives.py. Every mechanism of the paper is present:
+
+  * async dispatch/combine with bitmap flags + backpressure (§3.2)
+  * dual-batch interleaving on attention devices (§3.3.2)
+  * out-of-order MoE: devices poll regions and process whichever DP group's
+    batch-layer is ready — the layer id arrives as DATA (metadata ①) and
+    indexes the resident [L, E_local, ...] weight stack exactly like the
+    MoE Super Kernel's scalar-prefetch index (§3.4.2)
+  * shared-expert compute on the attention device overlapped with the routed
+    experts' remote execution (beyond-paper overlap; disable with
+    `shared_on_attention=False`)
+
+Numerical contract (tested): pipeline output == lm_backbone(..., moe_mode=
+"dense") for the same params — asynchrony must not change the math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_primitives import (AttnDeviceBuffer, CombinePayload,
+                                         DispatchPayload, MoEDeviceBuffer)
+from repro.models.attention import attention_forward
+from repro.models.common import ModelConfig, act_fn, apply_norm
+from repro.models.moe import router_topk
+from repro.models.lm import embed_tokens, lm_stages
+
+
+@dataclasses.dataclass
+class BatchJob:
+    tokens: Any  # [B, S] int32
+    result: Any = None  # final hidden states [B, S, d]
+    bid: int = 0
+
+
+class DisaggregatedExecutor:
+    def __init__(self, params, cfg: ModelConfig, D: int = 2, E: int = 4,
+                 T: int = 1, interleave: bool = True,
+                 shared_on_attention: bool = True):
+        assert cfg.family == "moe", "executor drives MoE models"
+        assert cfg.num_experts % E == 0, "E must divide num_experts"
+        (kind, n, opts), = lm_stages(cfg)
+        assert kind == "decoder" and opts["moe"]
+        self.params, self.cfg = params, cfg
+        self.D, self.E, self.T = D, E, T
+        self.L = cfg.num_layers
+        self.e_local = cfg.num_experts // E
+        self.interleave = interleave
+        self.shared_on_attention = shared_on_attention
+        self.stage = params["stages"][0]
+        # buffers
+        self.moe_bufs = [MoEDeviceBuffer(D, T) for _ in range(E)]
+        self.attn_bufs = [[AttnDeviceBuffer(E) for _ in range(2)]
+                          for _ in range(D)]  # per group x dual-batch slot
+        # "resident" expert weights per MoE device: [L, e_local, ...] — the
+        # super-kernel layout (all layers resident; layer id indexes at runtime)
+        ex = self.stage["ffn"]["experts"]
+        self.resident = []
+        for e in range(E):
+            lo, hi = e * self.e_local, (e + 1) * self.e_local
+            self.resident.append({k: np.asarray(v[:, lo:hi])
+                                  for k, v in ex.items()})
+        self.stop = threading.Event()
+        self.errors: List[BaseException] = []
+        # event log for protocol assertions in tests
+        self.log: List[tuple] = []
+        self._log_lock = threading.Lock()
+
+    def _logev(self, *ev):
+        with self._log_lock:
+            self.log.append(ev)
+
+    # ------------------------------------------------------------ attention
+    def _layer_params(self, l: int):
+        return jax.tree.map(lambda a: a[l], self.stage)
+
+    def _attn_part(self, lp, h):
+        cfg = self.cfg
+        h = h + attention_forward(lp["attn"], apply_norm(h, lp["ln_attn"], cfg),
+                                  cfg, use_dense=True)
+        x = apply_norm(h, lp["ln_ffn"], cfg)
+        B, S, d = x.shape
+        xf = x.reshape(B * S, d)
+        weights, idx, _ = router_topk(lp["ffn"]["router"], xf, cfg)
+        shared = None
+        if "shared" in lp["ffn"] and self.shared_on_attention:
+            sp = lp["ffn"]["shared"]
+            act = act_fn(cfg.act)
+            shared = (act(xf @ sp["w_gate"]) * (xf @ sp["w_up"])) @ sp["w_down"]
+        return h, xf, np.asarray(weights), np.asarray(idx), shared
+
+    def _dispatch(self, g: int, slot: int, layer: int, xf, idx):
+        """async-dispatch-send to every MoE device (empty payloads included so
+        T·D bitmap regions always complete)."""
+        xf_np = np.asarray(xf)
+        Tn, K = idx.shape
+        flat_t = np.repeat(np.arange(Tn), K)
+        flat_e = idx.reshape(-1)
+        flat_k = np.tile(np.arange(K), Tn)
+        for e in range(self.E):
+            lo, hi = e * self.e_local, (e + 1) * self.e_local
+            m = (flat_e >= lo) & (flat_e < hi)
+            token_ids = np.stack([flat_t[m], flat_k[m]], 1)  # (token, k)
+            local_ids = flat_e[m] - lo
+            counts = np.bincount(local_ids, minlength=self.e_local)
+            payload_tokens = xf_np[flat_t[m]]
+            for j in range(self.T):
+                sl = slice(j, None, self.T)  # row-split across TP members
+                p = DispatchPayload(layer=layer, slot=slot,
+                                    counts=counts if j == 0 else None,
+                                    tokens=payload_tokens[sl],
+                                    token_ids=token_ids[sl],
+                                    expert_ids=local_ids[sl])
+                self.moe_bufs[e].dispatch_send(g, j, p)
+            self._logev("dispatch", g, slot, layer, e, int(m.sum()))
+
+    def _combine(self, g: int, slot: int, h, xf, weights, shared):
+        """async-combine-recv + weighted accumulation (token-order restore)."""
+        payloads = self.attn_bufs[g][slot].combine_recv()
+        Tn, d = xf.shape
+        acc = np.zeros((Tn, d), np.float32)
+        layer = None
+        for p in payloads:
+            if p.outputs is None or len(p.token_ids) == 0:
+                continue
+            layer = p.layer
+            t = p.token_ids[:, 0]
+            k = p.token_ids[:, 1]
+            w = weights[t, k][:, None]
+            np.add.at(acc, t, np.asarray(p.outputs, np.float32) * w)
+        if shared is not None:
+            acc = acc + np.asarray(shared, np.float32)
+        B, S, _ = h.shape
+        y = jnp.asarray(acc.astype(np.float32)).astype(h.dtype)
+        self._logev("combine", g, slot, layer)
+        return h + y.reshape(B, S, d)
+
+    # ----------------------------------------------------------- moe worker
+    def _moe_worker(self, e: int):
+        buf = self.moe_bufs[e]
+        res = self.resident[e]
+        act = act_fn(self.cfg.act)
+        try:
+            while True:
+                i = buf.poll_ready()
+                if i is None:
+                    if self.stop.is_set():
+                        return
+                    threading.Event().wait(0.0002)
+                    continue
+                rows = buf.dispatch_recv(i)
+                layer = rows[0].layer
+                slot = rows[0].slot
+                tokens = np.concatenate([r.tokens for r in rows], 0)
+                token_ids = np.concatenate([r.token_ids for r in rows], 0)
+                eids = np.concatenate([r.expert_ids for r in rows], 0)
+                if len(tokens):
+                    # layer-oblivious: `layer` is runtime data indexing the
+                    # resident all-layer weight stack (super-kernel semantics)
+                    wg = res["w_gate"][layer]
+                    wu = res["w_up"][layer]
+                    wd = res["w_down"][layer]
+                    out = np.zeros((len(tokens), tokens.shape[1]), np.float32)
+                    xj = jnp.asarray(tokens)
+                    for le in np.unique(eids):
+                        m = eids == le
+                        xm = xj[np.where(m)[0]]
+                        y = (act(xm @ jnp.asarray(wg[le]))
+                             * (xm @ jnp.asarray(wu[le]))) @ jnp.asarray(wd[le])
+                        out[m] = np.asarray(y, np.float32)
+                else:
+                    out = None
+                self._logev("moe", e, i, slot, layer, len(tokens))
+                self.attn_bufs[i][slot].combine_send(
+                    e, CombinePayload(layer=layer, token_ids=token_ids,
+                                      expert_ids=eids, outputs=out))
+        except BaseException as ex:  # surface thread failures to the caller
+            self.errors.append(ex)
+            self.stop.set()
+
+    # --------------------------------------------------------- group worker
+    def _group_worker(self, g: int, jobs: List[BatchJob]):
+        try:
+            queue = list(jobs)
+            active: List[Dict[str, Any]] = []
+            free_slots = [0, 1] if self.interleave else [0]
+            seq = 0
+            while queue or active:
+                while queue and free_slots:
+                    job = queue.pop(0)
+                    h = embed_tokens(self.params, jnp.asarray(job.tokens),
+                                     None, self.cfg)
+                    active.append({"job": job, "h": h, "layer": 0,
+                                   "phase": "attn", "slot": free_slots.pop(0),
+                                   "ctx": None, "seq": 0})
+                # run attention+dispatch for every slot that is ready
+                for st in active:
+                    if st["phase"] != "attn":
+                        continue
+                    lp = self._layer_params(st["layer"])
+                    h, xf, w, idx, shared = self._attn_part(lp, st["h"])
+                    st["h"] = h
+                    st["ctx"] = (xf, w, shared)
+                    self._dispatch(g, st["slot"], st["layer"], xf, idx)
+                    st["phase"] = "wait"
+                    st["seq"] = seq = seq + 1
+                # block on the oldest outstanding combine
+                waiting = [s for s in active if s["phase"] == "wait"]
+                if not waiting:
+                    continue
+                st = min(waiting, key=lambda s: s["seq"])
+                xf, w, shared = st["ctx"]
+                st["h"] = self._combine(g, st["slot"], st["h"], xf, w, shared)
+                st["layer"] += 1
+                if st["layer"] >= self.L:
+                    st["job"].result = np.asarray(
+                        apply_norm(st["h"], self.params["final_norm"], self.cfg))
+                    free_slots.append(st["slot"])
+                    active.remove(st)
+                else:
+                    st["phase"] = "attn"
+        except BaseException as ex:
+            self.errors.append(ex)
+            self.stop.set()
+
+    # ------------------------------------------------------------------ run
+    def run(self, jobs_per_group: List[List[BatchJob]]) -> List[BatchJob]:
+        assert len(jobs_per_group) == self.D
+        moe_threads = [threading.Thread(target=self._moe_worker, args=(e,),
+                                        daemon=True) for e in range(self.E)]
+        for t in moe_threads:
+            t.start()
+        g_threads = [threading.Thread(target=self._group_worker, args=(g, js),
+                                      daemon=True)
+                     for g, js in enumerate(jobs_per_group)]
+        for t in g_threads:
+            t.start()
+        for t in g_threads:
+            t.join(timeout=300)
+        self.stop.set()
+        for t in moe_threads:
+            t.join(timeout=30)
+        if self.errors:
+            raise RuntimeError("executor thread failed") from self.errors[0]
+        return [j for js in jobs_per_group for j in js]

@@ -1,0 +1,152 @@
+"""Request scheduling policies.
+
+ASAP (§3.3): length-aware batching + dual-batch pairing. The batcher only has
+to exceed the MoE inflection point — it does NOT balance across DP groups,
+because the async pipeline lets groups progress independently.
+
+Baselines (§5.1):
+  Default        — vLLM-like: aggregate queued requests and partition into D
+                   sub-batches with balanced *total token counts* (LPT greedy).
+                   Balancing Σs is provably inadequate because attention cost
+                   is Σs² (paper §2.2.1).
+  ChunkedPrefill — split long prompts into fixed-size chunks (8k), reducing
+                   sequence-length variance; still synchronous.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.trace import Request
+
+_batch_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: List[Request]
+    bid: int = dataclasses.field(default_factory=lambda: next(_batch_counter))
+    exclusive: bool = False  # long batch: no dual-batch interleaving (§3.3.2)
+    # chunked-prefill bookkeeping
+    chunk_of: Optional[Request] = None
+    chunk_start: int = 0
+    chunk_len: int = 0
+
+    @property
+    def seq_lens(self) -> List[int]:
+        if self.chunk_of is not None:
+            return [self.chunk_len]
+        return [r.length for r in self.requests]
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(self.seq_lens)
+
+
+@dataclasses.dataclass
+class LengthAwareBatcher:
+    """ASAP §3.3.1 + §3.3.2.
+
+    Accumulates requests until Σ tokens ≥ `inflection` (then keeps them for
+    pairing), caps batches at `max_tokens`, gives > `exclusive_cutoff` requests
+    an exclusive batch with interleaving disabled, and flushes on `max_wait`.
+    """
+    inflection: int
+    max_tokens: int = 32_768
+    exclusive_cutoff: int = 16_384
+    max_wait: float = 0.02  # seconds a pending batch may age before flush
+
+    _pending: List[Request] = dataclasses.field(default_factory=list)
+    _pending_since: Optional[float] = None
+
+    def add(self, req: Request, now: float) -> List[Batch]:
+        out: List[Batch] = []
+        if req.length > self.exclusive_cutoff:
+            out.append(Batch(requests=[req], exclusive=True))
+            out.extend(self.poll(now))
+            return out
+        if not self._pending:
+            self._pending_since = now
+        self._pending.append(req)
+        out.extend(self.poll(now))
+        return out
+
+    def poll(self, now: float) -> List[Batch]:
+        """Emit batches whose token count passed the inflection point (or aged)."""
+        out: List[Batch] = []
+        while True:
+            total, cut = 0, 0
+            for i, r in enumerate(self._pending):
+                if total + r.length > self.max_tokens and total > 0:
+                    break
+                total += r.length
+                cut = i + 1
+            if cut == 0:
+                break
+            aged = (self._pending_since is not None
+                    and now - self._pending_since >= self.max_wait)
+            if total >= self.inflection or total >= self.max_tokens or aged:
+                out.append(Batch(requests=self._pending[:cut]))
+                self._pending = self._pending[cut:]
+                self._pending_since = now if self._pending else None
+                if aged and total < self.inflection:
+                    break
+            else:
+                break
+        return out
+
+    def flush(self, now: float) -> List[Batch]:
+        out = []
+        if self._pending:
+            out.append(Batch(requests=self._pending))
+            self._pending = []
+            self._pending_since = None
+        return out
+
+
+def balanced_partition(requests: Sequence[Request], d: int,
+                       max_tokens_per_group: int) -> Tuple[List[List[Request]], List[Request]]:
+    """Default baseline: LPT greedy on *total token counts* (the inadequate
+    metric — attention is Σ s²). Returns (groups, overflow)."""
+    groups: List[List[Request]] = [[] for _ in range(d)]
+    loads = [0] * d
+    overflow: List[Request] = []
+    for r in sorted(requests, key=lambda r: -r.length):
+        g = min(range(d), key=lambda i: loads[i])
+        if loads[g] + r.length > max_tokens_per_group and loads[g] > 0:
+            overflow.append(r)
+            continue
+        groups[g].append(r)
+        loads[g] += r.length
+    return groups, overflow
+
+
+def chunk_requests(requests: Sequence[Request], chunk: int) -> List[Batch]:
+    """ChunkedPrefill: split each prompt into `chunk`-token pieces (in order)."""
+    out: List[Batch] = []
+    for r in requests:
+        start = 0
+        while start < r.length:
+            c = min(chunk, r.length - start)
+            out.append(Batch(requests=[r], chunk_of=r, chunk_start=start,
+                             chunk_len=c))
+            start += c
+    return out
+
+
+def pair_batches(ready: List[Batch]) -> List[Tuple[Batch, Optional[Batch]]]:
+    """Dual-batch pairing (§3.3.2): co-schedule two non-exclusive batches."""
+    pairs: List[Tuple[Batch, Optional[Batch]]] = []
+    buf: Optional[Batch] = None
+    for b in ready:
+        if b.exclusive:
+            pairs.append((b, None))
+        elif buf is None:
+            buf = b
+        else:
+            pairs.append((buf, b))
+            buf = None
+    if buf is not None:
+        pairs.append((buf, None))
+    return pairs

@@ -1,0 +1,494 @@
+"""Discrete-event simulation of MoE prefill serving at production scale.
+
+Two engines over one hardware/cost model (core/cost_model.py — TPU v5e):
+
+  AsapSim — the paper's system: disaggregated attention (D groups × T chips) +
+    MoE stage (E chips); barrier-free async pipeline; length-aware batching;
+    dual-batch interleaving; comm-compute overlap (triple stream, MoE side);
+    layer-oblivious super kernel (no per-layer host dispatch on the critical
+    path). Every mechanism is an ablation flag (Figs 16–18).
+
+  SyncSim — synchronous baselines: `default` (token-count-balanced DP batching,
+    global barrier per MoE layer — vLLM-like) and `chunked` (8k chunked
+    prefill). Attention/MoE share the same chips (DP·T == EP geometry).
+
+Failure injection models a DP-group outage: ASAP requeues only that group's
+batches; a synchronous engine loses the whole in-flight iteration (global
+barrier) — the fault-tolerance contrast quantified in benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, Deployment, Hardware, V5E
+from repro.core.scheduler import (Batch, LengthAwareBatcher, balanced_partition,
+                                  chunk_requests)
+from repro.core.trace import Request, TraceConfig, generate_requests
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class SimConfig:
+    mode: str = "asap"  # asap | default | chunked
+    rps: float = 4.0
+    duration: float = 60.0
+    slo: float = 5.0
+    trace: TraceConfig = dataclasses.field(default_factory=TraceConfig)
+    # ASAP ablations (paper §5.5)
+    interleave: bool = True
+    overlap: bool = True
+    super_kernel: bool = True
+    # ChunkedPrefill
+    chunk: int = 8192
+    # failure injection
+    failure_at: Optional[float] = None
+    failure_duration: float = 5.0
+    failure_group: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    decomposition: Dict[int, Dict[str, float]]  # rid -> component seconds
+    total_requests: int = 0
+
+    @property
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.ttft for r in self.requests if r.ttft is not None])
+
+    @property
+    def mean_ttft(self) -> float:
+        t = self.ttfts
+        return float(t.mean()) if len(t) else float("inf")
+
+    @property
+    def p99_ttft(self) -> float:
+        t = self.ttfts
+        return float(np.percentile(t, 99)) if len(t) else float("inf")
+
+    def completed_fraction(self, total: Optional[int] = None) -> float:
+        return len(self.ttfts) / max(total or self.total_requests, 1)
+
+
+# ---------------------------------------------------------------------------
+# Event engine base
+# ---------------------------------------------------------------------------
+
+
+class _Engine:
+    def __init__(self):
+        self._heap: List[Tuple[float, int, Callable]] = []
+        self._ctr = itertools.count()
+        self.now = 0.0
+
+    def at(self, t: float, fn: Callable):
+        heapq.heappush(self._heap, (t, next(self._ctr), fn))
+
+    def run(self, horizon: float):
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            if t > horizon:
+                break
+            self.now = t
+            fn()
+
+
+# ---------------------------------------------------------------------------
+# ASAP async engine
+# ---------------------------------------------------------------------------
+
+
+class _BatchState:
+    __slots__ = ("batch", "layer", "group", "kernel_time", "t_enqueued",
+                 "t_started", "_phase")
+
+    def __init__(self, batch: Batch):
+        self.batch = batch
+        self.layer = 0
+        self.group: Optional[int] = None
+        self.kernel_time = 0.0
+        self.t_enqueued = 0.0
+        self.t_started: Optional[float] = None
+        self._phase = "wait_attn"
+
+
+class AsapSim(_Engine):
+    def __init__(self, cfg: ModelConfig, sim: SimConfig,
+                 dep: Deployment = Deployment(), hw: Hardware = V5E):
+        super().__init__()
+        self.cfg, self.sim, self.dep = cfg, sim, dep
+        self.cm = CostModel(cfg, hw, dep)
+        self.batcher = LengthAwareBatcher(
+            inflection=self.cm.moe_inflection_tokens(),
+            max_tokens=dep.max_batch_tokens)
+        self.pending: deque[_BatchState] = deque()
+        # group state
+        self.g_active: List[List[_BatchState]] = [[] for _ in range(dep.D)]
+        self.g_busy: List[bool] = [False] * dep.D
+        self.g_alive: List[bool] = [True] * dep.D
+        self.moe_q: deque[_BatchState] = deque()
+        self.moe_busy = False
+        self.done: List[Request] = []
+        self.decomp: Dict[int, Dict[str, float]] = {}
+
+    # --------------------------------------------------------------- intake
+    def start(self):
+        reqs = generate_requests(self.sim.rps, self.sim.duration, self.sim.trace)
+        self.total_requests = len(reqs)
+        for r in reqs:
+            self.at(r.arrival, lambda r=r: self._arrive(r))
+        if self.sim.failure_at is not None:
+            self.at(self.sim.failure_at, self._fail)
+            self.at(self.sim.failure_at + self.sim.failure_duration, self._repair)
+        return self
+
+    def _arrive(self, r: Request):
+        for b in self.batcher.add(r, self.now):
+            self._enqueue(b)
+        # age-based flush check
+        self.at(self.now + self.batcher.max_wait * 1.01, self._poll)
+
+    def _poll(self):
+        for b in self.batcher.poll(self.now):
+            self._enqueue(b)
+
+    def _enqueue(self, b: Batch):
+        st = _BatchState(b)
+        st.t_enqueued = self.now
+        self.pending.append(st)
+        self._assign()
+
+    # ----------------------------------------------------------- scheduling
+    def _capacity(self, g: int) -> int:
+        if not self.g_alive[g]:
+            return 0
+        cap = 2 if self.sim.interleave else 1
+        if any(s.batch.exclusive for s in self.g_active[g]):
+            return 0
+        return cap - len(self.g_active[g])
+
+    def _assign(self):
+        progress = True
+        while self.pending and progress:
+            progress = False
+            st = self.pending[0]
+            need_empty = st.batch.exclusive
+            for g in range(self.dep.D):
+                if need_empty and (self.g_active[g] or not self.g_alive[g]):
+                    continue
+                if not need_empty and self._capacity(g) <= 0:
+                    continue
+                self.pending.popleft()
+                st.group = g
+                if st.t_started is None:
+                    st.t_started = self.now
+                self.g_active[g].append(st)
+                self._try_attn(g)
+                progress = True
+                break
+
+    # ------------------------------------------------------------ attention
+    def _try_attn(self, g: int):
+        if self.g_busy[g] or not self.g_alive[g]:
+            return
+        ready = [s for s in self.g_active[g] if s.layer >= 0 and
+                 getattr(s, "_phase", "wait_attn") == "wait_attn"]
+        if not ready:
+            return
+        st = min(ready, key=lambda s: s.layer)
+        st._phase = "in_attn"
+        # attention-side dispatch send is always serial on the main stream
+        # (triple-stream deployed on MoE devices only, paper §4.3)
+        lat = self.cm.attention_layer_latency(st.batch.seq_lens) \
+            + self.cm.dispatch_send_occupancy(st.batch.total_tokens)
+        st.kernel_time += lat
+        self.g_busy[g] = True
+        self.at(self.now + lat, lambda st=st, g=g: self._attn_done(st, g))
+
+    def _attn_done(self, st: _BatchState, g: int):
+        self.g_busy[g] = False
+        st._phase = "dispatch"
+        self._try_attn(g)
+        self.at(self.now + self.cm.hw.hop_latency,
+                lambda st=st: self._moe_arrive(st))
+
+    # ------------------------------------------------------------------ moe
+    def _moe_arrive(self, st: _BatchState):
+        self.moe_q.append(st)
+        self._try_moe()
+
+    def _try_moe(self):
+        if self.moe_busy or not self.moe_q:
+            return
+        st = self.moe_q.popleft()
+        lat = self.cm.moe_layer_latency(st.batch.total_tokens)
+        if not self.sim.super_kernel:
+            # out-of-order layer id -> kernels cannot be pre-launched (§3.4.2)
+            lat += self.cm.hw.host_dispatch
+        if not self.sim.overlap:
+            # no comm streams: recv-migrate + combine-send run on main stream
+            lat += self.cm.moe_comm_occupancy(st.batch.total_tokens)
+        st.kernel_time += self.cm.moe_layer_latency(st.batch.total_tokens)
+        self.moe_busy = True
+        self.at(self.now + lat, lambda st=st: self._moe_done(st))
+
+    def _moe_done(self, st: _BatchState):
+        self.moe_busy = False
+        self._try_moe()
+        c = self.cm.combine_wire_latency(st.batch.total_tokens)
+        self.at(self.now + c, lambda st=st: self._combined(st))
+
+    def _combined(self, st: _BatchState):
+        st.layer += 1
+        if st.layer >= self.cfg.num_layers:
+            self._complete(st)
+            return
+        st._phase = "wait_attn"
+        if st.group is not None:
+            self._try_attn(st.group)
+
+    def _complete(self, st: _BatchState):
+        g = st.group
+        if g is not None and st in self.g_active[g]:
+            self.g_active[g].remove(st)
+        for r in st.batch.requests:
+            r.first_token_time = self.now
+            self.done.append(r)
+            self.decomp[r.rid] = {
+                "kernel": st.kernel_time,
+                "non_kernel": max((r.ttft or 0.0) - st.kernel_time, 0.0),
+            }
+        self._assign()
+        if g is not None:
+            self._try_attn(g)
+
+    # -------------------------------------------------------------- failure
+    def _fail(self):
+        g = self.sim.failure_group
+        self.g_alive[g] = False
+        victims = self.g_active[g]
+        self.g_active[g] = []
+        for st in victims:  # restart from layer 0 (prefill state lost)
+            st.layer = 0
+            st.group = None
+            st._phase = "wait_attn"
+            self.pending.appendleft(st)
+        self._assign()
+
+    def _repair(self):
+        self.g_alive[self.sim.failure_group] = True
+        self._assign()
+        self._try_attn(self.sim.failure_group)
+
+    # ------------------------------------------------------------------ run
+    def simulate(self) -> SimResult:
+        self.start()
+        self.run(horizon=self.sim.duration * 4 + 60.0)
+        return SimResult(self.done, self.decomp, self.total_requests)
+
+
+# ---------------------------------------------------------------------------
+# Synchronous baselines
+# ---------------------------------------------------------------------------
+
+
+class SyncSim(_Engine):
+    """`default` and `chunked` modes. Attention DP and EP share the chips
+    (e.g. D=8, T=4, EP=32 on 32 chips — DeepSeek-V3 prefill geometry)."""
+
+    def __init__(self, cfg: ModelConfig, sim: SimConfig,
+                 dep: Deployment = Deployment(D=8, T=4, E=32), hw: Hardware = V5E):
+        super().__init__()
+        self.cfg, self.sim, self.dep = cfg, sim, dep
+        self.cm = CostModel(cfg, hw, dep)
+        self.queue: deque[Request] = deque()
+        self.chunk_progress: Dict[int, int] = {}  # rid -> tokens prefilled
+        self.engine_busy = False
+        self.frozen_until = 0.0
+        self.done: List[Request] = []
+        self.decomp: Dict[int, Dict[str, float]] = {}
+
+    def start(self):
+        reqs = generate_requests(self.sim.rps, self.sim.duration, self.sim.trace)
+        self.total_requests = len(reqs)
+        for r in reqs:
+            self.at(r.arrival, lambda r=r: self._arrive(r))
+        if self.sim.failure_at is not None:
+            self.at(self.sim.failure_at, self._fail)
+        return self
+
+    def _arrive(self, r: Request):
+        self.queue.append(r)
+        self._try_iteration()
+
+    def _fail(self):
+        # global barrier: whole engine stalls for the repair window; the
+        # in-flight iteration is lost and re-run (handled by freezing).
+        self.frozen_until = self.now + self.sim.failure_duration
+
+    def _sync_comm_latency(self, tokens: int) -> float:
+        """Blocking all-to-all dispatch+combine over all chips: rendezvous
+        (log-depth handshake) + transfer at derated effective bandwidth
+        (no compute overlap inside a blocking collective)."""
+        hw = self.cm.hw
+        b = 2.0 * self.cm.dispatch_bytes(tokens)  # dispatch + combine
+        rendezvous = 2.0 * hw.p2p_handshake * math.log2(self.dep.total_chips)
+        return rendezvous + b / (self.dep.total_chips * hw.ici_bw
+                                 * hw.sync_bw_derate) + 2 * hw.base_latency
+
+    def _try_iteration(self):
+        if self.engine_busy or not self.queue:
+            return
+        if self.now < self.frozen_until:
+            self.at(self.frozen_until, self._try_iteration)
+            return
+        self.engine_busy = True
+        D = self.dep.D
+        cap = self.dep.max_batch_tokens
+        if self.sim.mode == "chunked":
+            # ChunkedPrefill reduces per-device seq budget to `chunk`/T tokens
+            # (paper §5.1: 8k chunks -> 2k per attention device with T=4).
+            picked, lens, prefixes = self._pick_chunks(D, self.sim.chunk)
+        else:
+            take: List[Request] = list(self.queue)
+            groups, overflow = balanced_partition(take, D, cap)
+            picked = groups
+            kept = set(r.rid for g in groups for r in g)
+            self.queue = deque([r for r in self.queue if r.rid not in kept])
+            lens = [[r.length for r in g] for g in groups]
+            prefixes = [[0] * len(g) for g in groups]
+
+        total_tokens = sum(sum(l) for l in lens)
+        if total_tokens == 0:
+            self.engine_busy = False
+            return
+        attn = [self.cm_group_attention(lens[g], prefixes[g]) for g in range(D)]
+        attn_max = max(attn)
+        moe = self.cm.moe_layer_latency(total_tokens)
+        comm = self._sync_comm_latency(total_tokens)
+        L = self.cfg.num_layers
+        iter_time = L * (attn_max + moe + comm)
+        t_end = self.now + iter_time
+        t_start = self.now
+        self.at(t_end, lambda: self._iteration_done(picked, lens, attn,
+                                                    attn_max, moe, comm,
+                                                    t_start))
+
+    def cm_group_attention(self, lens: List[int], prefixes: List[int]) -> float:
+        """Attention latency of one DP group for one layer (chunk-aware)."""
+        c = self.cfg
+        f = b = 0.0
+        for s, p in zip(lens, prefixes):
+            proj = 2.0 * s * c.d_model * (2 * c.q_dim + 2 * c.kv_dim)
+            core = 4.0 * c.q_dim * s * (p + s / 2.0)
+            f += proj + core
+            b += 2.0 * s * c.d_model * 4
+        b += 2.0 * c.d_model * (2 * c.q_dim + 2 * c.kv_dim)
+        T = self.dep.T
+        return max(f / (T * self.cm.hw.peak_flops * self.cm.hw.flop_efficiency),
+                   b / (T * self.cm.hw.hbm_bw))
+
+    def _pick_chunks(self, D: int, cap: int):
+        """One chunk per queued request per iteration, LPT-balanced."""
+        chunk = self.sim.chunk
+        cands: List[Tuple[Request, int, int]] = []  # (req, start, len)
+        for r in self.queue:
+            startd = self.chunk_progress.get(r.rid, 0)
+            if startd < r.length:
+                cands.append((r, startd, min(chunk, r.length - startd)))
+        groups: List[List[Tuple[Request, int, int]]] = [[] for _ in range(D)]
+        loads = [0] * D
+        for item in sorted(cands, key=lambda x: -x[2]):
+            g = min(range(D), key=lambda i: loads[i])
+            if loads[g] + item[2] > cap and loads[g] > 0:
+                continue
+            groups[g].append(item)
+            loads[g] += item[2]
+        picked = [[it[0] for it in g] for g in groups]
+        lens = [[it[2] for it in g] for g in groups]
+        prefixes = [[it[1] for it in g] for g in groups]
+        self._picked_chunks = groups
+        return picked, lens, prefixes
+
+    def _iteration_done(self, picked, lens, attn, attn_max, moe, comm, t_start):
+        L = self.cfg.num_layers
+        self.engine_busy = False
+        if self.sim.mode == "chunked":
+            for g in self._picked_chunks:
+                for (r, start, clen) in g:
+                    self.chunk_progress[r.rid] = start + clen
+                    if start + clen >= r.length:
+                        self._finish(r, t_start, L, attn, attn_max, moe, comm,
+                                     gidx=None)
+            done_ids = {r.rid for r in self.done}
+            self.queue = deque([r for r in self.queue if r.rid not in done_ids])
+        else:
+            for gi, g in enumerate(picked):
+                for r in g:
+                    self._finish(r, t_start, L, attn, attn_max, moe, comm, gi)
+        self._try_iteration()
+
+    def _finish(self, r: Request, t_start, L, attn, attn_max, moe, comm, gidx):
+        r.first_token_time = self.now
+        self.done.append(r)
+        a = attn[gidx] if gidx is not None else float(np.mean(attn))
+        self.decomp[r.rid] = {
+            "kernel": L * (a + moe + comm),
+            "sync_wait": L * (attn_max - a),
+            "queuing": max(t_start - r.arrival, 0.0),
+        }
+
+    def simulate(self) -> SimResult:
+        self.start()
+        self.run(horizon=self.sim.duration * 4 + 60.0)
+        return SimResult(self.done, self.decomp, self.total_requests)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def run_sim(cfg: ModelConfig, sim: SimConfig,
+            asap_dep: Deployment = Deployment(D=4, T=4, E=16),
+            sync_dep: Deployment = Deployment(D=8, T=4, E=32)) -> SimResult:
+    if sim.mode == "asap":
+        return AsapSim(cfg, sim, asap_dep).simulate()
+    return SyncSim(cfg, sim, sync_dep).simulate()
+
+
+def slo_throughput(cfg: ModelConfig, mode: str, slo: float = 5.0,
+                   duration: float = 60.0,
+                   asap_dep: Deployment = Deployment(D=4, T=4, E=16),
+                   sync_dep: Deployment = Deployment(D=8, T=4, E=32),
+                   refine: float = 0.25, rps_max: float = 64.0,
+                   **kw) -> float:
+    """Max RPS sustained with mean TTFT <= slo and >=99% completion.
+
+    Coarse doubling scan, then bisection refinement to `refine` RPS resolution
+    (the paper's ablation effects are 6–14%, so resolution matters)."""
+
+    def ok(rps: float) -> bool:
+        sim = SimConfig(mode=mode, rps=rps, duration=duration, slo=slo, **kw)
+        res = run_sim(cfg, sim, asap_dep=asap_dep, sync_dep=sync_dep)
+        return res.mean_ttft <= slo and res.completed_fraction() >= 0.99
+
+    lo, hi = 0.0, 0.5
+    while hi <= rps_max and ok(hi):
+        lo, hi = hi, hi * 2
+    if lo == 0.0:
+        return 0.0
+    while hi - lo > refine:
+        mid = (lo + hi) / 2
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo

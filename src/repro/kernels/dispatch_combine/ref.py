@@ -1,0 +1,13 @@
+"""Pure-jnp oracles for dispatch/combine kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dispatch_scatter_ref(token_of, slot, x, rows_out: int):
+    out = jnp.zeros((rows_out, x.shape[1]), x.dtype)
+    return out.at[slot].set(x[token_of], mode="drop")
+
+
+def combine_gather_ref(slot, yb):
+    return yb.at[slot].get(mode="fill", fill_value=0)

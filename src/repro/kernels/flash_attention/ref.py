@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """q, k, v: [BH, S, dh]."""
+    BH, S, dh = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,62 @@
+"""Jitted wrappers + model integration for the MoE Super Kernel.
+
+`make_super_kernel_gmm(stacked_experts, cfg)` returns a drop-in `gmm` for
+`repro.models.lm.lm_forward(..., gmm=...)`: inside the layer scan it receives
+the per-layer expert weights (ignored) and the runtime `layer_id`, and runs the
+three expert projections through the layer-oblivious kernel against the FULL
+stacked weights — the weights become scan constants (resident in HBM), the
+layer id is scan data, and XLA emits ONE kernel for all layers.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.super_gmm.super_gmm import super_gmm
+from repro.models.common import ModelConfig, act_fn
+
+
+def _pick_blocks(C: int, N: int, K: int):
+    def pick(d, pref=128):
+        for b in (pref, 64, 32, 16, 8, 4, 2, 1):
+            if d % b == 0:
+                return b
+        return 1
+    return pick(C), pick(N), pick(K)
+
+
+def super_moe_ffn(layer_id: jax.Array, experts: dict, xb: jax.Array,
+                  cfg: ModelConfig, interpret: bool = True) -> jax.Array:
+    """Gated expert FFN on capacity buffers via three super-GMM calls.
+
+    xb: [E, C, d] -> [E, C, d] (fp32)."""
+    act = act_fn(cfg.act)
+    E, C, d = xb.shape
+    f = experts["w_gate"].shape[-1]
+    bc, bn, bk = _pick_blocks(C, f, d)
+    g = super_gmm(layer_id, experts["w_gate"], xb, block_c=bc, block_n=bn,
+                  block_k=bk, interpret=interpret)
+    u = super_gmm(layer_id, experts["w_up"], xb, block_c=bc, block_n=bn,
+                  block_k=bk, interpret=interpret)
+    h = (act(g) * u).astype(xb.dtype)
+    bc2, bn2, bk2 = _pick_blocks(C, d, f)
+    return super_gmm(layer_id, experts["w_down"], h, block_c=bc2, block_n=bn2,
+                     block_k=bk2, interpret=interpret)
+
+
+def make_super_kernel_gmm(stacked_experts: dict, cfg: ModelConfig,
+                          interpret: bool = True) -> Callable:
+    """Adapter for lm_forward(gmm=...): signature (xb, experts_layer, cfg,
+    layer_id) -> yb. `experts_layer` (the scan-sliced per-layer weights) is
+    intentionally unused — global weight access is the point."""
+
+    def gmm(xb, experts_layer, cfg_inner, layer_id):
+        del experts_layer
+        lid = jnp.asarray(layer_id, jnp.int32).reshape(1)
+        out = super_moe_ffn(lid, stacked_experts, xb, cfg_inner,
+                            interpret=interpret)
+        return out.astype(xb.dtype)
+
+    return gmm

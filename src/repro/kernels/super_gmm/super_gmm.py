@@ -1,0 +1,81 @@
+"""MoE Super Kernel — layer-oblivious grouped (batched-expert) matmul.
+
+The paper's §3.4.2 kernel, adapted to TPU idiom:
+
+  * Global weight access    -> the kernel binds the FULL [L, E, d_in, d_out]
+    stacked expert weights resident in HBM.
+  * Pre-calculated indexing -> the BlockSpec `index_map` is the address array:
+    it converts (layer, expert, tile) to a constant-time HBM block offset.
+  * Dynamic resolution      -> `layer_id` is a SCALAR-PREFETCH operand (SMEM),
+    i.e. a device-side runtime value, never a Python/compile-time constant.
+
+Because the layer id is data, XLA traces ONE kernel for all L layers; a
+`lax.scan` over layers dispatches it ahead of time with zero per-layer host
+work — the TPU equivalent of eliminating the 220 µs/layer CPU dispatch bubble
+(Fig 10/18).
+
+Grid: (E, C/bc, N/bn, K/bk) with the contraction tile innermost so the fp32
+output tile accumulates in VMEM across `bk` steps (sequential minor grid on
+TPU). Block shapes default to MXU-aligned 128 multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(layer_ref, x_ref, w_ref, o_ref):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(x_ref[0], w_ref[0, 0], preferred_element_type=jnp.float32)
+    o_ref[0] += acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "block_n", "block_k",
+                                    "interpret"))
+def super_gmm(layer_id: jax.Array, w: jax.Array, x: jax.Array, *,
+              block_c: int = 128, block_n: int = 128, block_k: int = 128,
+              interpret: bool = True) -> jax.Array:
+    """out[e, c, n] = x[e, c, :] @ w[layer_id, e, :, :].
+
+    layer_id: [1] int32 (device-side scalar)
+    w:        [L, E, K, N] stacked all-layer expert weights
+    x:        [E, C, K] capacity buffers
+    returns   [E, C, N] float32
+    """
+    L, E, K, N = w.shape
+    Ex, C, Kx = x.shape
+    assert Ex == E and Kx == K, (x.shape, w.shape)
+    bc, bn, bk = min(block_c, C), min(block_n, N), min(block_k, K)
+    assert C % bc == 0 and N % bn == 0 and K % bk == 0, \
+        f"dims {(C, N, K)} not divisible by blocks {(bc, bn, bk)}"
+    grid = (E, C // bc, N // bn, K // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bc, bk),
+                             lambda e, ci, ni, ki, layer: (e, ci, ki)),
+                pl.BlockSpec((1, 1, bk, bn),
+                             lambda e, ci, ni, ki, layer: (layer[0], e, ki, ni)),
+            ],
+            out_specs=pl.BlockSpec((1, bc, bn),
+                                   lambda e, ci, ni, ki, layer: (e, ci, ni)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(layer_id, x, w)

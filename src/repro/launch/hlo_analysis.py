@@ -1,0 +1,281 @@
+"""Static cost analysis of post-optimization HLO with loop-trip multipliers.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE regardless of
+trip count (verified empirically — see EXPERIMENTS.md §Methodology), which
+under-counts every scanned layer stack, chunked-attention loop and CE block
+loop by its trip count. This module parses `compiled.as_text()` and computes:
+
+  * dot FLOPs           — 2 · |result| · |contracting dims|, per dot, times the
+                          computation's execution multiplier
+  * collective bytes    — result-shape bytes × op factor × multiplier
+  * memory bytes        — Σ (result + operand bytes) over materializing ops
+                          (ops inside fusion bodies are skipped: fused
+                          intermediates never touch HBM)
+
+Execution multipliers propagate through the call graph: while bodies/conds
+multiply by the trip count recovered from the loop condition's comparison
+constant; fusions/calls/conditionals multiply by 1.
+
+This is an approximation (elementwise FLOPs ignored — our models are
+dot-dominated; conditional branches both counted) but it is *consistent*, which
+is what the §Perf iteration needs: the same analyzer scores baseline and
+optimized HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8,
+               "pred": 1, "c64": 8, "c128": 16, "u4": 1, "s4": 1}
+
+# bytes moved per device relative to result bytes (ring algorithms)
+COLLECTIVE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0,
+                     "reduce-scatter": 1.0, "all-to-all": 1.0,
+                     "collective-permute": 1.0}
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*?)\s*"
+                  r"([a-z][\w\-]*)\((.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*(.*?)\s*{\s*$")
+_CALLED_SINGLE = re.compile(r"(?:condition|body|to_apply|calls|"
+                            r"true_computation|false_computation)="
+                            r"(%[\w.\-]+)")
+_CALLED_LIST = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_CFG = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_OPERANDS = re.compile(r"%[\w.\-]+")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONSTANT = re.compile(r"constant\((-?\d+)\)")
+
+_SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "after-all", "custom-call",
+             "partition-id", "replica-id", "iota", "broadcast"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]  # op name -> result type string
+    returns: str = ""
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                name = m.group(1).lstrip("%")
+                cur = Computation(name, [], {}, returns=m.group(2))
+                if line.strip().startswith("ENTRY"):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF.match(line)
+        if dm:
+            name, type_str, opcode, rest = dm.groups()
+            op = Op(name.lstrip("%"), type_str, opcode, rest)
+            cur.ops.append(op)
+            cur.shapes[op.name] = type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover scan trip count from the loop condition: the bound is the
+    largest integer constant in the cond region (scan lowers to
+    `iter < length`; the compare itself may be wrapped in a fusion)."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = _CONSTANT.search("constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _called(op: Op) -> List[str]:
+    out = []
+    for m in _CALLED_SINGLE.finditer(op.rest):
+        out.append(m.group(1).lstrip("%"))
+    for m in _CALLED_LIST.finditer(op.rest):
+        for name in m.group(1).split(","):
+            name = name.strip().lstrip("%")
+            if name:
+                out.append(name)
+    return out
+
+
+@dataclasses.dataclass
+class HLOCosts:
+    dot_flops: float = 0.0
+    memory_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # populated when analyze(..., breakdown=True): (flops|bytes, descr) tuples
+    top_dots: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    top_memory: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    top_collectives: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+
+
+def analyze(text: str, breakdown: bool = False, top_k: int = 20) -> HLOCosts:
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else None
+    costs = HLOCosts(collective_by_op={k: 0.0 for k in COLLECTIVE_FACTOR},
+                     collective_counts={k: 0.0 for k in COLLECTIVE_FACTOR})
+    if entry is None:
+        return costs
+
+    # 1) propagate execution multipliers through the call graph.
+    # HLO defines callees before callers, so iterating computations in
+    # REVERSE definition order visits every caller before its callees —
+    # a topological pass (the call graph is a DAG).
+    mult: Dict[str, float] = {entry: 1.0}
+    fused_ctx: Dict[str, bool] = {entry: False}
+    order = list(comps)  # definition order
+    for cname in reversed(order):
+        if cname not in mult:
+            continue  # unreachable from entry
+        comp = comps[cname]
+        m = mult[cname]
+        in_fusion = fused_ctx.get(cname, False)
+        for op in comp.ops:
+            callees = _called(op)
+            factor = 1.0
+            if op.opcode == "while":
+                # preferred: XLA's own known_trip_count in backend_config;
+                # fallback: the loop bound constant in the cond region
+                tm = _TRIP_CFG.search(op.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = 1
+                    for cn in callees:
+                        if cn in comps and "pred" in comps[cn].returns:
+                            trip = _trip_count(comps[cn])
+                factor = float(max(trip, 1))
+                costs.trip_counts[op.name] = max(
+                    costs.trip_counts.get(op.name, 0), int(factor))
+            for callee in callees:
+                if callee not in comps:
+                    continue
+                mult[callee] = mult.get(callee, 0.0) + m * factor
+                fused_ctx[callee] = fused_ctx.get(callee, False) or in_fusion \
+                    or (op.opcode == "fusion")
+
+    # 2) accumulate costs
+    dots: List[Tuple[float, str]] = []
+    mems: List[Tuple[float, str]] = []
+    colls: List[Tuple[float, str]] = []
+    for cname in mult:
+        comp = comps[cname]
+        m = mult.get(cname, 1.0)
+        in_fusion = fused_ctx.get(cname, False)
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                out_elems = 1
+                for d in _shape_dims(op.type_str):
+                    out_elems *= d
+                contract = 1
+                cm = _CONTRACT.search(op.rest)
+                operands = [n.lstrip("%") for n in _OPERANDS.findall(
+                    op.rest.split("),")[0] + ")")]
+                if cm and operands:
+                    lhs = operands[0]
+                    lhs_dims = _shape_dims(comp.shapes.get(lhs, ""))
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            contract *= lhs_dims[int(ci)]
+                f = 2.0 * out_elems * contract * m
+                costs.dot_flops += f
+                if breakdown:
+                    lhs_t = comp.shapes.get(operands[0], "?") if operands else "?"
+                    rhs_t = comp.shapes.get(operands[1], "?") \
+                        if len(operands) > 1 else "?"
+                    dots.append((f, f"{cname}/{op.name} x{m:g} "
+                                 f"{lhs_t} @ {rhs_t} -> {op.type_str}"))
+            if op.opcode in COLLECTIVE_FACTOR:
+                b = _shape_bytes(op.type_str) * COLLECTIVE_FACTOR[op.opcode]
+                costs.collective_bytes += b * m
+                costs.collective_by_op[op.opcode] += b * m
+                costs.collective_counts[op.opcode] += m
+                if breakdown:
+                    colls.append((b * m, f"{cname}/{op.name} x{m:g} "
+                                  f"{op.opcode} {op.type_str}"))
+            if not in_fusion and op.opcode not in _SKIP_MEM:
+                rb = _shape_bytes(op.type_str)
+                obs = []
+                head = op.rest.split(")")[0]
+                for nm in _OPERANDS.findall(head):
+                    obs.append(_shape_bytes(comp.shapes.get(nm.lstrip("%"), "")))
+                ob = sum(obs)
+                name_l = op.name.lower()
+                is_dus = (op.opcode == "dynamic-update-slice"
+                          or "dynamic-update-slice" in name_l
+                          or op.opcode == "scatter" or "scatter" in name_l)
+                is_ds = (op.opcode in ("dynamic-slice", "gather")
+                         or (("dynamic-slice" in name_l or "gather" in name_l)
+                             and not is_dus))
+                if is_dus:
+                    # in-place update: the big buffer is aliased — traffic is
+                    # the update slice (read) + its write, not the whole buffer
+                    big = max(obs) if obs else 0
+                    b = 2.0 * max(ob - big, 0)
+                elif is_ds:
+                    # slice/gather read: only the extracted rows move
+                    small_ops = ob - (max(obs) if obs else 0)
+                    b = 2.0 * rb + small_ops
+                else:
+                    b = rb + ob
+                costs.memory_bytes += b * m
+                if breakdown and b > 0:
+                    mems.append((b * m, f"{cname}/{op.name} x{m:g} "
+                                 f"{op.opcode} {op.type_str}"))
+    if breakdown:
+        costs.top_dots = sorted(dots, reverse=True)[:top_k]
+        costs.top_memory = sorted(mems, reverse=True)[:top_k]
+        costs.top_collectives = sorted(colls, reverse=True)[:top_k]
+    return costs

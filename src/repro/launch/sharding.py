@@ -1,0 +1,238 @@
+"""Sharding rules: PartitionSpecs for params, inputs, and decode caches.
+
+Logical mapping (see DESIGN.md §5):
+  * attention heads / FFN hidden / experts / vocab  -> "model"  (TP / EP)
+  * batch                                            -> ("pod",) "data"  (DP)
+  * large-model parameter dims                       -> "data"   (FSDP/ZeRO-3)
+  * decode KV with few kv-heads / batch=1            -> sequence over "model"
+    (+ "data" when batch cannot shard) — flash-decoding split-K layout
+  * "pod" axis: pure DP (gradient all-reduce across pods)
+
+Rules are name-based on parameter-tree paths with trailing-dim specs, so the
+same table covers stacked layer params ([L, ...], [nb, lpg, ...], ...).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# Architectures large enough to need ZeRO-3 parameter sharding over "data".
+FSDP_ARCHS = {"chameleon-34b", "deepseek-coder-33b", "qwen3-moe-235b-a22b",
+              "dbrx-132b", "deepseek_v32", "rwkv6-7b"}
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _trailing_spec(names: Sequence[str], ndim: int, fsdp: Optional[str]):
+    """Spec for the TRAILING dims by leaf name; leading stack dims -> None."""
+    name = names[-1]
+    parents = set(names)
+    M, F = "model", fsdp
+
+    def pad(spec):
+        spec = tuple(spec)
+        assert len(spec) <= ndim, (names, ndim, spec)
+        return P(*((None,) * (ndim - len(spec)) + spec))
+
+    # ---- embeddings / heads
+    if name == "embed":
+        return pad((M, None))
+    if name == "lm_head":
+        return pad((None, M))
+    # ---- MoE experts (leading per-layer dims handled by pad)
+    if "experts" in parents:
+        if name in ("w_gate", "w_up"):
+            return pad((M, F, None))
+        if name == "w_down":
+            return pad((M, None, F))
+    if name == "router":
+        return pad((None, None))
+    # ---- channel-mix (RWKV) before generic wk/wv/wr
+    if "channel_mix" in parents:
+        if name == "wk":
+            return pad((F, M))
+        if name == "wv":
+            return pad((M, F))
+        if name == "wr":
+            return pad((F, None))
+        return pad((None,))
+    # ---- attention / time-mix projections
+    if name in ("wq", "wk", "wv", "wg", "wr"):
+        return pad((F, M))
+    if name == "wo":
+        return pad((M, F))
+    if name in ("bq", "bk", "bv"):
+        return pad((M,))
+    # ---- dense FFN (incl. shared experts, shared attention block)
+    if name in ("w_gate", "w_up"):
+        return pad((F, M))
+    if name == "w_down":
+        return pad((M, F))
+    # ---- mamba
+    if name == "in_proj":
+        return pad((F, M))
+    if name == "out_proj":
+        return pad((M, F))
+    if name == "conv_w":
+        return pad((None, M))
+    if name in ("conv_b", "out_norm"):
+        return pad((M,))
+    # ---- rwkv lora
+    if name == "w_lora_a":
+        return pad((F, None))
+    if name == "w_lora_b":
+        return pad((None, M))
+    # ---- everything else (norms, biases, mus, decay params): replicate
+    return P(*((None,) * ndim))
+
+
+def _axis_size(mesh, ax) -> int:
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _validate_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes whose size does not divide the dim (jit in_shardings
+    requires exact divisibility; e.g. seamless's 256206 vocab vs model=16)."""
+    out = []
+    for i, ax in enumerate(tuple(spec)):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        out.append(ax if shape[i] % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+def param_specs(params, cfg: ModelConfig, mesh) -> Any:
+    fsdp = "data" if (cfg.name in FSDP_ARCHS and "data" in mesh.axis_names
+                      and not cfg.no_fsdp) else None
+
+    def spec(path, leaf):
+        s = _trailing_spec(_path_names(path), np.ndim(leaf), fsdp)
+        return _validate_spec(s, np.shape(leaf), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _batch_axes(mesh)]))
+
+
+def batch_specs(batch: dict, mesh) -> dict:
+    """Specs for a batch dict (tokens/labels/embeddings/token)."""
+    ba = _batch_axes(mesh)
+    dp = _dp_size(mesh)
+
+    def spec(leaf):
+        b = leaf.shape[0] if np.ndim(leaf) else 1
+        lead = ba if b % dp == 0 else None
+        return _validate_spec(P(lead, *((None,) * (np.ndim(leaf) - 1))),
+                              np.shape(leaf), mesh)
+
+    return {k: spec(v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def _kv_spec(ndim: int, batch: int, kvh: int, mesh) -> P:
+    """KVCache k/v: [*lead, B, S, kvh, hd]."""
+    ba = _batch_axes(mesh)
+    dp = _dp_size(mesh)
+    model_n = mesh.shape["model"]
+    lead = (None,) * (ndim - 4)
+    if batch % dp == 0 and batch >= dp:
+        b_ax: Any = ba
+        seq_ax = "model" if kvh < model_n else None
+        head_ax = "model" if kvh >= model_n else None
+    else:
+        # batch too small (long-context decode): sequence over everything
+        b_ax = None
+        seq_ax = ba + ("model",) if kvh < model_n else ba
+        head_ax = "model" if kvh >= model_n else None
+    return P(*lead, b_ax, seq_ax, head_ax, None)
+
+
+def cache_specs(caches, cfg: ModelConfig, batch: int, mesh) -> Any:
+    """Spec tree matching init_caches / encdec caches output.
+
+    Walks the typed cache nodes (KVCache / MambaState / RWKVState are
+    NamedTuples whose tree paths don't carry field names)."""
+    from repro.models.attention import KVCache
+    from repro.models.mamba2 import MambaState
+    from repro.models.rwkv6 import RWKVState
+
+    ba = _batch_axes(mesh)
+    dp = _dp_size(mesh)
+    model_n = mesh.shape["model"]
+    b_ok = batch % dp == 0 and batch >= dp
+    b_ax: Any = ba if b_ok else None
+
+    def state_spec(shape, nd):
+        """[*, B, H, ...]: batch over data if possible, heads over model."""
+        lead = (None,) * (nd - 4)
+        h_ax = "model" if shape[-3] % model_n == 0 else None
+        return P(*lead, b_ax, h_ax, None, None)
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            nd = np.ndim(node.k)
+            kv = _kv_spec(nd, batch, np.shape(node.k)[-2], mesh)
+            return KVCache(kv, kv, P(*((None,) * np.ndim(node.length))))
+        if isinstance(node, MambaState):
+            nd_c = np.ndim(node.conv)
+            c_ax = "model" if np.shape(node.conv)[-1] % model_n == 0 else None
+            return MambaState(
+                state_spec(np.shape(node.ssm), np.ndim(node.ssm)),
+                P(*((None,) * (nd_c - 3)), b_ax, None, c_ax))
+        if isinstance(node, RWKVState):
+            sh = P(*((None,) * (np.ndim(node.shift_tm) - 2)), b_ax, None)
+            return RWKVState(
+                state_spec(np.shape(node.wkv), np.ndim(node.wkv)), sh, sh)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        # plain array leaf (e.g. enc-dec memory [B, S_enc, d])
+        nd = np.ndim(node)
+        if nd >= 2:
+            return P(b_ax, *((None,) * (nd - 1)))
+        return P(*((None,) * nd))
+
+    specs = walk(caches)
+    return jax.tree.map(
+        lambda leaf, s: _validate_spec(s, np.shape(leaf), mesh), caches, specs)
+
+
+def dispatch_groups_for(mesh, tokens: int) -> int:
+    """MoE dispatch groups = DP size when it divides the token count."""
+    dp = _dp_size(mesh)
+    g = math.gcd(dp, tokens)
+    return g if g > 1 else 1

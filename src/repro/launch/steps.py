@@ -1,0 +1,126 @@
+"""Step builders: train_step / prefill_step / decode_step (+ shard_map DP
+variant with compressed pod-gradient all-reduce).
+
+These are the functions the dry-run lowers and the launchers execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import ModelAPI
+from repro.optim.adamw import AdamW, OptState, global_norm
+from repro.optim.compress import compressed_psum
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(api: ModelAPI, key, optimizer: AdamW) -> TrainState:
+    params = api.init(key)
+    return TrainState(params, optimizer.init(params))
+
+
+def build_train_step(api: ModelAPI, optimizer: AdamW,
+                     accum_steps: int = 1) -> Callable:
+    """accum_steps > 1: gradient accumulation over microbatches (scan) — the
+    deployability fix for cells whose monolithic global batch exceeds HBM
+    (activations and MoE capacity buffers shrink by the accumulation factor;
+    see EXPERIMENTS.md cell 3)."""
+
+    def train_step(state: TrainState, batch):
+        def loss_fn(p, b):
+            return api.loss(p, b)
+
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def mb(carry, mbatch):
+                (l_aux, g_acc) = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (l_aux + loss, g_acc), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), metrics_stack = jax.lax.scan(
+                mb, (jnp.zeros(()), zeros), micro)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, 0), metrics_stack)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = global_norm(grads)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def build_prefill_step(api: ModelAPI) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(api: ModelAPI) -> Callable:
+    def decode_step(params, caches, batch):
+        return api.decode(params, caches, batch)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# shard_map DP step with int8-compressed gradient all-reduce (pod axis demo)
+# ---------------------------------------------------------------------------
+
+
+def build_compressed_dp_step(api: ModelAPI, optimizer: AdamW, mesh,
+                             axis: str = "data") -> Callable:
+    """Explicit-collective data-parallel train step: per-shard backward, int8 +
+    error-feedback all-reduce of gradients over `axis` (the slow cross-pod
+    link at production scale), replicated update.
+
+    State: (TrainState replicated, residuals stacked [n_dev, ...] and sharded
+    over `axis` — each shard owns its error-feedback residual)."""
+
+    def per_shard(state: TrainState, residuals, batch):
+        def loss_fn(p):
+            return api.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(residuals)  # per-shard: leading dim 1
+        reduced, new_res = [], []
+        for g, r in zip(flat_g, flat_r):
+            m, nr = compressed_psum(g, r[0], axis)
+            reduced.append(m.astype(g.dtype))
+            new_res.append(nr[None])
+        grads = jax.tree.unflatten(treedef, reduced)
+        residuals = jax.tree.unflatten(treedef, new_res)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params)
+        loss = jax.lax.pmean(loss, axis)
+        return TrainState(new_params, new_opt), residuals, loss
+
+    from jax.experimental.shard_map import shard_map
+    rep = P()
+    return shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(rep, P(axis), P(axis)),
+        out_specs=(rep, P(axis), rep),
+        check_rep=False)

@@ -1,0 +1,1 @@
+from repro.models.common import ModelConfig  # noqa: F401

@@ -1,0 +1,140 @@
+"""Unified per-family model API used by the launcher, dry-run, and tests.
+
+    api = build_api(cfg)
+    params = api.init(key)
+    loss, metrics = api.loss(params, batch)          # batch: dict
+    logits, caches = api.prefill(params, batch)
+    logits, caches = api.decode(params, caches, batch)
+    caches = api.make_caches(batch_size, cache_len, prefilled)
+    batch = api.make_batch(key, seq_len, batch_size, kind)
+
+Batch dicts:
+  decoder-only: {"tokens": [B,S], "labels": [B,S]} or {"embeddings": [B,S,d], ...}
+  encdec:       {"enc_embeddings": [B,S_enc,d], "dec_tokens": [B,S_dec],
+                 "labels": [B,S_dec]}
+  decode:       {"token": [B]} (+ encdec carries memory inside caches)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import frontends
+from repro.models.common import ModelConfig
+from repro.models.lm import (init_caches, init_lm_params, lm_decode_step,
+                             lm_forward, lm_loss, lm_prefill)
+
+
+class ModelAPI(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Callable
+    decode: Callable
+    make_caches: Callable
+    make_batch: Callable
+
+
+def _uses_embeddings(cfg: ModelConfig) -> bool:
+    # audio frontend feeds embeddings; vision (chameleon) uses in-vocab VQ tokens.
+    return cfg.frontend == "audio" or cfg.family == "encdec"
+
+
+def build_api(cfg: ModelConfig, **fwd_kw) -> ModelAPI:
+    if cfg.family == "encdec":
+        return _build_encdec_api(cfg, **fwd_kw)
+    return _build_lm_api(cfg, **fwd_kw)
+
+
+def _build_lm_api(cfg: ModelConfig, **fwd_kw) -> ModelAPI:
+    def init(key):
+        return init_lm_params(key, cfg)
+
+    def loss(params, batch):
+        return lm_loss(params, cfg, tokens=batch.get("tokens"),
+                       labels=batch["labels"],
+                       embeddings=batch.get("embeddings"), **fwd_kw)
+
+    def forward(params, batch):
+        return lm_forward(params, cfg, tokens=batch.get("tokens"),
+                          embeddings=batch.get("embeddings"))
+
+    def prefill(params, batch):
+        return lm_prefill(params, cfg, tokens=batch.get("tokens"),
+                          embeddings=batch.get("embeddings"),
+                          max_len=batch.get("max_len"))
+
+    def decode(params, caches, batch):
+        return lm_decode_step(params, cfg, caches, batch["token"])
+
+    def make_caches(batch_size, cache_len, prefilled=0):
+        return init_caches(cfg, batch_size, cache_len, prefilled)
+
+    def make_batch(key, seq_len, batch_size, kind="train"):
+        k1, k2 = jax.random.split(key)
+        if kind == "decode":
+            return {"token": jax.random.randint(k1, (batch_size,), 0,
+                                                cfg.vocab_size)}
+        batch: dict[str, Any] = {}
+        if cfg.frontend == "audio":
+            batch["embeddings"] = frontends.synthetic_embeddings(
+                k1, cfg, batch_size, seq_len)
+        else:
+            batch["tokens"] = jax.random.randint(k1, (batch_size, seq_len), 0,
+                                                 cfg.vocab_size)
+        if kind == "train":
+            batch["labels"] = jax.random.randint(k2, (batch_size, seq_len), 0,
+                                                 cfg.vocab_size)
+        return batch
+
+    return ModelAPI(cfg, init, loss, forward, prefill, decode, make_caches,
+                    make_batch)
+
+
+def _build_encdec_api(cfg: ModelConfig, **fwd_kw) -> ModelAPI:
+    def init(key):
+        return ED.init_encdec_params(key, cfg)
+
+    def loss(params, batch):
+        return ED.encdec_loss(params, cfg, batch["enc_embeddings"],
+                              batch["dec_tokens"], batch["labels"])
+
+    def forward(params, batch):
+        return ED.encdec_forward(params, batch["enc_embeddings"],
+                                 batch["dec_tokens"], cfg), None
+
+    def prefill(params, batch):
+        return ED.encdec_prefill(params, batch["enc_embeddings"],
+                                 batch["dec_tokens"], cfg,
+                                 max_len=batch.get("max_len"))
+
+    def decode(params, caches, batch):
+        return ED.encdec_decode_step(params, cfg, caches, batch["token"])
+
+    def make_caches(batch_size, cache_len, prefilled=0, enc_len=None):
+        return ED.init_encdec_caches(cfg, batch_size, cache_len,
+                                     enc_len or cache_len, prefilled)
+
+    def make_batch(key, seq_len, batch_size, kind="train"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        if kind == "decode":
+            return {"token": jax.random.randint(k1, (batch_size,), 0,
+                                                cfg.vocab_size)}
+        dec_len = ED.decoder_len(seq_len)
+        batch = {
+            "enc_embeddings": frontends.synthetic_embeddings(
+                k1, cfg, batch_size, seq_len),
+            "dec_tokens": jax.random.randint(k2, (batch_size, dec_len), 0,
+                                             cfg.vocab_size),
+        }
+        if kind == "train":
+            batch["labels"] = jax.random.randint(k3, (batch_size, dec_len), 0,
+                                                 cfg.vocab_size)
+        return batch
+
+    return ModelAPI(cfg, init, loss, forward, prefill, decode, make_caches,
+                    make_batch)

@@ -1,0 +1,394 @@
+"""GQA attention: chunked (flash-style) prefill/train path + cached decode path.
+
+The prefill path scans over query chunks with an online-softmax accumulator so the
+[S, S] score matrix is never materialized — required to lower 32k prefill at
+production batch sizes, and the block structure mirrors the Pallas flash kernel in
+`repro.kernels.flash_attention` (which is the TPU execution path; this jnp version
+is the oracle and the CPU/dry-run path).
+
+Supports: GQA (num_kv_heads < num_heads), QKV bias (qwen2), sliding windows
+(gemma3 local layers), logit softcap, QK norm, cross attention (enc-dec).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_rope, dense_init, rms_norm, split_keys
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S_max, kv_heads, head_dim]
+    v: jax.Array  # [B, S_max, kv_heads, head_dim]
+    # Ring-buffer write index == number of tokens written so far (mod window for
+    # windowed layers).
+    length: jax.Array  # scalar int32
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention_params(key, cfg: ModelConfig, cross: bool = False):
+    kq, kk, kv, ko, kb = split_keys(key, 5)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(kq, d, cfg.q_dim, cfg.dtype),
+        "wk": dense_init(kk, d, cfg.kv_dim, cfg.dtype),
+        "wv": dense_init(kv, d, cfg.kv_dim, cfg.dtype),
+        "wo": dense_init(ko, cfg.q_dim, d, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), cfg.dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), cfg.dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), cfg.dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), cfg.dtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), cfg.dtype)
+    return p
+
+
+def _project_qkv(p, x, x_kv, cfg: ModelConfig, positions, kv_positions):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x_kv @ p["wk"]
+    v = x_kv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, x_kv.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, x_kv.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    if kv_positions is not None:
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """[B, S, kv_heads, hd] -> [B, S, num_heads, hd] by group replication."""
+    B, S, kvh, hd = k.shape
+    if kvh == num_heads:
+        return k
+    reps = num_heads // kvh
+    return jnp.repeat(k, reps, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention (self, causal, optional window)
+# ---------------------------------------------------------------------------
+
+
+def _attend_block(q, k, v, mask, softcap):
+    """q [B,Cq,H,hd], k/v [B,Ck,H,hd], mask [Cq,Ck] bool -> (out, max, sumexp)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # [B,H,Cq]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def chunked_causal_attention(q, k, v, cfg: ModelConfig, window: Optional[int],
+                             chunk: Optional[int] = None) -> jax.Array:
+    """Flash-style online-softmax attention.
+
+    q,k,v: [B, S, H(q|kv), hd] (kv already in kv_heads; expanded here).
+    Scans over query chunks; inside each query chunk, scans over key chunks up to
+    the causal frontier using an online softmax accumulator. Only [Cq, Ck] score
+    tiles are live — the memory knob that makes 32k prefill lowerable.
+    """
+    from repro.models import pshard
+    B, S, H, hd = q.shape
+    if cfg.gqa_grouped and q.shape[2] != k.shape[2]:
+        return _grouped_chunked_attention(q, k, v, cfg, window, chunk)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if cfg.attn_dp_constraint:
+        q = pshard.constrain(q, "batch", None, "heads", None)
+        k = pshard.constrain(k, "batch", None, "heads", None)
+        v = pshard.constrain(v, "batch", None, "heads", None)
+    C = min(chunk or cfg.attn_chunk, S)
+    if S % C != 0:  # pad to a chunk multiple (masked out)
+        pad = C - S % C
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = chunked_causal_attention(q, k, v, cfg, window, C)
+        return out[:, :S]
+    nq = S // C
+    kc = k.reshape(B, nq, C, H, hd)
+    vc = v.reshape(B, nq, C, H, hd)
+    qpos = jnp.arange(C)
+    kpos = jnp.arange(C)
+
+    def make_kv_block(qi):
+        def kv_block(acc, ki):
+            o_acc, m_acc, l_acc = acc
+            kb = kc[:, ki]
+            vb = vc[:, ki]
+            abs_q = qi * C + qpos[:, None]
+            abs_k = ki * C + kpos[None, :]
+            mask = abs_k <= abs_q
+            if window is not None:
+                mask &= abs_k > abs_q - window
+            o, m, l = _attend_block(qb_ref[0], kb, vb, mask, cfg.logit_softcap)
+            m_new = jnp.maximum(m_acc, m)
+            corr_old = jnp.exp(m_acc - m_new)
+            corr_new = jnp.exp(m - m_new)
+            o_acc = o_acc * corr_old[..., None].transpose(0, 2, 1, 3) \
+                + o * corr_new[..., None].transpose(0, 2, 1, 3)
+            l_acc = l_acc * corr_old + l * corr_new
+            return (o_acc, m_new, l_acc), None
+        return kv_block
+
+    qb_ref = [None]
+
+    def q_block_body(qi, ks):
+        """Online softmax over the kv blocks `ks` for query block `qi`."""
+        qb_ref[0] = jax.lax.dynamic_slice_in_dim(q, qi * C, C, axis=1)
+        o0 = jnp.zeros((B, C, H, hd), jnp.float32)
+        m0 = jnp.full((B, H, C), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, C), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(make_kv_block(qi), (o0, m0, l0), ks)
+        l = jnp.maximum(l, 1e-30)
+        return (o / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+    if cfg.causal_block_skip:
+        # python-unrolled q loop: each q block only visits kv blocks inside
+        # the causal (and window) frontier — ~2x less attention work
+        outs = []
+        for qi in range(nq):
+            lo = 0
+            if window is not None:
+                lo = max(0, (qi * C - window) // C)
+            body = q_block_body
+            if cfg.inner_remat:
+                body = jax.checkpoint(body, static_argnums=())
+            outs.append(body(qi, jnp.arange(lo, qi + 1)))
+        out = jnp.concatenate(outs, axis=1)
+        return out
+
+    def q_block(carry, qi):
+        # dense scan over all kv blocks (masked blocks contribute 0)
+        return carry, q_block_body(qi, jnp.arange(nq))
+
+    if cfg.inner_remat:
+        # flash-style backward: recompute score tiles instead of storing the
+        # per-(q,k)-block online-softmax residuals
+        q_block = jax.checkpoint(q_block)
+    _, outs = jax.lax.scan(q_block, (), jnp.arange(nq))
+    # outs: [nq, B, C, H, hd] -> [B, S, H, hd]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def _grouped_chunked_attention(q, k, v, cfg: ModelConfig,
+                               window: Optional[int],
+                               chunk: Optional[int] = None) -> jax.Array:
+    """GQA without materializing head-expanded k/v: scores are computed per
+    (kv_head, group) via einsum broadcasting. Same math as
+    chunked_causal_attention (tested)."""
+    from repro.models import pshard
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    C = min(chunk or cfg.attn_chunk, S)
+    if S % C != 0:
+        pad = C - S % C
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return _grouped_chunked_attention(q, k, v, cfg, window, C)[:, :S]
+    if cfg.attn_dp_constraint:
+        q = pshard.constrain(q, "batch", None, "heads", None)
+        k = pshard.constrain(k, "batch", None, None, None)
+        v = pshard.constrain(v, "batch", None, None, None)
+    nq = S // C
+    q5 = q.reshape(B, S, KVH, G, hd)
+    kc = k.reshape(B, nq, C, KVH, hd)
+    vc = v.reshape(B, nq, C, KVH, hd)
+    scale = hd ** -0.5
+    qpos = jnp.arange(C)
+    kpos = jnp.arange(C)
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q5, qi * C, C, axis=1)
+
+        def kv_block(acc, ki):
+            o_acc, m_acc, l_acc = acc  # [B,C,KVH,G,hd], [B,KVH,G,C], same
+            kb = kc[:, ki]
+            vb = vc[:, ki]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if cfg.logit_softcap is not None:
+                s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+            abs_q = qi * C + qpos[:, None]
+            abs_k = ki * C + kpos[None, :]
+            mask = abs_k <= abs_q
+            if window is not None:
+                mask &= abs_k > abs_q - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m = jnp.max(s, axis=-1)  # [B,KVH,G,C]
+            p = jnp.exp(s - m[..., None])
+            l = jnp.sum(p, axis=-1)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+                           preferred_element_type=jnp.float32)
+            m_new = jnp.maximum(m_acc, m)
+            c_old = jnp.exp(m_acc - m_new)
+            c_new = jnp.exp(m - m_new)
+            o_acc = o_acc * c_old.transpose(0, 3, 1, 2)[..., None] \
+                + o * c_new.transpose(0, 3, 1, 2)[..., None]
+            l_acc = l_acc * c_old + l * c_new
+            return (o_acc, m_new, l_acc), None
+
+        o0 = jnp.zeros((B, C, KVH, G, hd), jnp.float32)
+        m0 = jnp.full((B, KVH, G, C), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, C), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_block, (o0, m0, l0), jnp.arange(nq))
+        l = jnp.maximum(l, 1e-30)
+        o = o / l.transpose(0, 3, 1, 2)[..., None]
+        return carry, o.astype(q.dtype)
+
+    if cfg.inner_remat:
+        q_block = jax.checkpoint(q_block)
+    _, outs = jax.lax.scan(q_block, (), jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+
+
+def dense_causal_attention(q, k, v, cfg: ModelConfig, window: Optional[int]) -> jax.Array:
+    """Reference O(S^2)-memory attention (small seqs / oracle)."""
+    B, S, H, hd = q.shape
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)
+    if cfg.logit_softcap is not None:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public block-level entry points
+# ---------------------------------------------------------------------------
+
+
+def attention_forward(p, x, cfg: ModelConfig, *, window: Optional[int] = None,
+                      positions: Optional[jax.Array] = None,
+                      use_dense: bool = False) -> jax.Array:
+    """Causal self-attention over full sequence. x: [B, S, d]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, x, cfg, positions, positions)
+    if use_dense or S <= cfg.attn_chunk:
+        o = dense_causal_attention(q, k, v, cfg, window)
+    else:
+        o = chunked_causal_attention(q, k, v, cfg, window)
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def cross_attention_forward(p, x, memory, cfg: ModelConfig) -> jax.Array:
+    """Cross attention (decoder->encoder). No RoPE on cross path, no mask."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, memory, cfg, None, None)
+    k = _expand_kv(k, cfg.num_heads)
+    v = _expand_kv(v, cfg.num_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * (cfg.head_dim ** -0.5)
+    o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1).astype(v.dtype), v)
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def attention_prefill(p, x, cfg: ModelConfig, *, window: Optional[int] = None,
+                      max_len: Optional[int] = None,
+                      use_dense: bool = False) -> tuple[jax.Array, KVCache]:
+    """Full-sequence causal attention that also returns the KV cache for decode.
+
+    Windowed layers keep a ring buffer of the last `window` tokens (keys stored
+    post-RoPE, so ring order is irrelevant); full layers keep all S (padded to
+    `max_len` if given).
+    """
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, x, cfg, positions, positions)
+    if use_dense or S <= cfg.attn_chunk:
+        o = dense_causal_attention(q, k, v, cfg, window)
+    else:
+        o = chunked_causal_attention(q, k, v, cfg, window)
+    if window is not None:
+        W = window
+        if S >= W:
+            slots = jnp.arange(S - W, S) % W
+            ck = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - W:])
+            cv = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - W:])
+        else:
+            ck = jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+            cv = jnp.pad(v, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+    else:
+        size = max_len or S
+        ck = jnp.pad(k, ((0, 0), (0, size - S), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, size - S), (0, 0), (0, 0)))
+    cache = KVCache(ck, cv, jnp.asarray(S, jnp.int32))
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"], cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: Optional[int] = None) -> KVCache:
+    size = min(max_len, window) if window else max_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def attention_decode(p, x, cache: KVCache, cfg: ModelConfig, *,
+                     window: Optional[int] = None) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x: [B, 1, d]; cache holds `cache.length` prior tokens.
+
+    Windowed layers use a ring buffer of size `window`; full layers append.
+    """
+    B = x.shape[0]
+    pos = jnp.broadcast_to(cache.length, (B, 1))
+    q, k, v = _project_qkv(p, x, x, cfg, pos, pos)
+    size = cache.k.shape[1]
+    if window is not None:
+        slot = cache.length % size  # ring buffer
+    else:
+        slot = jnp.minimum(cache.length, size - 1)  # append
+    ck = cache.k.at[:, slot].set(k[:, 0])
+    cv = cache.v.at[:, slot].set(v[:, 0])
+    new_cache = KVCache(ck, cv, cache.length + 1)
+
+    kk = _expand_kv(ck, cfg.num_heads)
+    vv = _expand_kv(cv, cfg.num_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32)
+    s = s * (cfg.head_dim ** -0.5)
+    if cfg.logit_softcap is not None:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    # valid slots: ring buffer -> all written slots valid; append -> < length+1
+    idx = jnp.arange(size)
+    valid = idx <= jnp.minimum(cache.length, size - 1) if window is None \
+        else idx < jnp.minimum(cache.length + 1, size)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1).astype(vv.dtype), vv)
+    return o.reshape(B, 1, cfg.q_dim) @ p["wo"], new_cache

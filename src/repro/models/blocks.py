@@ -1,0 +1,278 @@
+"""Transformer/SSM block definitions assembled from attention/moe/mamba2/rwkv6.
+
+Every block is `block_forward(params, h, cfg, **ctx) -> h` with params stored
+*stacked* on a leading layer axis by the LM core (lm.py) and consumed via
+`lax.scan`. `layer_id` is threaded through the scan as data — this is what lets
+the MoE stage run through the layer-oblivious Super Kernel (the kernel receives
+layer_id as a device-side scalar, never as a Python constant).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attention_decode, attention_forward,
+                                    cross_attention_forward,
+                                    init_attention_params, init_kv_cache)
+from repro.models.common import (ModelConfig, act_fn, apply_norm, dense_init,
+                                 make_norm_params, split_keys)
+from repro.models.mamba2 import init_mamba_params, mamba_decode, mamba_forward
+from repro.models.moe import init_moe_params, moe_forward
+from repro.models.rwkv6 import (channel_mix_forward, init_rwkv_params,
+                                time_mix_forward)
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn_params(key, cfg: ModelConfig):
+    k1, k2, k3 = split_keys(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {"w_gate": dense_init(k1, d, f, cfg.dtype),
+            "w_up": dense_init(k2, d, f, cfg.dtype),
+            "w_down": dense_init(k3, f, d, cfg.dtype)}
+
+
+def ffn_forward(p, x, cfg: ModelConfig):
+    act = act_fn(cfg.act)
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Decoder blocks (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_block_params(key, cfg: ModelConfig, *, moe: bool = False,
+                              cross: bool = False):
+    ka, kf, kc = split_keys(key, 3)
+    p = {
+        "ln_attn": make_norm_params(cfg),
+        "attn": init_attention_params(ka, cfg),
+        "ln_ffn": make_norm_params(cfg),
+        "ffn": init_moe_params(kf, cfg) if moe else init_ffn_params(kf, cfg),
+    }
+    if cross:
+        p["ln_cross"] = make_norm_params(cfg)
+        p["cross"] = init_attention_params(kc, cfg, cross=True)
+    return p
+
+
+def decoder_block_forward(p, h, cfg: ModelConfig, *, window: Optional[int] = None,
+                          moe: bool = False, moe_mode: str = "capacity",
+                          gmm: Optional[Callable] = None,
+                          layer_id: Optional[jax.Array] = None,
+                          memory: Optional[jax.Array] = None):
+    """h: [B, S, d]. Returns (h, moe_aux or None)."""
+    B, S, d = h.shape
+    h = h + attention_forward(p["attn"], apply_norm(h, p["ln_attn"], cfg), cfg,
+                              window=window)
+    if memory is not None:
+        h = h + cross_attention_forward(p["cross"],
+                                        apply_norm(h, p["ln_cross"], cfg),
+                                        memory, cfg)
+    x = apply_norm(h, p["ln_ffn"], cfg)
+    if moe:
+        gmm_l = (lambda xb, ex, c: gmm(xb, ex, c, layer_id)) if gmm else None
+        y, aux = moe_forward(p["ffn"], x.reshape(B * S, d), cfg, mode=moe_mode,
+                             gmm=gmm_l)
+        return h + y.reshape(B, S, d), aux
+    return h + ffn_forward(p["ffn"], x, cfg), None
+
+
+def decoder_block_prefill(p, h, cfg: ModelConfig, *, window: Optional[int] = None,
+                          moe: bool = False, max_len: Optional[int] = None,
+                          memory: Optional[jax.Array] = None):
+    """Full-sequence forward that also emits the layer's KV cache."""
+    from repro.models.attention import attention_prefill
+    B, S, d = h.shape
+    a, cache = attention_prefill(p["attn"], apply_norm(h, p["ln_attn"], cfg), cfg,
+                                 window=window, max_len=max_len)
+    h = h + a
+    if memory is not None:
+        h = h + cross_attention_forward(p["cross"],
+                                        apply_norm(h, p["ln_cross"], cfg),
+                                        memory, cfg)
+    x = apply_norm(h, p["ln_ffn"], cfg)
+    if moe:
+        y, _ = moe_forward(p["ffn"], x.reshape(B * S, d), cfg, mode="capacity")
+        return h + y.reshape(B, S, d), cache
+    return h + ffn_forward(p["ffn"], x, cfg), cache
+
+
+def decoder_block_decode(p, h, cache, cfg: ModelConfig, *,
+                         window: Optional[int] = None, moe: bool = False,
+                         memory: Optional[jax.Array] = None):
+    """One-token decode. h: [B, 1, d]; cache: KVCache."""
+    B = h.shape[0]
+    a, cache = attention_decode(p["attn"], apply_norm(h, p["ln_attn"], cfg), cache,
+                                cfg, window=window)
+    h = h + a
+    if memory is not None:
+        h = h + cross_attention_forward(p["cross"],
+                                        apply_norm(h, p["ln_cross"], cfg),
+                                        memory, cfg)
+    x = apply_norm(h, p["ln_ffn"], cfg)
+    if moe:
+        y, _ = moe_forward(p["ffn"], x.reshape(B, -1), cfg, mode="capacity")
+        return h + y.reshape(B, 1, -1), cache
+    return h + ffn_forward(p["ffn"], x, cfg), cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder block (bidirectional self-attention)
+# ---------------------------------------------------------------------------
+
+
+def init_encoder_block_params(key, cfg: ModelConfig):
+    return init_decoder_block_params(key, cfg)
+
+
+def encoder_block_forward(p, h, cfg: ModelConfig):
+    """Bidirectional attention: implemented as dense attention without mask."""
+    from repro.models.attention import _expand_kv, _project_qkv  # local reuse
+    B, S, d = h.shape
+    x = apply_norm(h, p["ln_attn"], cfg)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p["attn"], x, x, cfg, pos, pos)
+    k = _expand_kv(k, cfg.num_heads)
+    v = _expand_kv(v, cfg.num_heads)
+    # chunked over queries to bound memory at 32k
+    C = min(cfg.attn_chunk, S)
+    if S % C == 0 and S > C:
+        def qblk(_, qi):
+            qb = jax.lax.dynamic_slice_in_dim(q, qi * C, C, axis=1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, k,
+                           preferred_element_type=jnp.float32)
+            s = s * (cfg.head_dim ** -0.5)
+            o = jnp.einsum("bhqk,bkhd->bqhd",
+                           jax.nn.softmax(s, -1).astype(v.dtype), v)
+            return _, o
+
+        _, outs = jax.lax.scan(qblk, None, jnp.arange(S // C))
+        o = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
+        o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1).astype(v.dtype), v)
+    h = h + o.reshape(B, S, cfg.q_dim) @ p["attn"]["wo"]
+    h = h + ffn_forward(p["ffn"], apply_norm(h, p["ln_ffn"], cfg), cfg)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# RWKV block
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_block_params(key, cfg: ModelConfig):
+    p = init_rwkv_params(key, cfg)
+    p["ln_tm"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    p["ln_tm_b"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    p["ln_cm"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    p["ln_cm_b"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    return p
+
+
+def rwkv_block_forward(p, h, cfg: ModelConfig, *, sequential: bool = False):
+    from repro.models.common import layer_norm
+    x = layer_norm(h, p["ln_tm"], p["ln_tm_b"], cfg.norm_eps)
+    y, _ = time_mix_forward(p["time_mix"], x, cfg, sequential=sequential)
+    h = h + y
+    x = layer_norm(h, p["ln_cm"], p["ln_cm_b"], cfg.norm_eps)
+    return h + channel_mix_forward(p["channel_mix"], x, cfg)
+
+
+def rwkv_block_prefill(p, h, cfg: ModelConfig):
+    from repro.models.common import layer_norm
+    from repro.models.rwkv6 import RWKVState
+    x = layer_norm(h, p["ln_tm"], p["ln_tm_b"], cfg.norm_eps)
+    y, wkv = time_mix_forward(p["time_mix"], x, cfg)
+    h = h + y
+    x2 = layer_norm(h, p["ln_cm"], p["ln_cm_b"], cfg.norm_eps)
+    h = h + channel_mix_forward(p["channel_mix"], x2, cfg)
+    return h, RWKVState(wkv, x[:, -1], x2[:, -1])
+
+
+def rwkv_block_decode(p, h, state, cfg: ModelConfig):
+    """state: RWKVState. h: [B, 1, d]."""
+    from repro.models.common import layer_norm
+    from repro.models.rwkv6 import RWKVState
+    x = layer_norm(h, p["ln_tm"], p["ln_tm_b"], cfg.norm_eps)
+    y, wkv = time_mix_forward(p["time_mix"], x, cfg, sequential=True,
+                              last=state.shift_tm, state=state.wkv)
+    h = h + y
+    x2 = layer_norm(h, p["ln_cm"], p["ln_cm_b"], cfg.norm_eps)
+    h = h + channel_mix_forward(p["channel_mix"], x2, cfg, last=state.shift_cm)
+    return h, RWKVState(wkv, x[:, -1], x2[:, -1])
+
+
+# ---------------------------------------------------------------------------
+# Mamba block (norm + mamba2 mixer)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block_params(key, cfg: ModelConfig):
+    return {"ln": make_norm_params(cfg), "mamba": init_mamba_params(key, cfg)}
+
+
+def mamba_block_forward(p, h, cfg: ModelConfig, *, sequential: bool = False):
+    return h + mamba_forward(p["mamba"], apply_norm(h, p["ln"], cfg), cfg,
+                             sequential=sequential)
+
+
+def mamba_block_prefill(p, h, cfg: ModelConfig):
+    y, state = mamba_forward(p["mamba"], apply_norm(h, p["ln"], cfg), cfg,
+                             return_state=True)
+    return h + y, state
+
+
+def mamba_block_decode(p, h, state, cfg: ModelConfig):
+    y, state = mamba_decode(p["mamba"], apply_norm(h, p["ln"], cfg), state, cfg)
+    return h + y, state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 shared attention block (applied periodically, params shared)
+# ---------------------------------------------------------------------------
+
+
+def init_shared_attn_params(key, cfg: ModelConfig):
+    """Zamba-style: input is concat(h, original_embedding) -> project to d."""
+    k1, k2, k3 = split_keys(key, 3)
+    p = {
+        "in_proj": dense_init(k1, 2 * cfg.d_model, cfg.d_model, cfg.dtype),
+        "ln": make_norm_params(cfg),
+        "attn": init_attention_params(k2, cfg),
+        "ln_ffn": make_norm_params(cfg),
+        "ffn": init_ffn_params(k3, cfg),
+    }
+    return p
+
+
+def shared_attn_forward(p, h, emb, cfg: ModelConfig):
+    x = jnp.concatenate([h, emb], axis=-1) @ p["in_proj"]
+    x = x + attention_forward(p["attn"], apply_norm(x, p["ln"], cfg), cfg)
+    x = x + ffn_forward(p["ffn"], apply_norm(x, p["ln_ffn"], cfg), cfg)
+    return h + x
+
+
+def shared_attn_prefill(p, h, emb, cfg: ModelConfig, max_len=None):
+    from repro.models.attention import attention_prefill
+    x = jnp.concatenate([h, emb], axis=-1) @ p["in_proj"]
+    a, cache = attention_prefill(p["attn"], apply_norm(x, p["ln"], cfg), cfg,
+                                 max_len=max_len)
+    x = x + a
+    x = x + ffn_forward(p["ffn"], apply_norm(x, p["ln_ffn"], cfg), cfg)
+    return h + x, cache
+
+
+def shared_attn_decode(p, h, emb, cache, cfg: ModelConfig):
+    x = jnp.concatenate([h, emb], axis=-1) @ p["in_proj"]
+    a, cache = attention_decode(p["attn"], apply_norm(x, p["ln"], cfg), cache, cfg)
+    x = x + a
+    x = x + ffn_forward(p["ffn"], apply_norm(x, p["ln_ffn"], cfg), cfg)
+    return h + x, cache

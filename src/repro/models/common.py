@@ -1,0 +1,289 @@
+"""Shared model components: configs, norms, rotary embeddings, activations, init.
+
+All models in the zoo are pure-functional JAX: params are pytrees of jnp arrays,
+forward functions are `f(params, inputs, cfg) -> outputs`. Layer stacks are stored
+*stacked* on a leading axis so the LM core can `lax.scan` over them (keeps the HLO
+one program regardless of depth — this is also what makes the layer-oblivious
+MoE Super Kernel natural: one kernel, layer index as data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. One instance per assigned architecture.
+
+    `family` selects the block wiring:
+      dense   — decoder-only transformer, dense FFN
+      moe     — decoder-only transformer, MoE FFN
+      ssm     — attention-free (RWKV6)
+      hybrid  — Mamba2 backbone + shared attention block (Zamba2)
+      encdec  — encoder-decoder (Seamless-M4T backbone)
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # Sliding-window ("local") attention. `window_size` is the lookback span.
+    window_size: Optional[int] = None
+    # local:global interleave (gemma3): number of local layers per global layer.
+    local_per_global: int = 0
+    logit_softcap: Optional[float] = None
+    nonparametric_norm: bool = False  # OLMo-style LN without scale/bias
+    qk_norm: bool = False
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None  # per-expert hidden dim (d_ff used if None)
+    router_renorm: bool = True  # renormalize top-k weights to sum to 1
+    capacity_factor: float = 1.25
+    # Number of independent dispatch groups (== attention DP groups in ASAP).
+    # Dispatch/combine are computed per-group so the whole MoE layer shards
+    # without global sorts; the group axis maps onto the mesh `data` axis.
+    dispatch_groups: int = 1
+
+    # --- SSM (Mamba2 / RWKV6) ----------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+
+    # --- hybrid (Zamba2) ----------------------------------------------------
+    shared_attn_every: int = 0  # apply shared attention block every N ssm layers
+
+    # --- encoder/decoder ----------------------------------------------------
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+
+    # --- modality frontend stub ---------------------------------------------
+    frontend: Optional[str] = None  # None | "audio" | "vision"
+
+    # --- misc ----------------------------------------------------------------
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False  # gemma-style sqrt(d_model) scaling
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    dtype: Any = jnp.bfloat16
+    # Flash-style query chunking threshold for jnp attention (perf/memory knob).
+    attn_chunk: int = 1024
+    # Remat ("activation checkpointing") policy name; see launch/sharding.py.
+    remat_policy: str = "nothing_saveable"
+    # ---- §Perf hillclimb knobs (baseline: all False) ----------------------
+    # apply pshard.constrain hints on attention q/k/v (attention-DP layout)
+    attn_dp_constraint: bool = False
+    # jax.checkpoint the inner attention q-block scan (flash-style backward)
+    inner_remat: bool = False
+    # pshard.constrain hints on MoE dispatch buffers (explicit EP all-to-all)
+    moe_shard_constraints: bool = False
+    # grouped-GQA attention: never materialize head-expanded k/v
+    gqa_grouped: bool = False
+    # unroll the q-block loop so each q block only visits causally-reachable
+    # kv blocks (halves attention work; bigger HLO)
+    causal_block_skip: bool = False
+    # combine tokens via gather (inverse-perm) instead of scatter
+    combine_via_gather: bool = False
+    # keep params model-sharded only (no ZeRO-3 over data) — decode steps
+    # re-gather FSDP weights every token, which dominates their collectives
+    no_fsdp: bool = False
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff if self.moe_d_ff is not None else self.d_ff
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Reduced config of the same family for CPU smoke tests.
+    def smoke(self) -> "ModelConfig":
+        kw: dict[str, Any] = dict(
+            num_layers=min(self.num_layers, 4),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads else 0,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            dtype=jnp.float32,
+            attn_chunk=32,
+        )
+        if self.num_experts:
+            kw.update(num_experts=min(self.num_experts, 8), moe_d_ff=64)
+        if self.ssm_state:
+            kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+        if self.window_size:
+            kw.update(window_size=16)
+        if self.local_per_global:
+            kw.update(num_layers=7, local_per_global=2)  # 2 superblocks + 1 tail
+        if self.encoder_layers:
+            kw.update(encoder_layers=2, decoder_layers=2)
+        if self.shared_attn_every:
+            kw.update(num_layers=5, shared_attn_every=2)  # 2 superblocks + 1 tail
+        return self.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (for MODEL_FLOPS = 6*N*D roofline term)
+# ---------------------------------------------------------------------------
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: only top_k + shared experts active)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        size = int(leaf.size)
+        if "experts" in keys and cfg.num_experts:
+            size = size * cfg.top_k // cfg.num_experts
+        total += size
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: Optional[jax.Array], eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight, bias, eps: float) -> jax.Array:
+    """LayerNorm; weight/bias may be None (OLMo non-parametric LN)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def make_norm_params(cfg: ModelConfig, shape=None):
+    if cfg.nonparametric_norm:
+        return None
+    d = cfg.d_model if shape is None else shape
+    return jnp.ones((d,), cfg.dtype)
+
+
+def apply_norm(x: jax.Array, w, cfg: ModelConfig) -> jax.Array:
+    if cfg.nonparametric_norm:
+        return layer_norm(x, None, None, cfg.norm_eps)
+    return rms_norm(x, w, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def act_fn(name: str):
+    return _ACTS[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0) -> jax.Array:
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    """logits [..., V] fp32-accumulated CE; labels int32 [...]."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,27 @@
+"""Modality frontend STUBS (per the assignment: `[audio]`/`[vlm]` entries specify
+the transformer backbone only; `input_specs()` provides precomputed frame/patch
+embeddings).
+
+Contract: a frontend maps raw modality input -> [B, S, d_model] embeddings.
+Here we provide (a) the shape contract used by input_specs and (b) a synthetic
+embedding generator for smoke tests/examples so end-to-end runs are possible
+without audio/vision towers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def frontend_embedding_shape(cfg: ModelConfig, batch: int, seq: int):
+    """Audio: seq == number of (already downsampled) frames. Vision: seq ==
+    number of patch tokens (early-fusion VQ tokens are in-vocab for chameleon,
+    so its frontend is only used when bypassing the VQ tokenizer)."""
+    return (batch, seq, cfg.d_model)
+
+
+def synthetic_embeddings(key, cfg: ModelConfig, batch: int, seq: int):
+    shape = frontend_embedding_shape(cfg, batch, seq)
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(cfg.dtype)

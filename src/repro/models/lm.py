@@ -1,0 +1,486 @@
+"""LM core: stage machinery over heterogeneous layer stacks.
+
+A model is a sequence of *stages*; each stage is `lax.scan` over stacked layer
+params so the HLO stays one program at any depth. Stage kinds:
+
+  decoder  — uniform causal decoder layers (dense or MoE FFN, optional window)
+  gemma    — superblocks of `lpg` sliding-window layers + 1 global layer
+  rwkv     — RWKV6 blocks
+  zamba    — superblocks of `every` Mamba2 layers + one SHARED attention block
+  mamba    — plain Mamba2 layers (zamba tail)
+
+Three drivers per stage kind: forward (train), prefill (forward + caches),
+decode (one token, cache in/out). Layer ids are scan data, which is what lets
+the MoE stage execute through the layer-oblivious Super Kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.attention import KVCache, init_kv_cache
+from repro.models.common import (ModelConfig, apply_norm, cross_entropy_loss,
+                                 embed_init, make_norm_params, split_keys)
+from repro.models.mamba2 import MambaState, init_mamba_state
+from repro.models.moe import MoEAux
+from repro.models.rwkv6 import RWKVState, init_rwkv_state
+
+REMAT_POLICIES = {
+    "none": "none",
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+    "dots_with_no_batch_dims_saveable":
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+# ---------------------------------------------------------------------------
+# Stage specs
+# ---------------------------------------------------------------------------
+
+
+def lm_stages(cfg: ModelConfig):
+    """Returns [(kind, n, opts), ...]."""
+    if cfg.family in ("dense", "moe"):
+        if cfg.local_per_global:
+            per = cfg.local_per_global + 1
+            nb, tail = divmod(cfg.num_layers, per)
+            stages = []
+            if nb:
+                stages.append(("gemma", nb, {"lpg": cfg.local_per_global}))
+            if tail:
+                stages.append(("decoder", tail,
+                               {"moe": False, "window": cfg.window_size}))
+            return stages
+        return [("decoder", cfg.num_layers,
+                 {"moe": cfg.family == "moe", "window": cfg.window_size})]
+    if cfg.family == "ssm":
+        return [("rwkv", cfg.num_layers, {})]
+    if cfg.family == "hybrid":
+        nb, tail = divmod(cfg.num_layers, cfg.shared_attn_every)
+        stages = [("zamba", nb, {"every": cfg.shared_attn_every})]
+        if tail:
+            stages.append(("mamba", tail, {}))
+        return stages
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def _stack_init(init_fn: Callable, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _init_stage(key, kind: str, n: int, opts: dict, cfg: ModelConfig):
+    if kind == "decoder":
+        return _stack_init(
+            lambda k: B.init_decoder_block_params(k, cfg, moe=opts["moe"]), key, n)
+    if kind == "gemma":
+        kl, kg = jax.random.split(key)
+        lpg = opts["lpg"]
+        local = jax.vmap(lambda k: _stack_init(
+            lambda k2: B.init_decoder_block_params(k2, cfg), k, lpg))(
+                jax.random.split(kl, n))
+        glob = _stack_init(lambda k: B.init_decoder_block_params(k, cfg), kg, n)
+        return {"local": local, "global": glob}
+    if kind == "rwkv":
+        return _stack_init(lambda k: B.init_rwkv_block_params(k, cfg), key, n)
+    if kind == "zamba":
+        every = opts["every"]
+        return jax.vmap(lambda k: _stack_init(
+            lambda k2: B.init_mamba_block_params(k2, cfg), k, every))(
+                jax.random.split(key, n))
+    if kind == "mamba":
+        return _stack_init(lambda k: B.init_mamba_block_params(k, cfg), key, n)
+    raise ValueError(kind)
+
+
+def init_lm_params(key, cfg: ModelConfig):
+    stages = lm_stages(cfg)
+    keys = split_keys(key, len(stages) + 3)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "stages": [
+            _init_stage(keys[i + 1], kind, n, opts, cfg)
+            for i, (kind, n, opts) in enumerate(stages)
+        ],
+        "final_norm": make_norm_params(cfg),
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = B.init_shared_attn_params(keys[-2], cfg)
+    if not cfg.tie_embeddings:
+        from repro.models.common import dense_init
+        params["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size,
+                                       cfg.dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, embeddings, cfg: ModelConfig):
+    if embeddings is not None:
+        h = embeddings.astype(cfg.dtype)
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    return h
+
+
+def lm_head(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w
+
+
+# ---------------------------------------------------------------------------
+# Stage drivers — forward
+# ---------------------------------------------------------------------------
+
+
+def _zero_aux(cfg: ModelConfig) -> MoEAux:
+    return MoEAux(jnp.zeros(()), jnp.zeros(()),
+                  jnp.zeros((max(cfg.num_experts, 1),)))
+
+
+def _maybe_remat(body, cfg: ModelConfig, remat: bool):
+    if not remat or cfg.remat_policy == "none":
+        return body
+    policy = REMAT_POLICIES[cfg.remat_policy]
+    if policy == "none":
+        return body
+    return jax.checkpoint(body, policy=policy)
+
+
+def _stage_forward(sp, h, kind, n, opts, cfg: ModelConfig, *, emb=None,
+                   shared=None, gmm=None, moe_mode="capacity", remat=False):
+    if kind == "decoder":
+        moe, window = opts["moe"], opts.get("window")
+
+        def body(hh, xs):
+            lp, lid = xs
+            hh, aux = B.decoder_block_forward(hh_p(lp), hh, cfg, window=window,
+                                              moe=moe, moe_mode=moe_mode,
+                                              gmm=gmm, layer_id=lid)
+            return hh, (aux if moe else _zero_aux(cfg))
+
+        hh_p = lambda lp: lp
+        h, auxs = jax.lax.scan(_maybe_remat(body, cfg, remat), h,
+                               (sp, jnp.arange(n)))
+        return h, jax.tree.map(lambda a: jnp.mean(a, axis=0), auxs)
+
+    if kind == "gemma":
+        lpg = opts["lpg"]
+
+        def body(hh, xs):
+            lp, _ = xs
+
+            def inner(h2, lp2):
+                h2, _ = B.decoder_block_forward(lp2, h2, cfg,
+                                                window=cfg.window_size)
+                return h2, ()
+
+            hh, _ = jax.lax.scan(inner, hh, lp["local"])
+            hh, _ = B.decoder_block_forward(lp["global"], hh, cfg, window=None)
+            return hh, _zero_aux(cfg)
+
+        h, auxs = jax.lax.scan(_maybe_remat(body, cfg, remat), h,
+                               (sp, jnp.arange(n)))
+        return h, jax.tree.map(lambda a: jnp.mean(a, axis=0), auxs)
+
+    if kind == "rwkv":
+
+        def body(hh, lp):
+            return B.rwkv_block_forward(lp, hh, cfg), ()
+
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg, remat), h, sp)
+        return h, _zero_aux(cfg)
+
+    if kind == "zamba":
+
+        def body(hh, lp):
+            def inner(h2, lp2):
+                return B.mamba_block_forward(lp2, h2, cfg), ()
+
+            hh, _ = jax.lax.scan(inner, hh, lp)
+            hh = B.shared_attn_forward(shared, hh, emb, cfg)
+            return hh, ()
+
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg, remat), h, sp)
+        return h, _zero_aux(cfg)
+
+    if kind == "mamba":
+
+        def body(hh, lp):
+            return B.mamba_block_forward(lp, hh, cfg), ()
+
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg, remat), h, sp)
+        return h, _zero_aux(cfg)
+
+    raise ValueError(kind)
+
+
+def lm_backbone(params, cfg: ModelConfig, tokens=None, embeddings=None, *,
+                gmm=None, moe_mode="capacity", remat=False):
+    """Embed + all stages + final norm. Returns (h [B,S,d], MoEAux)."""
+    h = embed_tokens(params, tokens, embeddings, cfg)
+    emb0 = h
+    auxs = []
+    for sp, (kind, n, opts) in zip(params["stages"], lm_stages(cfg)):
+        h, aux = _stage_forward(sp, h, kind, n, opts, cfg, emb=emb0,
+                                shared=params.get("shared_attn"), gmm=gmm,
+                                moe_mode=moe_mode, remat=remat)
+        auxs.append(aux)
+    h = apply_norm(h, params["final_norm"], cfg)
+    aux = jax.tree.map(lambda *xs: sum(xs) / len(xs), *auxs)
+    return h, aux
+
+
+def lm_forward(params, cfg: ModelConfig, tokens=None, embeddings=None, *,
+               gmm=None, moe_mode="capacity", remat=False):
+    """Full logits (use for small scales / sampling)."""
+    h, aux = lm_backbone(params, cfg, tokens, embeddings, gmm=gmm,
+                         moe_mode=moe_mode, remat=remat)
+    return lm_head(params, h, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked CE so [B,S,V] logits are never materialized)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg: ModelConfig, tokens=None, labels=None, embeddings=None,
+            *, aux_coef: float = 0.01, ce_block: int = 512, moe_mode="capacity",
+            gmm=None, remat=True):
+    h, aux = lm_backbone(params, cfg, tokens, embeddings, gmm=gmm,
+                         moe_mode=moe_mode, remat=remat)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    Bsz, S, _ = h.shape
+    C = min(ce_block, S)
+    if S % C:
+        C = S  # fallback: single block
+    nb = S // C
+
+    def blk(acc, i):
+        hb = jax.lax.dynamic_slice_in_dim(h, i * C, C, axis=1)
+        lb = jax.lax.dynamic_slice_in_dim(labels, i * C, C, axis=1)
+        logits = (hb @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), ()
+
+    if nb > 1:
+        total, _ = jax.lax.scan(jax.checkpoint(blk), jnp.zeros((), jnp.float32),
+                                jnp.arange(nb))
+    else:
+        total, _ = blk(jnp.zeros((), jnp.float32), 0)
+    ce = total / (Bsz * S)
+    loss = ce + aux_coef * aux.load_balance_loss
+    metrics = {"ce": ce, "load_balance": aux.load_balance_loss,
+               "dropped_fraction": aux.dropped_fraction}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Stage drivers — prefill (forward + caches)
+# ---------------------------------------------------------------------------
+
+
+def _stage_prefill(sp, h, kind, n, opts, cfg: ModelConfig, *, emb=None,
+                   shared=None, max_len=None):
+    if kind == "decoder":
+        moe, window = opts["moe"], opts.get("window")
+
+        def body(hh, lp):
+            hh, cache = B.decoder_block_prefill(lp, hh, cfg, window=window,
+                                                moe=moe, max_len=max_len)
+            return hh, cache
+
+        return jax.lax.scan(body, h, sp)
+
+    if kind == "gemma":
+
+        def body(hh, lp):
+            def inner(h2, lp2):
+                return B.decoder_block_prefill(lp2, h2, cfg,
+                                               window=cfg.window_size)
+
+            hh, lc = jax.lax.scan(inner, hh, lp["local"])
+            hh, gc = B.decoder_block_prefill(lp["global"], hh, cfg,
+                                             max_len=max_len)
+            return hh, {"local": lc, "global": gc}
+
+        return jax.lax.scan(body, h, sp)
+
+    if kind == "rwkv":
+
+        def body(hh, lp):
+            return B.rwkv_block_prefill(lp, hh, cfg)
+
+        return jax.lax.scan(body, h, sp)
+
+    if kind == "zamba":
+
+        def body(hh, lp):
+            def inner(h2, lp2):
+                return B.mamba_block_prefill(lp2, h2, cfg)
+
+            hh, mc = jax.lax.scan(inner, hh, lp)
+            hh, ac = B.shared_attn_prefill(shared, hh, emb, cfg, max_len=max_len)
+            return hh, {"mamba": mc, "shared": ac}
+
+        return jax.lax.scan(body, h, sp)
+
+    if kind == "mamba":
+
+        def body(hh, lp):
+            return B.mamba_block_prefill(lp, hh, cfg)
+
+        return jax.lax.scan(body, h, sp)
+
+    raise ValueError(kind)
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens=None, embeddings=None, *,
+               max_len: Optional[int] = None):
+    """Returns (last-position logits [B, V], caches list per stage)."""
+    h = embed_tokens(params, tokens, embeddings, cfg)
+    emb0 = h
+    caches = []
+    for sp, (kind, n, opts) in zip(params["stages"], lm_stages(cfg)):
+        h, cache = _stage_prefill(sp, h, kind, n, opts, cfg, emb=emb0,
+                                  shared=params.get("shared_attn"),
+                                  max_len=max_len)
+        caches.append(cache)
+    h = apply_norm(h, params["final_norm"], cfg)
+    logits = lm_head(params, h[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Stage drivers — decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def _stage_decode(sp, h, caches, kind, n, opts, cfg: ModelConfig, *, emb=None,
+                  shared=None):
+    if kind == "decoder":
+        moe, window = opts["moe"], opts.get("window")
+
+        def body(hh, xs):
+            lp, cache = xs
+            hh, cache = B.decoder_block_decode(lp, hh, cache, cfg,
+                                               window=window, moe=moe)
+            return hh, cache
+
+        return jax.lax.scan(body, h, (sp, caches))
+
+    if kind == "gemma":
+
+        def body(hh, xs):
+            lp, cache = xs
+
+            def inner(h2, xs2):
+                lp2, c2 = xs2
+                h2, c2 = B.decoder_block_decode(lp2, h2, c2, cfg,
+                                                window=cfg.window_size)
+                return h2, c2
+
+            hh, lc = jax.lax.scan(inner, hh, (lp["local"], cache["local"]))
+            hh, gc = B.decoder_block_decode(lp["global"], hh, cache["global"], cfg)
+            return hh, {"local": lc, "global": gc}
+
+        return jax.lax.scan(body, h, (sp, caches))
+
+    if kind == "rwkv":
+
+        def body(hh, xs):
+            lp, st = xs
+            return B.rwkv_block_decode(lp, hh, st, cfg)
+
+        return jax.lax.scan(body, h, (sp, caches))
+
+    if kind == "zamba":
+
+        def body(hh, xs):
+            lp, cache = xs
+
+            def inner(h2, xs2):
+                lp2, s2 = xs2
+                return B.mamba_block_decode(lp2, h2, s2, cfg)
+
+            hh, mc = jax.lax.scan(inner, hh, (lp, cache["mamba"]))
+            hh, ac = B.shared_attn_decode(shared, hh, emb, cache["shared"], cfg)
+            return hh, {"mamba": mc, "shared": ac}
+
+        return jax.lax.scan(body, h, (sp, caches))
+
+    if kind == "mamba":
+
+        def body(hh, xs):
+            lp, st = xs
+            return B.mamba_block_decode(lp, hh, st, cfg)
+
+        return jax.lax.scan(body, h, (sp, caches))
+
+    raise ValueError(kind)
+
+
+def lm_decode_step(params, cfg: ModelConfig, caches, token, *,
+                   embeddings=None):
+    """token: [B] int32 (or embeddings [B, 1, d]). Returns (logits [B,V], caches)."""
+    h = embed_tokens(params, token[:, None] if token is not None else None,
+                     embeddings, cfg)
+    emb0 = h
+    new_caches = []
+    for sp, cache, (kind, n, opts) in zip(params["stages"], caches,
+                                          lm_stages(cfg)):
+        h, cache = _stage_decode(sp, h, cache, kind, n, opts, cfg, emb=emb0,
+                                 shared=params.get("shared_attn"))
+        new_caches.append(cache)
+    h = apply_norm(h, params["final_norm"], cfg)
+    return lm_head(params, h, cfg)[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (zeros; eval_shape-able for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                prefilled: int = 0):
+    """Builds the decode-cache pytree (sizes match lm_prefill outputs)."""
+    caches = []
+    length = jnp.asarray(prefilled, jnp.int32)
+
+    def kv(n_stack, window=None, extra_lead=()):
+        size = min(max_len, window) if window else max_len
+        shape = extra_lead + (n_stack, batch, size, cfg.num_kv_heads, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype),
+                       jnp.broadcast_to(length, extra_lead + (n_stack,)))
+
+    for kind, n, opts in lm_stages(cfg):
+        if kind == "decoder":
+            caches.append(kv(n, opts.get("window")))
+        elif kind == "gemma":
+            lc = kv(opts["lpg"], cfg.window_size, extra_lead=(n,))
+            gc = kv(n)
+            caches.append({"local": lc, "global": gc})
+        elif kind == "rwkv":
+            st = init_rwkv_state(cfg, batch)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), st))
+        elif kind == "zamba":
+            st = init_mamba_state(cfg, batch)
+            mc = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n, opts["every"]) + a.shape), st)
+            caches.append({"mamba": mc, "shared": kv(n)})
+        elif kind == "mamba":
+            st = init_mamba_state(cfg, batch)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), st))
+    return caches

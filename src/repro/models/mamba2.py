@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) block — chunked state-space duality algorithm + sequential oracle.
+
+Follows the minimal SSD formulation of Mamba2 (arXiv:2405.21060): per-head scalar
+input-dependent decay a_t = exp(dt_t * A_h), rank-1 state updates with shared
+(B, C) projections (single group). Prefill/train uses the chunked algorithm
+(intra-chunk quadratic + inter-chunk scan); decode carries [B, H, P, N] state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rms_norm, split_keys
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array  # [B, H, P, N]
+    conv: jax.Array  # [B, W-1, conv_channels]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_mamba_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    conv_ch = d_inner + 2 * N  # conv over (x, B, C)
+    k1, k2, k3, k4, k5 = split_keys(key, 5)
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": dense_init(k1, d, 2 * d_inner + 2 * N + H, cfg.dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.ones((d_inner,), cfg.dtype),
+        "out_proj": dense_init(k5, d_inner, d, cfg.dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B, S, C]; w: [W, C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(p, u, cfg: ModelConfig):
+    d_inner, H, P, N = _dims(cfg)
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xbc, dt  # conv applies to xbc
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] -> [..., Q, Q] with out[i,j] = sum_{j<s<=i} a_s (−inf for j>i)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [.., i, j] = sum_{j<s<=i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a_log, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:      [b, S, H, P]  (already dt-scaled input)
+    a_log:  [b, S, H]     log decay per step (<= 0)
+    B, C:   [b, S, N]     shared across heads (single group)
+    Returns (y [b, S, H, P], final_state [b, H, P, N]).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:  # pad: zero inputs contribute nothing, zero a_log keeps state
+        pad = Q - S % Q
+        y, fs = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(a_log, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(B, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(C, ((0, 0), (0, pad), (0, 0))), Q, initial_state)
+        return y[:, :S], fs
+    nc = S // Q
+    xc = x.reshape(b, nc, Q, H, P)
+    ac = a_log.reshape(b, nc, Q, H).transpose(0, 3, 1, 2)  # [b, H, nc, Q]
+    Bc = B.reshape(b, nc, Q, N)
+    Cc = C.reshape(b, nc, Q, N)
+
+    A_cum = jnp.cumsum(ac, axis=-1)  # [b, H, nc, Q]
+    # 1) intra-chunk (diagonal block) output
+    L = jnp.exp(_segsum(ac))  # [b, H, nc, Q, Q]
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc,
+                        preferred_element_type=jnp.float32)
+    # 2) per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)  # [b, H, nc, Q]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc,
+                        preferred_element_type=jnp.float32)
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1])  # [b, H, nc]
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, H, P, N), jnp.float32))
+
+    def step(s_prev, inp):
+        st, dec = inp  # st [b, H, P, N], dec [b, H]
+        s_in = s_prev
+        s_next = dec[..., None, None] * s_prev + st
+        return s_next, s_in
+
+    sts = states.transpose(1, 0, 2, 3, 4)  # [nc, b, H, P, N]
+    decs = chunk_decay.transpose(2, 0, 1)  # [nc, b, H]
+    final, prev_states = jax.lax.scan(step, s0, (sts, decs))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b, nc, H, P, N]
+    # 4) state -> output contribution
+    state_decay = jnp.exp(A_cum)  # decay from chunk start to position l (inclusive)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay,
+                       preferred_element_type=jnp.float32)
+    y = (Y_diag + Y_off).reshape(b, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_sequential(x, a_log, B, C, initial_state=None):
+    """Step-by-step oracle for ssd_chunked."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, H, P, N), jnp.float32))
+
+    def step(s, inp):
+        xt, at, Bt, Ct = inp  # [b,H,P], [b,H], [b,N], [b,N]
+        s = jnp.exp(at)[..., None, None] * s \
+            + xt[..., None] * Bt[:, None, None, :].astype(jnp.float32)
+        y = jnp.einsum("bhpn,bn->bhp", s, Ct.astype(jnp.float32))
+        return s, y
+
+    xs = (x.transpose(1, 0, 2, 3), a_log.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+def mamba_forward(p, u: jax.Array, cfg: ModelConfig, *, sequential: bool = False,
+                  return_state: bool = False):
+    """Full-sequence Mamba2 block. u: [B, S, d_model] -> [B, S, d_model]."""
+    b, S, _ = u.shape
+    d_inner, H, P, N = _dims(cfg)
+    z, xbc_raw, dt = _split_proj(p, u, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(u.dtype)
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [b,S,H]
+    A = -jnp.exp(p["A_log"])  # [H] negative
+    a_log = dt * A  # [b, S, H]
+    xh = x.reshape(b, S, H, P)
+    x_scaled = (xh.astype(jnp.float32) * dt[..., None]).astype(u.dtype)
+    if sequential:
+        y, ssm = ssd_sequential(x_scaled, a_log, B, C)
+    else:
+        y, ssm = ssd_chunked(x_scaled, a_log, B, C, cfg.ssm_chunk)
+    y = y.astype(jnp.float32) + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, S, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        W = cfg.ssm_conv_width
+        if S >= W - 1:
+            conv = xbc_raw[:, S - (W - 1):]
+        else:
+            conv = jnp.pad(xbc_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        return out, MambaState(ssm, conv)
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    d_inner, H, P, N = _dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return MambaState(jnp.zeros((batch, H, P, N), jnp.float32),
+                      jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), cfg.dtype))
+
+
+def mamba_decode(p, u: jax.Array, state: MambaState, cfg: ModelConfig):
+    """One-token decode. u: [B, 1, d_model]."""
+    b = u.shape[0]
+    d_inner, H, P, N = _dims(cfg)
+    z, xbc, dt = _split_proj(p, u, cfg)
+    # conv over ring of last W-1 inputs + current
+    hist = jnp.concatenate([state.conv, xbc], axis=1)  # [b, W, C]
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(u.dtype)
+    new_conv = hist[:, 1:]
+    x, B, C = jnp.split(xbc1, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [b,H]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # [b,H]
+    xh = x.reshape(b, H, P).astype(jnp.float32)
+    s = a[..., None, None] * state.ssm \
+        + (xh * dt[..., None])[..., None] * B[:, 0][:, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", s, C[:, 0].astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], MambaState(s, new_conv)

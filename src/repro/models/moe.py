@@ -1,0 +1,254 @@
+"""Mixture-of-Experts FFN: top-k router + expert GMM + shared experts.
+
+Two execution modes:
+  * ``dense``    — exact dropless reference (computes every expert on every token,
+                   combines with router weights). Used for tiny smoke shapes and as
+                   the oracle for the capacity path and the Pallas kernels.
+  * ``capacity`` — production path: sort tokens by expert, scatter into fixed
+                   [E, C, d] capacity buffers, batched expert GMM, gather+combine.
+                   This is the GShard/Switch layout that shards cleanly on a mesh
+                   (E over the `model`/EP axis, C over `data`) and whose [E,C,d]
+                   buffers are exactly the paper's dispatch/combine payloads
+                   (Table 2): dispatch == scatter to expert buffers, combine ==
+                   weighted gather back to token order.
+
+The batched expert matmul is pluggable (`gmm=`) so the layer can run through the
+layer-oblivious MoE Super Kernel (repro.kernels.super_gmm) instead of jnp einsum.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, act_fn, dense_init, split_keys
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array  # scalar
+    dropped_fraction: jax.Array  # scalar, fraction of routed (token,k) pairs dropped
+    expert_load: jax.Array  # [E] fraction of routed pairs per expert
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_moe_params(key, cfg: ModelConfig):
+    kr, kg, ku, kd, ks = split_keys(key, 5)
+    d, f, E = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    p = {
+        "router": dense_init(kr, d, E, jnp.float32),
+        "experts": {
+            "w_gate": jax.vmap(lambda k: dense_init(k, d, f, cfg.dtype))(
+                jax.random.split(kg, E)),
+            "w_up": jax.vmap(lambda k: dense_init(k, d, f, cfg.dtype))(
+                jax.random.split(ku, E)),
+            "w_down": jax.vmap(lambda k: dense_init(k, f, d, cfg.dtype))(
+                jax.random.split(kd, E)),
+        },
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        k1, k2, k3 = split_keys(ks, 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, fs, cfg.dtype),
+            "w_up": dense_init(k2, d, fs, cfg.dtype),
+            "w_down": dense_init(k3, fs, d, cfg.dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+
+def router_topk(p_router: jax.Array, x: jax.Array, cfg: ModelConfig):
+    """x: [T, d] -> (weights [T,K] fp32, idx [T,K] int32, probs [T,E] fp32)."""
+    logits = x.astype(jnp.float32) @ p_router  # router always fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_renorm:
+        weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, idx.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, num_experts: int):
+    """Switch-style auxiliary loss: E * Σ_e f_e * P_e.
+
+    f is computed by scatter-add (counts are not differentiated — gradient
+    flows through P only, as in Switch), never materializing a [T, K, E]
+    one-hot (which is terabytes at production token counts)."""
+    counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = jax.lax.stop_gradient(counts / jnp.maximum(idx.shape[0], 1))
+    P = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * P), f / max(idx.shape[1], 1)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN (gated)
+# ---------------------------------------------------------------------------
+
+
+def _ffn(x, w_gate, w_up, w_down, act):
+    h = act(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def default_gmm(xb: jax.Array, experts: dict, cfg: ModelConfig) -> jax.Array:
+    """Batched expert matmul on capacity buffers. xb: [E, C, d] -> [E, C, d]."""
+    act = act_fn(cfg.act)
+    g = jnp.einsum("ecd,edf->ecf", xb, experts["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xb, experts["w_up"])
+    h = act(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Dense (oracle) mode
+# ---------------------------------------------------------------------------
+
+
+def moe_forward_dense(p, x: jax.Array, cfg: ModelConfig):
+    """Exact dropless MoE. x: [T, d]. O(T*E*f) compute — smoke/oracle only."""
+    T, d = x.shape
+    weights, idx, probs = router_topk(p["router"], x, cfg)
+    act = act_fn(cfg.act)
+    # [T, E, d_out] — every expert on every token.
+    g = jnp.einsum("td,edf->tef", x, p["experts"]["w_gate"])
+    u = jnp.einsum("td,edf->tef", x, p["experts"]["w_up"])
+    y_all = jnp.einsum("tef,efd->ted", act(g) * u, p["experts"]["w_down"])
+    combine = jnp.zeros((T, cfg.num_experts), jnp.float32)
+    combine = combine.at[jnp.arange(T)[:, None], idx].add(weights)
+    y = jnp.einsum("te,ted->td", combine.astype(x.dtype), y_all)
+    lb, load = load_balance_loss(probs, idx, cfg.num_experts)
+    aux = MoEAux(lb, jnp.zeros(()), load)
+    if "shared" in p:
+        y = y + _ffn(x, p["shared"]["w_gate"], p["shared"]["w_up"],
+                     p["shared"]["w_down"], act)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Capacity (production) mode
+# ---------------------------------------------------------------------------
+
+
+def expert_capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(num_tokens * cfg.top_k / max(cfg.num_experts, 1) * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU lane alignment
+
+
+def moe_dispatch(x: jax.Array, idx: jax.Array, cfg: ModelConfig,
+                 capacity: Optional[int] = None):
+    """Sort-based dispatch. x: [T, d]; idx: [T, K].
+
+    Returns (xb [E, C, d], dispatch_info) where dispatch_info carries everything
+    needed to combine results back into token order. This is the functional
+    equivalent of the paper's `async-dispatch-send` payload construction: the
+    [E, C, d] buffer is what lands in each MoE device's shared-buffer region.
+    """
+    T, d = x.shape
+    K, E = cfg.top_k, cfg.num_experts
+    C = capacity or expert_capacity(T, cfg)
+    flat_e = idx.reshape(T * K)
+    perm = jnp.argsort(flat_e, stable=True)  # sorted (token,k) pairs by expert
+    sorted_e = flat_e[perm]
+    group_sizes = jnp.bincount(flat_e, length=E)
+    group_offset = jnp.cumsum(group_sizes) - group_sizes  # exclusive prefix
+    pos_in_group = jnp.arange(T * K) - group_offset[sorted_e]
+    valid = pos_in_group < C
+    slot = jnp.where(valid, sorted_e * C + pos_in_group, E * C)  # OOB -> dropped
+    token_of = perm // K
+    xb = jnp.zeros((E * C, d), x.dtype).at[slot].set(x[token_of], mode="drop")
+    info = dict(perm=perm, slot=slot, valid=valid, group_sizes=group_sizes,
+                capacity=C)
+    return xb.reshape(E, C, d), info
+
+
+def moe_combine(yb: jax.Array, info, weights: jax.Array, T: int,
+                via_gather: bool = False) -> jax.Array:
+    """Inverse of dispatch: gather expert outputs, weight, sum over K.
+
+    via_gather: un-permute with a gather through argsort(perm) instead of a
+    row scatter — gathers partition better than scatters under GSPMD
+    (§Perf H7)."""
+    E, C, d = yb.shape
+    K = weights.shape[1]
+    flat = yb.reshape(E * C, d)
+    gathered = jnp.where(info["valid"][:, None],
+                         flat.at[info["slot"]].get(mode="fill", fill_value=0),
+                         0).astype(flat.dtype)
+    if via_gather:
+        inv = jnp.argsort(info["perm"])
+        out_sorted = gathered[inv]
+    else:
+        out_sorted = jnp.zeros((T * K, d),
+                               flat.dtype).at[info["perm"]].set(gathered)
+    out = out_sorted.reshape(T, K, d)
+    return jnp.einsum("tkd,tk->td", out, weights.astype(out.dtype))
+
+
+def moe_forward_capacity(p, x: jax.Array, cfg: ModelConfig,
+                         gmm: Optional[Callable] = None,
+                         capacity: Optional[int] = None):
+    """Production MoE path. x: [T, d].
+
+    Dispatch runs independently per dispatch group (== ASAP attention DP group):
+    each group sorts/scatters only its own tokens, so on a mesh the group axis
+    stays sharded on `data` and the expert axis on `model` — the G×E buffer
+    handoff between them IS the dispatch all-to-all.
+    """
+    from repro.models import pshard
+    T, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    weights, idx, probs = router_topk(p["router"], x, cfg)
+    G = cfg.dispatch_groups if T % max(cfg.dispatch_groups, 1) == 0 else 1
+    Tg = T // G
+    C = capacity or expert_capacity(Tg, cfg)
+    xg = x.reshape(G, Tg, d)
+    idxg = idx.reshape(G, Tg, K)
+    if cfg.moe_shard_constraints:
+        xg = pshard.constrain(xg, "moe_group", None, None)
+        idxg = pshard.constrain(idxg, "moe_group", None, None)
+    xb, info = jax.vmap(lambda xx, ii: moe_dispatch(xx, ii, cfg, C))(xg, idxg)
+    if cfg.moe_shard_constraints:
+        # per-group buffers stay FULLY on their DP shard (scatter is local);
+        # the reshard at the dense transpose below IS the dispatch all-to-all
+        # (data -> model axis), exactly ASAP's dispatch payload movement
+        xb = pshard.constrain(xb, "moe_group", None, None, None)
+    # [G, E, C, d] -> [E, G*C, d]: one GMM per expert over all groups' buffers.
+    xb2 = xb.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+    if cfg.moe_shard_constraints:
+        xb2 = pshard.constrain(xb2, "experts", "moe_rows", None)
+    gmm = gmm or default_gmm
+    yb2 = gmm(xb2, p["experts"], cfg)
+    if cfg.moe_shard_constraints:
+        yb2 = pshard.constrain(yb2, "experts", "moe_rows", None)
+    yb = yb2.reshape(E, G, C, d).transpose(1, 0, 2, 3)
+    if cfg.moe_shard_constraints:
+        # combine all-to-all back to group-local, then gather locally
+        yb = pshard.constrain(yb, "moe_group", None, None, None)
+    yg = jax.vmap(lambda yy, inf, ww: moe_combine(
+        yy, inf, ww, Tg, via_gather=cfg.combine_via_gather))(
+        yb, info, weights.reshape(G, Tg, K))
+    y = yg.reshape(T, d)
+    if cfg.moe_shard_constraints:
+        y = pshard.constrain(y, "moe_tokens", None)
+    lb, load = load_balance_loss(probs, idx, E)
+    dropped = 1.0 - jnp.sum(info["valid"]) / (T * K)
+    aux = MoEAux(lb, dropped, load)
+    if "shared" in p:
+        y = y + _ffn(x, p["shared"]["w_gate"], p["shared"]["w_up"],
+                     p["shared"]["w_down"], act_fn(cfg.act))
+    return y, aux
+
+
+def moe_forward(p, x: jax.Array, cfg: ModelConfig, *, mode: str = "capacity",
+                gmm: Optional[Callable] = None, capacity: Optional[int] = None):
+    if mode == "dense":
+        return moe_forward_dense(p, x, cfg)
+    return moe_forward_capacity(p, x, cfg, gmm=gmm, capacity=capacity)

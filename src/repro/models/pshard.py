@@ -1,0 +1,78 @@
+"""Logical-axis sharding hints for model internals.
+
+`constrain(x, "batch", None, "heads", None)` inserts a
+with_sharding_constraint mapping logical names to mesh axes via module-level
+rules — a no-op when no rules are set (CPU tests) or a name is unmapped.
+
+Set by the launcher/dry-run before tracing:
+    pshard.set_rules(batch=("data",), experts="model", moe_rows="data")
+
+These hints are the §Perf levers: the baseline lowers with NO rules (pure
+auto-propagation); optimized variants add them (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Dict[str, Any] = {}
+
+
+def set_rules(**rules):
+    global _RULES
+    _RULES = dict(rules)
+
+
+def clear_rules():
+    global _RULES
+    _RULES = {}
+
+
+def get_rules() -> Dict[str, Any]:
+    return dict(_RULES)
+
+
+@contextmanager
+def rules(**r):
+    old = get_rules()
+    set_rules(**r)
+    try:
+        yield
+    finally:
+        set_rules(**old)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    if not _RULES:
+        return x
+    axes = []
+    used = False
+    for n in names:
+        ax = _RULES.get(n) if n else None
+        axes.append(ax)
+        used = used or ax is not None
+    if not used:
+        return x
+    # drop axes whose size doesn't divide the dim (mirror of launch.sharding)
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        sizes = dict(mesh.shape) if mesh is not None else {}
+    except Exception:
+        sizes = {}
+
+    def ok(dim, ax):
+        if ax is None:
+            return None
+        t = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in t:
+            n *= sizes.get(a, 1)
+        return ax if (n > 1 and dim % n == 0) else None
+
+    spec = P(*[ok(d, a) for d, a in zip(x.shape, axes)])
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,226 @@
+"""RWKV-6 ("Finch") block: time-mix with data-dependent per-channel decay +
+channel-mix. Chunked parallel prefill + sequential oracle + one-token decode.
+
+Recurrence (per head, k/v head size P):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t in (0,1), data-dependent)
+    y_t = r_t^T S_{t-1} + (r_t . (u ⊙ k_t)) v_t   (u = per-channel bonus)
+
+The chunked algorithm factorizes the pairwise decay exp(Lprev_i - L_j) into
+(r_i ⊙ exp(Lprev_i - c)) · (k_j ⊙ exp(c - L_j)) with a per-chunk/channel midpoint
+offset c and exponent clamping — two matmuls per chunk instead of a [Q,Q,P]
+intermediate. Pairs whose true weight underflows (< e^-60) are the only ones
+affected by the clamp.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+CLAMP = 60.0
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array  # [B, H, P, P] (k-dim, v-dim)
+    shift_tm: jax.Array  # [B, d] last token for time-mix shift
+    shift_cm: jax.Array  # [B, d] last token for channel-mix shift
+
+
+def _dims(cfg: ModelConfig):
+    P = cfg.ssm_head_dim
+    H = cfg.d_model // P
+    return H, P
+
+
+def init_rwkv_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, P = _dims(cfg)
+    ks = split_keys(key, 10)
+    lora = max(32, d // 64)
+    return {
+        "time_mix": {
+            "mu_r": jnp.full((d,), 0.5, cfg.dtype),
+            "mu_k": jnp.full((d,), 0.5, cfg.dtype),
+            "mu_v": jnp.full((d,), 0.5, cfg.dtype),
+            "mu_w": jnp.full((d,), 0.5, cfg.dtype),
+            "mu_g": jnp.full((d,), 0.5, cfg.dtype),
+            "wr": dense_init(ks[0], d, d, cfg.dtype),
+            "wk": dense_init(ks[1], d, d, cfg.dtype),
+            "wv": dense_init(ks[2], d, d, cfg.dtype),
+            "wg": dense_init(ks[3], d, d, cfg.dtype),
+            "wo": dense_init(ks[4], d, d, cfg.dtype),
+            # data-dependent decay: w_t = exp(-exp(w_base + tanh(x A) B))
+            "w_base": jnp.full((d,), -1.0, jnp.float32),
+            "w_lora_a": dense_init(ks[5], d, lora, cfg.dtype),
+            "w_lora_b": (jnp.zeros((lora, d))).astype(cfg.dtype),
+            "u": jnp.full((d,), 0.5, jnp.float32),  # bonus
+            "ln_w": jnp.ones((d,), cfg.dtype),  # group-norm scale per channel
+        },
+        "channel_mix": {
+            "mu_k": jnp.full((d,), 0.5, cfg.dtype),
+            "mu_r": jnp.full((d,), 0.5, cfg.dtype),
+            "wk": dense_init(ks[6], d, cfg.d_ff, cfg.dtype),
+            "wv": dense_init(ks[7], cfg.d_ff, d, cfg.dtype),
+            "wr": dense_init(ks[8], d, d, cfg.dtype),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Previous token (zeros / `last` for position 0). x: [B, S, d]."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _decay_log(p_tm, xw: jax.Array) -> jax.Array:
+    """log w_t in (-inf, 0). xw: [B, S, d] (already mu-mixed)."""
+    lora = jnp.tanh(xw @ p_tm["w_lora_a"]).astype(jnp.float32) @ \
+        p_tm["w_lora_b"].astype(jnp.float32)
+    ww = p_tm["w_base"] + lora
+    return -jnp.exp(jnp.clip(ww, -8.0, 4.0))  # clip keeps exp sane
+
+
+# ---------------------------------------------------------------------------
+# WKV kernels (chunked + sequential)
+# ---------------------------------------------------------------------------
+
+
+def wkv_sequential(r, k, v, logw, u, initial_state=None):
+    """Oracle. r,k,v: [B, S, H, P]; logw: [B, S, H, P]; u: [H, P]."""
+    B, S, H, P = r.shape
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((B, H, P, P), jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B,H,P] each
+        rt, kt, vt = (a.astype(jnp.float32) for a in (rt, kt, vt))
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        s = jnp.exp(wt)[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), final
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int, initial_state=None):
+    """Chunked parallel WKV. Shapes as wkv_sequential."""
+    B, S, H, P = r.shape
+    Q = min(chunk, S)
+    if S % Q:  # pad: zero k adds nothing to state, zero logw keeps decay = 1
+        pad = Q - S % Q
+        padded = [jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                  for a in (r, k, v, logw)]
+        y, fs = wkv_chunked(*padded, u, Q, initial_state)
+        return y[:, :S], fs
+    nc = S // Q
+
+    def cshape(a):
+        return a.reshape(B, nc, Q, H, P).transpose(1, 0, 3, 2, 4)  # [nc,B,H,Q,P]
+
+    rc, kc, vc, wc = map(cshape, (r, k, v, logw))
+    rc = rc.astype(jnp.float32)
+    kc = kc.astype(jnp.float32)
+    vc = vc.astype(jnp.float32)
+    L = jnp.cumsum(wc.astype(jnp.float32), axis=-2)  # inclusive [nc,B,H,Q,P]
+    Lprev = L - wc  # exclusive
+    Lend = L[..., -1:, :]  # [nc,B,H,1,P]
+    c = 0.5 * Lend  # midpoint offset per channel
+
+    r_hat = rc * jnp.exp(jnp.clip(Lprev - c, -CLAMP, CLAMP))
+    k_hat = kc * jnp.exp(jnp.clip(c - L, -CLAMP, CLAMP))
+    k_end = kc * jnp.exp(jnp.clip(Lend - L, -CLAMP, CLAMP))
+    r_in = rc * jnp.exp(jnp.clip(Lprev, -CLAMP, CLAMP))
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)  # strictly lower: j < i
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((B, H, P, P), jnp.float32))
+    ku = kc * u.astype(jnp.float32)[None, None, :, None, :]
+
+    def body(s, inp):
+        rh, kh, ke, ri, vt, ku_t, le, r_raw = inp
+        # intra-chunk pairs j < i (factorized pairwise decay)
+        A = jnp.einsum("bhip,bhjp->bhij", rh, kh)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y = jnp.einsum("bhij,bhjp->bhip", A, vt)
+        # current-token bonus: (r_i . (u ⊙ k_i)) v_i — raw (undecayed) r, k
+        bonus = jnp.einsum("bhip,bhip->bhi", r_raw, ku_t)
+        y = y + bonus[..., None] * vt
+        # cross-chunk: r_i^T diag(exp(Lprev_i)) s
+        y = y + jnp.einsum("bhik,bhkv->bhiv", ri, s)
+        # state update: s' = diag(exp(Lend)) s + Σ_j exp(Lend - L_j) k_j v_j^T
+        s = jnp.exp(jnp.clip(le, -CLAMP, CLAMP))[..., 0, :, None] * s \
+            + jnp.einsum("bhjk,bhjv->bhkv", ke, vt)
+        return s, y
+
+    final, ys = jax.lax.scan(body, s0, (r_hat, k_hat, k_end, r_in, vc, ku, Lend, rc))
+    # ys: [nc, B, H, Q, P] -> [B, S, H, P]
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, P)
+    return y.astype(r.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, eps: float, H: int) -> jax.Array:
+    """Per-head LayerNorm over P then per-channel scale. x: [B, S, d]."""
+    B, S, d = x.shape
+    P = d // H
+    xh = x.reshape(B, S, H, P).astype(jnp.float32)
+    mean = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix_forward(p_tm, x: jax.Array, cfg: ModelConfig, *,
+                     sequential: bool = False, last=None, state=None):
+    """x: [B, S, d] -> (y, final_wkv_state)."""
+    B, S, d = x.shape
+    H, P = _dims(cfg)
+    xx = _token_shift(x, last)
+    xr = _lerp(x, xx, p_tm["mu_r"])
+    xk = _lerp(x, xx, p_tm["mu_k"])
+    xv = _lerp(x, xx, p_tm["mu_v"])
+    xw = _lerp(x, xx, p_tm["mu_w"])
+    xg = _lerp(x, xx, p_tm["mu_g"])
+    r = (xr @ p_tm["wr"]).reshape(B, S, H, P)
+    k = (xk @ p_tm["wk"]).reshape(B, S, H, P)
+    v = (xv @ p_tm["wv"]).reshape(B, S, H, P)
+    g = jax.nn.silu((xg @ p_tm["wg"]).astype(jnp.float32)).astype(x.dtype)
+    logw = _decay_log(p_tm, xw).reshape(B, S, H, P)
+    u = p_tm["u"].reshape(H, P)
+    if sequential:
+        y, fs = wkv_sequential(r, k, v, logw, u, state)
+    else:
+        y, fs = wkv_chunked(r, k, v, logw, u, cfg.ssm_chunk, state)
+    y = y.reshape(B, S, d)
+    y = _group_norm(y, p_tm["ln_w"], cfg.norm_eps, H)
+    return (y * g) @ p_tm["wo"], fs
+
+
+def channel_mix_forward(p_cm, x: jax.Array, cfg: ModelConfig, last=None):
+    xx = _token_shift(x, last)
+    xk = _lerp(x, xx, p_cm["mu_k"])
+    xr = _lerp(x, xx, p_cm["mu_r"])
+    kk = jnp.square(jax.nn.relu((xk @ p_cm["wk"]).astype(jnp.float32)))
+    rr = jax.nn.sigmoid((xr @ p_cm["wr"]).astype(jnp.float32))
+    return (rr * (kk.astype(x.dtype) @ p_cm["wv"]).astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    H, P = _dims(cfg)
+    return RWKVState(jnp.zeros((batch, H, P, P), jnp.float32),
+                     jnp.zeros((batch, cfg.d_model), cfg.dtype),
+                     jnp.zeros((batch, cfg.d_model), cfg.dtype))

@@ -1,0 +1,70 @@
+"""AdamW with global-norm gradient clipping (fp32 moments, bf16-safe).
+
+Self-contained (no optax in this container). State is a pytree matching
+params; moments are fp32 regardless of param dtype so the optimizer state
+contributes the expected 8 bytes/param to the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(zeros, params),
+                        jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        lr = jnp.asarray(self.lr, jnp.float32)
+        if self.warmup_steps:
+            lr = lr * jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        return lr
+
+    def update(self, grads, state: OptState, params):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gn = global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, g32)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** step.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** step.astype(jnp.float32)), v)
+        lr = self._lr(step)
+
+        def upd(p, mh_, vh_):
+            u = mh_ / (jnp.sqrt(vh_) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mh, vh)
+        return new_params, OptState(step, m, v)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

@@ -1,0 +1,118 @@
+"""Attention: chunked flash-style path vs dense oracle; prefill/decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (attention_decode, attention_forward,
+                                    attention_prefill, chunked_causal_attention,
+                                    dense_causal_attention, init_attention_params,
+                                    init_kv_cache, _project_qkv)
+from repro.models.common import ModelConfig
+
+CFG = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=128, dtype=jnp.float32, attn_chunk=16)
+
+
+def _qkv(key, B, S, cfg):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, cfg.num_heads, cfg.head_dim))
+    k = jax.random.normal(ks[1], (B, S, cfg.num_kv_heads, cfg.head_dim))
+    v = jax.random.normal(ks[2], (B, S, cfg.num_kv_heads, cfg.head_dim))
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,chunk,window", [(64, 16, None), (64, 16, 24),
+                                            (48, 16, None), (33, 16, None),
+                                            (128, 32, 40)])
+def test_chunked_matches_dense(S, chunk, window):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, S, CFG)
+    out_c = chunked_causal_attention(q, k, v, CFG, window, chunk)
+    out_d = dense_causal_attention(q, k, v, CFG, window)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [None, 10.0])
+def test_softcap_paths_agree(softcap):
+    cfg = CFG.replace(logit_softcap=softcap)
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 64, cfg)
+    out_c = chunked_causal_attention(q, k, v, cfg, None, 16)
+    out_d = dense_causal_attention(q, k, v, cfg, None)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_prefill_then_decode_matches_forward(window):
+    """Forward over S+1 tokens == prefill(S) + decode(1 token)."""
+    cfg = CFG
+    key = jax.random.PRNGKey(2)
+    p = init_attention_params(key, cfg)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S + 1, cfg.d_model))
+    full = attention_forward(p, x, cfg, window=window, use_dense=True)
+    _, cache = attention_prefill(p, x[:, :S], cfg, window=window,
+                                 max_len=S + 1, use_dense=True)
+    dec, cache2 = attention_decode(p, x[:, S:S + 1], cache, cfg, window=window)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, S]),
+                               rtol=2e-4, atol=2e-4)
+    assert int(cache2.length) == S + 1
+
+
+def test_decode_ring_buffer_wraps():
+    cfg = CFG
+    p = init_attention_params(jax.random.PRNGKey(4), cfg)
+    B, W = 1, 8
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, 3 * W, cfg.d_model))
+    full = attention_forward(p, x, cfg, window=W, use_dense=True)
+    cache = init_kv_cache(cfg, B, max_len=3 * W, window=W)
+    outs = []
+    for t in range(3 * W):
+        o, cache = attention_decode(p, x[:, t:t + 1], cache, cfg, window=W)
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec[:, -W:]),
+                               np.asarray(full[:, -W:]), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("S,chunk,window", [(64, 16, None), (64, 16, 24),
+                                            (48, 16, None)])
+def test_grouped_gqa_matches_expanded(S, chunk, window):
+    """cfg.gqa_grouped path == standard head-expanded path."""
+    cfg = CFG.replace(gqa_grouped=True)
+    q, k, v = _qkv(jax.random.PRNGKey(7), 2, S, CFG)
+    out_g = chunked_causal_attention(q, k, v, cfg, window, chunk)
+    out_d = dense_causal_attention(q, k, v, CFG, window)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_perf_knobs_do_not_change_lm_outputs():
+    """All §Perf knobs are semantics-preserving (no pshard rules set)."""
+    from repro.configs import get_config
+    from repro.models.lm import init_lm_params, lm_forward
+    base = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_layers=2, num_experts=4, top_k=2, attn_chunk=16)
+    params = init_lm_params(jax.random.PRNGKey(0), base)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                base.vocab_size)
+    ref, _ = lm_forward(params, base, tokens)
+    for kw in ({"gqa_grouped": True}, {"inner_remat": True},
+               {"attn_dp_constraint": True}, {"moe_shard_constraints": True}):
+        out, _ = lm_forward(params, base.replace(**kw), tokens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4, err_msg=str(kw))
+
+
+def test_gqa_expansion_grouping():
+    """Each query-head group attends through its own kv head."""
+    cfg = CFG
+    q, k, v = _qkv(jax.random.PRNGKey(6), 1, 16, cfg)
+    out = dense_causal_attention(q, k, v, cfg, None)
+    # perturb kv head 1; only query heads 2,3 (group 1) may change
+    k2 = k.at[:, :, 1].add(1.0)
+    out2 = dense_causal_attention(q, k2, v, cfg, None)
+    diff = np.abs(np.asarray(out - out2)).sum(axis=(0, 1, 3))
+    assert diff[0] == 0 and diff[1] == 0 and diff[2] > 0 and diff[3] > 0

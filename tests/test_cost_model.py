@@ -1,0 +1,69 @@
+"""Cost-model properties reproducing the paper's §2.2 characterization."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core.cost_model import CostModel, Deployment
+
+CM = CostModel(get_config("deepseek_v32"), dep=Deployment(D=4, T=4, E=16))
+
+
+@given(st.integers(min_value=16_384, max_value=65_536))
+@settings(max_examples=30, deadline=None)
+def test_attention_quadratic_scaling(s):
+    """Paper Fig 3a: prefill attention latency ~ s^2 once the quadratic core
+    dominates the linear projections (s >= 16k for this geometry)."""
+    l1 = CM.attention_layer_latency([s])
+    l2 = CM.attention_layer_latency([2 * s])
+    assert 2.6 < l2 / l1 < 4.2
+
+
+def test_attention_superlinear_everywhere():
+    for s in (1024, 4096, 16_384):
+        assert CM.attention_layer_latency([2 * s]) \
+            > 1.9 * CM.attention_layer_latency([s])
+
+
+def test_batch_of_equal_total_tokens_differs():
+    """Paper Fig 4: 32k as 1x32k vs 32x1k differs by multiples (sum of
+    squares, not square of sum)."""
+    one_big = CM.attention_layer_latency([32_768])
+    many_small = CM.attention_layer_latency([1024] * 32)
+    assert one_big / many_small > 2.0
+
+
+@given(st.lists(st.integers(min_value=64, max_value=8192), min_size=2,
+                max_size=10))
+@settings(max_examples=30, deadline=None)
+def test_attention_latency_superadditive(lens):
+    """Merging requests into one batch is never slower than the sum of the
+    quadratic parts would suggest: latency(batch) <= sum latency(singletons)."""
+    merged = CM.attention_layer_latency(lens)
+    split = sum(CM.attention_layer_latency([l]) for l in lens)
+    assert merged <= split * 1.01
+
+
+def test_dispatch_bytes_deduped():
+    """Per-token payload <= K copies, >= 1 copy (distinct-device dedup)."""
+    t = 1000
+    b = CM.dispatch_bytes(t)
+    per_token = b / t / (CM.cfg.d_model * 2)
+    assert 1.0 <= per_token <= CM.cfg.top_k
+
+
+def test_async_dispatch_faster_than_sync_p2p():
+    """Paper Fig 14: sync P2P is ~4-6x slower; grows with busy receivers."""
+    for tokens in (512, 1024, 8192):
+        a = CM.async_dispatch_latency(tokens)
+        s = CM.sync_p2p_dispatch_latency(tokens)
+        assert s / a > 2.0
+        s_busy = CM.sync_p2p_dispatch_latency(tokens, receiver_busy=1e-3)
+        assert s_busy > s
+
+
+def test_moe_latency_monotone():
+    prev = 0.0
+    for t in (1, 100, 1000, 10_000, 100_000):
+        cur = CM.moe_layer_latency(t)
+        assert cur >= prev
+        prev = cur

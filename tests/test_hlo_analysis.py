@@ -1,0 +1,68 @@
+"""HLO static analyzer: loop-trip multipliers must be exact on known graphs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze
+
+MM_FLOPS = 2 * 256 * 512 * 512
+
+
+def _scan_fn(n):
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), ()
+        h, _ = jax.lax.scan(body, x, None, length=n)
+        return h
+    return f
+
+
+X = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+W = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+
+def test_scan_flops_scale_with_trip_count():
+    for n in (1, 2, 8, 17):
+        txt = jax.jit(_scan_fn(n)).lower(X, W).compile().as_text()
+        c = analyze(txt)
+        np.testing.assert_allclose(c.dot_flops, n * MM_FLOPS, rtol=1e-6)
+
+
+def test_nested_scan_flops():
+    def g(x, w):
+        def outer(h, _):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), ()
+            h, _ = jax.lax.scan(inner, h, None, length=3)
+            return h, ()
+        h, _ = jax.lax.scan(outer, x, None, length=4)
+        return h
+
+    txt = jax.jit(g).lower(X, W).compile().as_text()
+    c = analyze(txt)
+    np.testing.assert_allclose(c.dot_flops, 12 * MM_FLOPS, rtol=1e-6)
+
+
+def test_memory_bytes_grow_with_trips():
+    c1 = analyze(jax.jit(_scan_fn(2)).lower(X, W).compile().as_text())
+    c2 = analyze(jax.jit(_scan_fn(8)).lower(X, W).compile().as_text())
+    assert c2.memory_bytes > c1.memory_bytes * 2
+
+
+def test_grad_flops_about_triple():
+    def loss(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), ()
+        h, _ = jax.lax.scan(body, x, None, length=4)
+        return jnp.sum(h ** 2)
+
+    fwd = analyze(jax.jit(loss).lower(X, W).compile().as_text()).dot_flops
+    bwd = analyze(jax.jit(jax.grad(loss, argnums=1)).lower(X, W).compile()
+                  .as_text()).dot_flops
+    assert 2.0 <= bwd / fwd <= 4.5  # fwd+2 bwd matmuls (+ remat variance)
+
+
+def test_breakdown_lists_top_dots():
+    txt = jax.jit(_scan_fn(4)).lower(X, W).compile().as_text()
+    c = analyze(txt, breakdown=True)
+    assert c.top_dots and c.top_dots[0][0] == 4 * MM_FLOPS

@@ -1,0 +1,93 @@
+"""Scheduler property tests (hypothesis) + unit behavior."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.scheduler import (Batch, LengthAwareBatcher, balanced_partition,
+                                  chunk_requests, pair_batches)
+from repro.core.trace import Request
+
+
+def _reqs(lengths, t0=0.0):
+    return [Request(rid=i, arrival=t0 + i * 1e-3, length=l)
+            for i, l in enumerate(lengths)]
+
+
+lengths_strategy = st.lists(st.integers(min_value=31, max_value=32_768),
+                            min_size=1, max_size=60)
+
+
+@given(lengths_strategy)
+@settings(max_examples=60, deadline=None)
+def test_batcher_invariants(lengths):
+    b = LengthAwareBatcher(inflection=2048, max_tokens=32_768,
+                           exclusive_cutoff=16_384)
+    batches = []
+    now = 0.0
+    for r in _reqs(lengths):
+        now += 0.001
+        batches += b.add(r, now)
+    batches += b.flush(now)
+    seen = set()
+    for bt in batches:
+        # no request lost or duplicated
+        for r in bt.requests:
+            assert r.rid not in seen
+            seen.add(r.rid)
+        # exclusive batches hold exactly one long request
+        if bt.exclusive:
+            assert len(bt.requests) == 1
+            assert bt.requests[0].length > 16_384
+        else:
+            # non-exclusive batches never exceed the token cap
+            assert bt.total_tokens <= 32_768
+            for r in bt.requests:
+                assert r.length <= 16_384
+    assert seen == set(range(len(lengths)))
+
+
+@given(lengths_strategy, st.integers(min_value=1, max_value=8))
+@settings(max_examples=60, deadline=None)
+def test_balanced_partition_invariants(lengths, d):
+    reqs = _reqs(lengths)
+    groups, overflow = balanced_partition(reqs, d, max_tokens_per_group=32_768)
+    placed = [r.rid for g in groups for r in g] + [r.rid for r in overflow]
+    assert sorted(placed) == sorted(r.rid for r in reqs)
+    for g in groups:
+        total = sum(r.length for r in g)
+        assert total <= 32_768 or len(g) == 1
+
+
+@given(lengths_strategy, st.sampled_from([1024, 4096, 8192]))
+@settings(max_examples=40, deadline=None)
+def test_chunking_covers_requests_exactly(lengths, chunk):
+    reqs = _reqs(lengths)
+    chunks = chunk_requests(reqs, chunk)
+    per_req = {}
+    for c in chunks:
+        assert c.chunk_len <= chunk
+        per_req.setdefault(c.chunk_of.rid, []).append((c.chunk_start,
+                                                       c.chunk_len))
+    for r in reqs:
+        spans = sorted(per_req[r.rid])
+        pos = 0
+        for start, ln in spans:
+            assert start == pos
+            pos += ln
+        assert pos == r.length
+
+
+def test_pair_batches_pairs_non_exclusive():
+    batches = [Batch(requests=_reqs([100])) for _ in range(4)]
+    excl = Batch(requests=_reqs([20_000]), exclusive=True)
+    pairs = pair_batches(batches[:2] + [excl] + batches[2:])
+    assert (excl, None) in pairs
+    non_excl_pairs = [p for p in pairs if p[0] is not excl]
+    assert all(p[1] is not None for p in non_excl_pairs)
+
+
+def test_batcher_age_flush():
+    b = LengthAwareBatcher(inflection=10_000, max_wait=0.01)
+    out = b.add(Request(rid=0, arrival=0.0, length=100), now=0.0)
+    assert not out  # below inflection, not aged
+    out = b.poll(now=0.02)  # aged past max_wait
+    assert len(out) == 1 and out[0].total_tokens == 100

@@ -1,0 +1,57 @@
+"""End-to-end system behaviour: the paper's headline claims at reproduction
+scale (simulator) + the full serving/training CLI paths."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import Deployment
+from repro.core.simulator import SimConfig, run_sim, slo_throughput
+
+CFG = get_config("deepseek_v32")
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+       "HOME": "/root"}
+
+
+def test_headline_claim_slo_throughput_ordering():
+    """Paper Fig 13: ASAP > ChunkedPrefill > Default SLO throughput, with
+    ASAP's gain over ChunkedPrefill in the tens of percent (paper: +90%)."""
+    asap = slo_throughput(CFG, "asap", duration=40.0, refine=0.5,
+                          asap_dep=Deployment(D=4, T=4, E=16))
+    chunked = slo_throughput(CFG, "chunked", duration=40.0, refine=0.5)
+    default = slo_throughput(CFG, "default", duration=40.0, refine=0.5)
+    assert asap > chunked > default
+    assert asap / chunked >= 1.3, (asap, chunked)
+    assert asap / default >= 1.8, (asap, default)
+
+
+def test_ttft_curve_shape():
+    """Paper Fig 12: flat then sharply increasing after the knee."""
+    ttfts = [run_sim(CFG, SimConfig(mode="asap", rps=r, duration=30.0)).mean_ttft
+             for r in (0.5, 2.0, 16.0)]
+    assert ttfts[1] < 3 * ttfts[0]  # still near-flat
+    assert ttfts[2] > 4 * ttfts[1]  # far past the knee
+
+
+def test_serve_cli_executor_end_to_end():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--engine", "executor",
+         "--requests", "6"],
+        capture_output=True, text=True, timeout=600, env=ENV,
+        cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "completed" in out.stdout
+
+
+def test_train_cli_with_failure_recovery(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "olmo_1b",
+         "--smoke", "--steps", "8", "--batch", "2", "--seq", "32",
+         "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+         "--inject-failure-at", "6"],
+        capture_output=True, text=True, timeout=900, env=ENV,
+        cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "final loss" in out.stdout
