@@ -46,8 +46,11 @@ def run(quick: bool = False) -> dict:
     a_tot = a[b0]["kernel"] + a[b0]["non_kernel"]
     reduction = 1 - a[b0]["non_kernel"] / max(s[b0]["sync_wait"]
                                               + s[b0]["queuing"], 1e-9)
+    u = asap.moe_device_util
     return dict(rows=rows, short_nonkernel_share=share,
-                short_nonkernel_reduction=reduction)
+                short_nonkernel_reduction=reduction,
+                moe_util_mean=float(np.mean(u)), moe_util_max=float(np.max(u)),
+                moe_qdepth_mean=float(np.mean(asap.moe_device_mean_qdepth)))
 
 
 def main(quick: bool = False):
@@ -59,6 +62,9 @@ def main(quick: bool = False):
           f"{r['short_nonkernel_share']*100:.0f}% (paper: 85%); ASAP cuts "
           f"non-kernel delay by {r['short_nonkernel_reduction']*100:.0f}% "
           f"(paper: up to 80%)")
+    print(f"ASAP MoE stage: per-device util mean {r['moe_util_mean']*100:.0f}%"
+          f" / max {r['moe_util_max']*100:.0f}%, mean region-queue depth "
+          f"{r['moe_qdepth_mean']:.2f}")
     return r
 
 

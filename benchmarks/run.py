@@ -15,6 +15,7 @@ MODULES = [
     ("fig15_decomp", "Fig 15   TTFT decomposition"),
     ("fig16_18_ablations", "Fig16-18 mechanism ablations"),
     ("fig19_failures", "Fig 19   fault tolerance (beyond paper)"),
+    ("fig_ep_skew", "EP skew  per-device expert load (beyond paper)"),
     ("superkernel_dispatch", "SuperKernel AOT dispatch (structural)"),
     ("roofline", "Roofline table (from dry-run)"),
 ]

@@ -10,12 +10,18 @@ Key reproduced characterizations:
   * MoE dual-regime: memory-bound plateau then linear (paper Fig 3b), with the
     inflection point computed from the v5e ridge, not copied from the paper.
   * async-dispatch vs sync-P2P latency (paper Fig 14).
+  * per-MoE-device expert load under routing skew (ExpertLoadModel +
+    moe_device_latency) — the EP straggler effect MegaScale-Infer-style
+    disaggregation papers report as first-order (see ISSUE 1 / fig_ep_skew).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Sequence
+from typing import Optional, Sequence
+
+import numpy as np
 
 from repro.models.common import ModelConfig
 
@@ -60,6 +66,105 @@ class Deployment:
     @property
     def total_chips(self) -> int:
         return self.attention_chips + self.E
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertLoadModel:
+    """Routing-skew model: how `tokens · top_k` expert assignments spread over
+    the E MoE devices of an EP deployment.
+
+    Three modes (ISSUE 1 tentpole):
+      uniform — every expert equally popular (the seed aggregate model's
+                implicit assumption); skew `alpha` is ignored.
+      zipf    — Zipf(alpha) expert popularity with the hot-expert *identity*
+                redrawn per layer (decorrelated layers: a different device is
+                the straggler on each layer).
+      layer   — layer-correlated Zipf skew: the SAME hot experts on every
+                layer, i.e. one persistently overloaded device — the
+                worst-case straggler scenario.
+
+    Experts are placed on devices round-robin through a seeded permutation so
+    hot experts scatter across devices the way a static random placement
+    would.  All outputs are expectations (deterministic), not samples, so the
+    simulator stays reproducible and the per-device latency math vectorizes.
+    """
+    num_experts: int
+    top_k: int
+    ep: int  # number of MoE devices (Deployment.E)
+    mode: str = "uniform"  # uniform | zipf | layer
+    alpha: float = 0.0  # Zipf exponent; 0 == uniform
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in ("uniform", "zipf", "layer"):
+            raise ValueError(f"unknown skew mode {self.mode!r}")
+
+    @functools.lru_cache(maxsize=None)
+    def expert_fractions(self, layer: int = 0) -> np.ndarray:
+        """P(assignment -> expert i) for each of num_experts experts."""
+        n = max(self.num_experts, 1)
+        if self.mode == "uniform" or self.alpha <= 0.0:
+            return np.full(n, 1.0 / n)
+        ranks = np.arange(1, n + 1, dtype=np.float64) ** (-self.alpha)
+        p = ranks / ranks.sum()
+        # scatter popularity ranks over expert ids; `layer` redraws the
+        # permutation only in the decorrelated "zipf" mode.
+        perm_seed = self.seed if self.mode == "layer" else self.seed + layer
+        perm = np.random.default_rng(perm_seed).permutation(n)
+        return p[perm]
+
+    @functools.lru_cache(maxsize=None)
+    def device_fractions(self, layer: int = 0) -> np.ndarray:
+        """Fraction of all assignments landing on each of the ep devices."""
+        p = self.expert_fractions(layer if self.mode == "zipf" else 0)
+        dev = np.zeros(self.ep)
+        idx = np.arange(len(p)) % self.ep  # round-robin expert placement
+        np.add.at(dev, idx, p)
+        return dev
+
+    def device_loads(self, tokens: float, layer: int = 0) -> np.ndarray:
+        """Expected token-assignments per device for a `tokens`-token batch."""
+        return float(tokens) * self.top_k * self.device_fractions(layer)
+
+    def device_experts_hit(self, tokens: float, layer: int = 0) -> np.ndarray:
+        """Expected number of RESIDENT experts activated per device — drives
+        the weight-streaming (memory-bound) term of moe_device_latency."""
+        p = self.expert_fractions(layer if self.mode == "zipf" else 0)
+        a = max(float(tokens) * self.top_k, 0.0)
+        hit = 1.0 - np.power(np.clip(1.0 - p, 0.0, 1.0), a)
+        dev = np.zeros(self.ep)
+        np.add.at(dev, np.arange(len(p)) % self.ep, hit)
+        return dev
+
+    def hot_fraction(self, layers: int = 4) -> float:
+        """Max device fraction (over a few layers) — the straggler share used
+        to re-derive the batcher inflection point under skew."""
+        return float(max(self.device_fractions(l).max()
+                         for l in range(max(layers, 1))))
+
+    # ------- whole-iteration (L layers) matrices for the sync engine -------
+    def layer_device_loads(self, tokens: float, layers: int) -> np.ndarray:
+        """layers×ep expected token-assignments (one row per MoE layer)."""
+        if self.mode == "zipf":  # hot experts redrawn per layer
+            return np.stack([self.device_loads(tokens, l)
+                             for l in range(layers)])
+        return np.broadcast_to(self.device_loads(tokens, 0),
+                               (layers, self.ep)).copy()
+
+    def layer_device_hits(self, tokens: float, layers: int) -> np.ndarray:
+        if self.mode == "zipf":
+            return np.stack([self.device_experts_hit(tokens, l)
+                             for l in range(layers)])
+        return np.broadcast_to(self.device_experts_hit(tokens, 0),
+                               (layers, self.ep)).copy()
+
+    def layer_hot_factors(self, layers: int) -> np.ndarray:
+        """Hottest rank's traffic share relative to uniform (>= 1), per layer
+        — scales the blocking all-to-all's transfer term in the sync engine."""
+        if self.mode == "zipf":
+            return np.array([self.device_fractions(l).max() * self.ep
+                             for l in range(layers)])
+        return np.full(layers, self.device_fractions(0).max() * self.ep)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,13 +234,50 @@ class CostModel:
         act = 2.0 * tokens * K * c.d_model * 2 / self.dep.E / self.hw.hbm_bw
         return max(mem + act, comp)
 
-    def moe_inflection_tokens(self) -> int:
-        """Token count where the MoE stage leaves the memory-bound plateau."""
+    def moe_device_latency(self, assignments, experts_hit,
+                           total_tokens: float = 0.0):
+        """Latency of ONE MoE device processing `assignments` token-expert
+        assignments across `experts_hit` resident experts (one layer).
+
+        Vectorized: `assignments`/`experts_hit` may be numpy arrays (e.g. the
+        per-device load vector of a batch, or an L×E matrix for a whole sync
+        iteration) — the simulator computes all device latencies in one call
+        instead of per-event Python recomputation.
+
+        With uniform routing (assignments = tokens·K/E, experts_hit =
+        e_local·(1-(1-1/N)^(tokens·K))) this equals moe_layer_latency(tokens)
+        exactly, so skew=0 reproduces the seed aggregate model.
+        """
+        c = self.cfg
+        a = np.asarray(assignments, dtype=np.float64)
+        hit = np.asarray(experts_hit, dtype=np.float64)
+        shared = 1.0 if c.num_shared_experts else 0.0
+        mem = (hit + shared) * self.expert_bytes() / self.hw.hbm_bw
+        flops = a * 6.0 * c.d_model * c.expert_d_ff
+        if c.num_shared_experts:
+            # shared experts see every token; token shards split uniformly
+            flops = flops + float(total_tokens) * c.num_shared_experts \
+                * 6.0 * c.d_model * c.expert_d_ff / self.dep.E
+        comp = flops / (self.hw.peak_flops * self.hw.flop_efficiency)
+        act = 2.0 * a * c.d_model * 2 / self.hw.hbm_bw
+        out = np.maximum(mem + act, comp)
+        out = np.where(a + float(total_tokens) > 0, out, 0.0)
+        return out if out.ndim else float(out)
+
+    def moe_inflection_tokens(self, hot_fraction: Optional[float] = None) -> int:
+        """Token count where the MoE stage leaves the memory-bound plateau.
+
+        `hot_fraction` is the share of all token-assignments landing on the
+        most-loaded device (ExpertLoadModel.hot_fraction()); default 1/E
+        (uniform routing). Under skew the hottest device goes compute-bound
+        at FEWER aggregate tokens, so the batcher's inflection target shrinks.
+        """
+        frac = hot_fraction if hot_fraction is not None else 1.0 / self.dep.E
         lo, hi = 1, 1 << 22
         while lo < hi:
             mid = (lo + hi) // 2
             c = self.cfg
-            flops = mid * c.top_k * 6.0 * c.d_model * c.expert_d_ff / self.dep.E
+            flops = mid * c.top_k * 6.0 * c.d_model * c.expert_d_ff * frac
             comp = flops / (self.hw.peak_flops * self.hw.flop_efficiency)
             e_local = max(c.num_experts // self.dep.E, 1)
             mem = e_local * self.expert_bytes() / self.hw.hbm_bw

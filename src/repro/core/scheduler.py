@@ -2,7 +2,10 @@
 
 ASAP (§3.3): length-aware batching + dual-batch pairing. The batcher only has
 to exceed the MoE inflection point — it does NOT balance across DP groups,
-because the async pipeline lets groups progress independently.
+because the async pipeline lets groups progress independently. Under
+expert-routing skew the inflection target is the HOTTEST MoE device's
+compute-bound knee, not the aggregate stage's (the simulator derives it via
+CostModel.moe_inflection_tokens(ExpertLoadModel.hot_fraction())).
 
 Baselines (§5.1):
   Default        — vLLM-like: aggregate queued requests and partition into D
@@ -58,7 +61,10 @@ class LengthAwareBatcher:
     max_wait: float = 0.02  # seconds a pending batch may age before flush
 
     _pending: List[Request] = dataclasses.field(default_factory=list)
-    _pending_since: Optional[float] = None
+    # per-request enqueue times: the age clock tracks the OLDEST pending
+    # request (_pending_t[0]), so a partial emission does not restart the
+    # timer for leftovers (which would let them wait up to 2x max_wait).
+    _pending_t: List[float] = dataclasses.field(default_factory=list)
 
     def add(self, req: Request, now: float) -> List[Batch]:
         out: List[Batch] = []
@@ -66,9 +72,8 @@ class LengthAwareBatcher:
             out.append(Batch(requests=[req], exclusive=True))
             out.extend(self.poll(now))
             return out
-        if not self._pending:
-            self._pending_since = now
         self._pending.append(req)
+        self._pending_t.append(now)
         out.extend(self.poll(now))
         return out
 
@@ -84,12 +89,11 @@ class LengthAwareBatcher:
                 cut = i + 1
             if cut == 0:
                 break
-            aged = (self._pending_since is not None
-                    and now - self._pending_since >= self.max_wait)
+            aged = now - self._pending_t[0] >= self.max_wait
             if total >= self.inflection or total >= self.max_tokens or aged:
                 out.append(Batch(requests=self._pending[:cut]))
                 self._pending = self._pending[cut:]
-                self._pending_since = now if self._pending else None
+                self._pending_t = self._pending_t[cut:]
                 if aged and total < self.inflection:
                     break
             else:
@@ -101,7 +105,7 @@ class LengthAwareBatcher:
         if self._pending:
             out.append(Batch(requests=self._pending))
             self._pending = []
-            self._pending_since = None
+            self._pending_t = []
         return out
 
 

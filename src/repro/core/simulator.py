@@ -3,18 +3,38 @@
 Two engines over one hardware/cost model (core/cost_model.py — TPU v5e):
 
   AsapSim — the paper's system: disaggregated attention (D groups × T chips) +
-    MoE stage (E chips); barrier-free async pipeline; length-aware batching;
-    dual-batch interleaving; comm-compute overlap (triple stream, MoE side);
-    layer-oblivious super kernel (no per-layer host dispatch on the critical
-    path). Every mechanism is an ablation flag (Figs 16–18).
+    MoE stage modeled as E *individual* expert-parallel devices (§3.4.2): each
+    device has its own region queue, polls dispatch regions out-of-order
+    (arrival order, not layer/group order), and charges latency from the
+    per-device expert-load model (ExpertLoadModel — uniform / Zipf-hot-expert /
+    layer-correlated routing skew). Triple-stream comm/compute overlap and
+    host-dispatch cost are applied per MoE device (§4.3). A batch's MoE layer
+    completes when the LAST of the E devices drains its region, so expert-load
+    stragglers lengthen the layer. Because each device serves its queue FIFO,
+    the per-device clocks advance in virtual time (one vectorized numpy step +
+    one event per batch-layer) — exact queueing semantics at the seed's event
+    cost. Barrier-free async pipeline; length-aware batching (inflection
+    derived from the HOTTEST device under skew); dual-batch interleaving;
+    layer-oblivious super kernel. Every mechanism is an ablation flag
+    (Figs 16–18).
 
   SyncSim — synchronous baselines: `default` (token-count-balanced DP batching,
     global barrier per MoE layer — vLLM-like) and `chunked` (8k chunked
-    prefill). Attention/MoE share the same chips (DP·T == EP geometry).
+    prefill). Attention/MoE share the same chips (DP·T == EP geometry). The
+    blocking all-to-all and the per-layer MoE step straddle the SLOWEST EP
+    rank (not the mean), so routing skew widens the sync-vs-async gap
+    (benchmarks/fig_ep_skew.py).
+
+Routing skew knob: `SimConfig.ep_skew` / `ep_skew_mode` (override) falling
+back to `TraceConfig.ep_skew` / `ep_skew_mode` (workload-level default).
+skew 0 == uniform routing and reproduces the seed aggregate-server model's
+latencies exactly (see tests/test_simulator.py).
 
 Failure injection models a DP-group outage: ASAP requeues only that group's
-batches; a synchronous engine loses the whole in-flight iteration (global
-barrier) — the fault-tolerance contrast quantified in benchmarks.
+batches (stale in-flight events are invalidated by a per-batch epoch counter);
+a synchronous engine loses the whole in-flight iteration (global barrier) —
+the iteration is cancelled, its requests requeued, and re-run after the
+repair window — the fault-tolerance contrast quantified in benchmarks.
 """
 from __future__ import annotations
 
@@ -27,7 +47,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import CostModel, Deployment, Hardware, V5E
+from repro.core.cost_model import (CostModel, Deployment, ExpertLoadModel,
+                                   Hardware, V5E)
 from repro.core.scheduler import (Batch, LengthAwareBatcher, balanced_partition,
                                   chunk_requests)
 from repro.core.trace import Request, TraceConfig, generate_requests
@@ -45,6 +66,9 @@ class SimConfig:
     interleave: bool = True
     overlap: bool = True
     super_kernel: bool = True
+    # expert-parallel routing skew (None -> fall back to trace.ep_skew*)
+    ep_skew: Optional[float] = None  # Zipf exponent; 0 == uniform
+    ep_skew_mode: Optional[str] = None  # uniform | zipf | layer
     # ChunkedPrefill
     chunk: int = 8192
     # failure injection
@@ -52,12 +76,25 @@ class SimConfig:
     failure_duration: float = 5.0
     failure_group: int = 0
 
+    def resolved_skew(self) -> Tuple[str, float]:
+        """Effective (mode, alpha): SimConfig overrides TraceConfig."""
+        alpha = self.ep_skew if self.ep_skew is not None else self.trace.ep_skew
+        mode = self.ep_skew_mode if self.ep_skew_mode is not None \
+            else self.trace.ep_skew_mode
+        if alpha <= 0.0:
+            mode = "uniform"
+        return mode, float(alpha)
+
 
 @dataclasses.dataclass
 class SimResult:
     requests: List[Request]
     decomposition: Dict[int, Dict[str, float]]  # rid -> component seconds
     total_requests: int = 0
+    # per-MoE-device stage stats (None when the engine does not model them)
+    moe_device_util: Optional[np.ndarray] = None  # busy fraction per device
+    moe_device_mean_qdepth: Optional[np.ndarray] = None  # time-avg region queue
+    moe_device_peak_qdepth: Optional[np.ndarray] = None
 
     @property
     def ttfts(self) -> np.ndarray:
@@ -75,6 +112,13 @@ class SimResult:
 
     def completed_fraction(self, total: Optional[int] = None) -> float:
         return len(self.ttfts) / max(total or self.total_requests, 1)
+
+    def moe_imbalance(self) -> float:
+        """max/mean per-device utilization — 1.0 means perfectly balanced."""
+        u = self.moe_device_util
+        if u is None or not len(u) or u.mean() <= 0:
+            return 1.0
+        return float(u.max() / u.mean())
 
 
 # ---------------------------------------------------------------------------
@@ -107,7 +151,7 @@ class _Engine:
 
 class _BatchState:
     __slots__ = ("batch", "layer", "group", "kernel_time", "t_enqueued",
-                 "t_started", "_phase")
+                 "t_started", "_phase", "epoch")
 
     def __init__(self, batch: Batch):
         self.batch = batch
@@ -117,6 +161,12 @@ class _BatchState:
         self.t_enqueued = 0.0
         self.t_started: Optional[float] = None
         self._phase = "wait_attn"
+        # Generation counter: bumped whenever the batch is reset (failure
+        # requeue). Every scheduled event captures the epoch at schedule time
+        # and is dropped on fire if the batch has since been reset — a stale
+        # _attn_done/_moe_*/_combined can no longer advance a victim batch
+        # that is simultaneously sitting in `pending`.
+        self.epoch = 0
 
 
 class AsapSim(_Engine):
@@ -125,16 +175,36 @@ class AsapSim(_Engine):
         super().__init__()
         self.cfg, self.sim, self.dep = cfg, sim, dep
         self.cm = CostModel(cfg, hw, dep)
+        mode, alpha = sim.resolved_skew()
+        self.load_model = ExpertLoadModel(
+            num_experts=max(cfg.num_experts, 1), top_k=max(cfg.top_k, 1),
+            ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed)
         self.batcher = LengthAwareBatcher(
-            inflection=self.cm.moe_inflection_tokens(),
+            inflection=self.cm.moe_inflection_tokens(
+                self.load_model.hot_fraction()),
             max_tokens=dep.max_batch_tokens)
         self.pending: deque[_BatchState] = deque()
         # group state
         self.g_active: List[List[_BatchState]] = [[] for _ in range(dep.D)]
         self.g_busy: List[bool] = [False] * dep.D
         self.g_alive: List[bool] = [True] * dep.D
-        self.moe_q: deque[_BatchState] = deque()
-        self.moe_busy = False
+        # Per-MoE-device state. Each device serves its region queue FIFO, so
+        # the queues are modeled EXACTLY in virtual time: `moe_dev_free[d]` is
+        # when device d drains everything currently buffered for it, and a
+        # batch-layer needs only ONE completion event (at the slowest
+        # device's finish time) instead of E per-device events — the numpy
+        # vectorization that makes slo_throughput's bisection loop fast.
+        self.ep = dep.E
+        self.moe_dev_free = np.zeros(self.ep)
+        self.moe_dev_busy_time = np.zeros(self.ep)
+        self._moe_backlog: deque = deque()  # per-job end-time vectors (stats)
+        self._q_area = np.zeros(self.ep)  # ∫ waiting-region count dt
+        self._q_peak = np.zeros(self.ep, dtype=np.int64)
+        # (tokens, layer-key) -> (max base latency, per-device drain latency
+        # vector); batches repeat the same token count across all layers, so
+        # this collapses the per-event cost-model math to a dict hit
+        self._moe_lat_cache: Dict[Tuple[int, int],
+                                  Tuple[float, np.ndarray]] = {}
         self.done: List[Request] = []
         self.decomp: Dict[int, Dict[str, float]] = {}
 
@@ -210,42 +280,73 @@ class AsapSim(_Engine):
             + self.cm.dispatch_send_occupancy(st.batch.total_tokens)
         st.kernel_time += lat
         self.g_busy[g] = True
-        self.at(self.now + lat, lambda st=st, g=g: self._attn_done(st, g))
+        self.at(self.now + lat,
+                lambda st=st, g=g, e=st.epoch: self._attn_done(st, g, e))
 
-    def _attn_done(self, st: _BatchState, g: int):
+    def _attn_done(self, st: _BatchState, g: int, epoch: int):
+        if epoch != st.epoch:
+            return  # stale: batch was reset by a failure after scheduling
         self.g_busy[g] = False
         st._phase = "dispatch"
         self._try_attn(g)
         self.at(self.now + self.cm.hw.hop_latency,
-                lambda st=st: self._moe_arrive(st))
+                lambda st=st, e=epoch: self._moe_arrive(st, e))
 
     # ------------------------------------------------------------------ moe
-    def _moe_arrive(self, st: _BatchState):
-        self.moe_q.append(st)
-        self._try_moe()
+    def _moe_arrive(self, st: _BatchState, epoch: int):
+        """Batch tokens land in the shared buffer: one dispatch region per MoE
+        device. Every device drains its FIFO region queue independently
+        (out-of-order w.r.t. layer/group ids — arrival order); the layer's
+        combine fires when the LAST device finishes its region. Per-device
+        drain latencies and queue clocks advance in one vectorized numpy step
+        per batch-layer, not per device event.
 
-    def _try_moe(self):
-        if self.moe_busy or not self.moe_q:
+        A region buffered for a batch that is later reset by a failure is
+        still drained (the MoE devices cannot know the attention group died);
+        the completion event is dropped via the epoch guard."""
+        if epoch != st.epoch:
             return
-        st = self.moe_q.popleft()
-        lat = self.cm.moe_layer_latency(st.batch.total_tokens)
-        if not self.sim.super_kernel:
-            # out-of-order layer id -> kernels cannot be pre-launched (§3.4.2)
-            lat += self.cm.hw.host_dispatch
-        if not self.sim.overlap:
-            # no comm streams: recv-migrate + combine-send run on main stream
-            lat += self.cm.moe_comm_occupancy(st.batch.total_tokens)
-        st.kernel_time += self.cm.moe_layer_latency(st.batch.total_tokens)
-        self.moe_busy = True
-        self.at(self.now + lat, lambda st=st: self._moe_done(st))
+        tokens = st.batch.total_tokens
+        lkey = st.layer if self.load_model.mode == "zipf" else 0
+        cached = self._moe_lat_cache.get((tokens, lkey))
+        if cached is None:
+            loads = self.load_model.device_loads(tokens, lkey)
+            hits = self.load_model.device_experts_hit(tokens, lkey)
+            base = self.cm.moe_device_latency(loads, hits, tokens)
+            lats = base
+            if not self.sim.super_kernel:
+                # out-of-order layer id -> kernels cannot be pre-launched
+                # (§3.4.2); every device pays the host dispatch per region
+                lats = lats + self.cm.hw.host_dispatch
+            if not self.sim.overlap:
+                # no comm streams: recv-migrate + combine-send run on each
+                # device's main stream (moe_comm_occupancy is per-device share)
+                lats = lats + self.cm.moe_comm_occupancy(tokens)
+            cached = (float(np.max(base)), lats)
+            self._moe_lat_cache[(tokens, lkey)] = cached
+        base_max, lats = cached
+        st.kernel_time += base_max
+        starts = np.maximum(self.moe_dev_free, self.now)
+        ends = starts + lats
+        self.moe_dev_free = ends
+        self.moe_dev_busy_time += lats
+        # stats: each region waits (start - now) in its device's queue, which
+        # integrates to the time-weighted waiting-region count
+        self._q_area += starts - self.now
+        bl = self._moe_backlog
+        while bl and float(bl[0].max()) <= self.now:
+            bl.popleft()
+        if bl:
+            depth = (np.vstack(bl) > self.now).sum(axis=0)
+            np.maximum(self._q_peak, depth, out=self._q_peak)
+        bl.append(ends)
+        c = self.cm.combine_wire_latency(tokens)
+        self.at(float(ends.max()) + c,
+                lambda st=st, e=epoch: self._combined(st, e))
 
-    def _moe_done(self, st: _BatchState):
-        self.moe_busy = False
-        self._try_moe()
-        c = self.cm.combine_wire_latency(st.batch.total_tokens)
-        self.at(self.now + c, lambda st=st: self._combined(st))
-
-    def _combined(self, st: _BatchState):
+    def _combined(self, st: _BatchState, epoch: int):
+        if epoch != st.epoch:
+            return
         st.layer += 1
         if st.layer >= self.cfg.num_layers:
             self._complete(st)
@@ -273,9 +374,12 @@ class AsapSim(_Engine):
     def _fail(self):
         g = self.sim.failure_group
         self.g_alive[g] = False
+        self.g_busy[g] = False  # in-flight attention is lost with the group
         victims = self.g_active[g]
         self.g_active[g] = []
-        for st in victims:  # restart from layer 0 (prefill state lost)
+        # reversed so the OLDEST victim ends up at the head of `pending`
+        for st in reversed(victims):  # restart from layer 0 (state lost)
+            st.epoch += 1  # invalidate every in-flight event for this batch
             st.layer = 0
             st.group = None
             st._phase = "wait_attn"
@@ -291,7 +395,12 @@ class AsapSim(_Engine):
     def simulate(self) -> SimResult:
         self.start()
         self.run(horizon=self.sim.duration * 4 + 60.0)
-        return SimResult(self.done, self.decomp, self.total_requests)
+        elapsed = max(self.now, 1e-9)
+        return SimResult(
+            self.done, self.decomp, self.total_requests,
+            moe_device_util=self.moe_dev_busy_time / elapsed,
+            moe_device_mean_qdepth=self._q_area / elapsed,
+            moe_device_peak_qdepth=self._q_peak.copy())
 
 
 # ---------------------------------------------------------------------------
@@ -301,17 +410,30 @@ class AsapSim(_Engine):
 
 class SyncSim(_Engine):
     """`default` and `chunked` modes. Attention DP and EP share the chips
-    (e.g. D=8, T=4, EP=32 on 32 chips — DeepSeek-V3 prefill geometry)."""
+    (e.g. D=8, T=4, EP=32 on 32 chips — DeepSeek-V3 prefill geometry).
+
+    The per-layer MoE step and the blocking all-to-all both straddle the
+    SLOWEST EP rank: with routing skew the iteration is gated by the hottest
+    device, which is exactly the straggler effect the async engine sidesteps.
+    """
 
     def __init__(self, cfg: ModelConfig, sim: SimConfig,
                  dep: Deployment = Deployment(D=8, T=4, E=32), hw: Hardware = V5E):
         super().__init__()
         self.cfg, self.sim, self.dep = cfg, sim, dep
         self.cm = CostModel(cfg, hw, dep)
+        mode, alpha = sim.resolved_skew()
+        self.load_model = ExpertLoadModel(
+            num_experts=max(cfg.num_experts, 1), top_k=max(cfg.top_k, 1),
+            ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed)
         self.queue: deque[Request] = deque()
         self.chunk_progress: Dict[int, int] = {}  # rid -> tokens prefilled
         self.engine_busy = False
         self.frozen_until = 0.0
+        # in-flight iteration bookkeeping (failure cancel/re-run)
+        self._iter_epoch = 0
+        self._inflight: Optional[List[Request]] = None
+        self.moe_rank_time = np.zeros(dep.E)
         self.done: List[Request] = []
         self.decomp: Dict[int, Dict[str, float]] = {}
 
@@ -329,19 +451,39 @@ class SyncSim(_Engine):
         self._try_iteration()
 
     def _fail(self):
-        # global barrier: whole engine stalls for the repair window; the
-        # in-flight iteration is lost and re-run (handled by freezing).
+        # global barrier: whole engine stalls for the repair window AND the
+        # in-flight iteration is lost — cancel its completion event (epoch
+        # bump), requeue its requests at the head of the queue, and re-run
+        # the iteration once the engine thaws.
         self.frozen_until = self.now + self.sim.failure_duration
+        if self.engine_busy:
+            self._iter_epoch += 1  # the scheduled _iteration_done is now stale
+            self.engine_busy = False
+            if self._inflight:  # default mode removed them from the queue
+                self.queue.extendleft(reversed(self._inflight))
+            self._inflight = None
+        self.at(self.frozen_until, self._try_iteration)
 
-    def _sync_comm_latency(self, tokens: int) -> float:
+    def _moe_layer_latencies(self, tokens: int) -> np.ndarray:
+        """L×E per-rank MoE latencies for one iteration, fully vectorized."""
+        L = self.cfg.num_layers
+        loads = self.load_model.layer_device_loads(tokens, L)
+        hits = self.load_model.layer_device_hits(tokens, L)
+        return np.atleast_2d(self.cm.moe_device_latency(loads, hits, tokens))
+
+    def _sync_comm_latency(self, tokens: int,
+                           hot_factor: np.ndarray = None) -> np.ndarray:
         """Blocking all-to-all dispatch+combine over all chips: rendezvous
         (log-depth handshake) + transfer at derated effective bandwidth
-        (no compute overlap inside a blocking collective)."""
+        (no compute overlap inside a blocking collective). The transfer term
+        straddles the most-loaded EP rank: `hot_factor` (>= 1) is the hottest
+        rank's share of traffic relative to uniform, per layer."""
         hw = self.cm.hw
         b = 2.0 * self.cm.dispatch_bytes(tokens)  # dispatch + combine
         rendezvous = 2.0 * hw.p2p_handshake * math.log2(self.dep.total_chips)
-        return rendezvous + b / (self.dep.total_chips * hw.ici_bw
-                                 * hw.sync_bw_derate) + 2 * hw.base_latency
+        transfer = b / (self.dep.total_chips * hw.ici_bw * hw.sync_bw_derate)
+        hf = np.ones(1) if hot_factor is None else np.asarray(hot_factor)
+        return rendezvous + transfer * hf + 2 * hw.base_latency
 
     def _try_iteration(self):
         if self.engine_busy or not self.queue:
@@ -356,6 +498,7 @@ class SyncSim(_Engine):
             # ChunkedPrefill reduces per-device seq budget to `chunk`/T tokens
             # (paper §5.1: 8k chunks -> 2k per attention device with T=4).
             picked, lens, prefixes = self._pick_chunks(D, self.sim.chunk)
+            self._inflight = None  # chunked keeps requests in the queue
         else:
             take: List[Request] = list(self.queue)
             groups, overflow = balanced_partition(take, D, cap)
@@ -364,22 +507,33 @@ class SyncSim(_Engine):
             self.queue = deque([r for r in self.queue if r.rid not in kept])
             lens = [[r.length for r in g] for g in groups]
             prefixes = [[0] * len(g) for g in groups]
+            self._inflight = [r for g in groups for r in g]
 
         total_tokens = sum(sum(l) for l in lens)
         if total_tokens == 0:
             self.engine_busy = False
+            self._inflight = None
             return
         attn = [self.cm_group_attention(lens[g], prefixes[g]) for g in range(D)]
         attn_max = max(attn)
-        moe = self.cm.moe_layer_latency(total_tokens)
-        comm = self._sync_comm_latency(total_tokens)
         L = self.cfg.num_layers
-        iter_time = L * (attn_max + moe + comm)
+        moe_ranks = self._moe_layer_latencies(total_tokens)  # L×E
+        moe_layers = moe_ranks.max(axis=1)  # barrier: slowest EP rank
+        hot = self.load_model.layer_hot_factors(L)
+        comm_layers = self._sync_comm_latency(total_tokens, hot)
+        moe = float(moe_layers.mean())
+        comm = float(np.mean(comm_layers))
+        iter_time = L * attn_max + float(moe_layers.sum()) \
+            + float(np.sum(comm_layers))
         t_end = self.now + iter_time
         t_start = self.now
+        epoch = self._iter_epoch
+        # rank busy time is charged at COMPLETION so a failure-cancelled
+        # iteration is not double-counted when it re-runs
+        rank_time = moe_ranks.sum(axis=0)
         self.at(t_end, lambda: self._iteration_done(picked, lens, attn,
                                                     attn_max, moe, comm,
-                                                    t_start))
+                                                    t_start, epoch, rank_time))
 
     def cm_group_attention(self, lens: List[int], prefixes: List[int]) -> float:
         """Attention latency of one DP group for one layer (chunk-aware)."""
@@ -417,9 +571,14 @@ class SyncSim(_Engine):
         self._picked_chunks = groups
         return picked, lens, prefixes
 
-    def _iteration_done(self, picked, lens, attn, attn_max, moe, comm, t_start):
+    def _iteration_done(self, picked, lens, attn, attn_max, moe, comm, t_start,
+                        epoch: int, rank_time: np.ndarray):
+        if epoch != self._iter_epoch:
+            return  # iteration was cancelled by a failure; it will re-run
         L = self.cfg.num_layers
         self.engine_busy = False
+        self._inflight = None
+        self.moe_rank_time += rank_time
         if self.sim.mode == "chunked":
             for g in self._picked_chunks:
                 for (r, start, clen) in g:
@@ -448,7 +607,9 @@ class SyncSim(_Engine):
     def simulate(self) -> SimResult:
         self.start()
         self.run(horizon=self.sim.duration * 4 + 60.0)
-        return SimResult(self.done, self.decomp, self.total_requests)
+        elapsed = max(self.now, 1e-9)
+        return SimResult(self.done, self.decomp, self.total_requests,
+                         moe_device_util=self.moe_rank_time / elapsed)
 
 
 # ---------------------------------------------------------------------------
@@ -473,7 +634,10 @@ def slo_throughput(cfg: ModelConfig, mode: str, slo: float = 5.0,
     """Max RPS sustained with mean TTFT <= slo and >=99% completion.
 
     Coarse doubling scan, then bisection refinement to `refine` RPS resolution
-    (the paper's ablation effects are 6–14%, so resolution matters)."""
+    (the paper's ablation effects are 6–14%, so resolution matters). When even
+    the initial 0.5 RPS probe misses the SLO, the (0, 0.5] interval is still
+    bisected — slow configs report their true (small) sustainable rate
+    instead of a silent 0.0 floor."""
 
     def ok(rps: float) -> bool:
         sim = SimConfig(mode=mode, rps=rps, duration=duration, slo=slo, **kw)
@@ -483,8 +647,6 @@ def slo_throughput(cfg: ModelConfig, mode: str, slo: float = 5.0,
     lo, hi = 0.0, 0.5
     while hi <= rps_max and ok(hi):
         lo, hi = hi, hi * 2
-    if lo == 0.0:
-        return 0.0
     while hi - lo > refine:
         mid = (lo + hi) / 2
         if ok(mid):

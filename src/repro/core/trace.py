@@ -37,6 +37,13 @@ class TraceConfig:
     min_len: int = 31
     max_len: int = 32_768  # paper excludes > 32k (§4.2)
     seed: int = 0
+    # Workload-level expert-routing skew (consumed by ExpertLoadModel via the
+    # simulator; SimConfig.ep_skew/ep_skew_mode override when set):
+    #   ep_skew      — Zipf exponent over expert popularity; 0.0 == uniform.
+    #   ep_skew_mode — "uniform" | "zipf" (hot experts redrawn per layer) |
+    #                  "layer" (layer-correlated: same hot experts every layer).
+    ep_skew: float = 0.0
+    ep_skew_mode: str = "zipf"
 
 
 def sample_lengths(n: int, tc: TraceConfig = TraceConfig()) -> np.ndarray:

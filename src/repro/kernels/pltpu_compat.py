@@ -1,0 +1,10 @@
+"""Pallas-TPU API compat for the pinned jax toolchain.
+
+jax renamed TPUCompilerParams -> CompilerParams in newer releases; resolve
+whichever spelling this jax provides so the kernels run on the pinned 0.4.x
+toolchain and on current jax alike.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

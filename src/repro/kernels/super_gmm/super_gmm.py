@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
 
 def _kernel(layer_ref, x_ref, w_ref, o_ref):
     ki = pl.program_id(3)
@@ -74,7 +76,7 @@ def super_gmm(layer_id: jax.Array, w: jax.Array, x: jax.Array, *,
                                    lambda e, ci, ni, ki, layer: (e, ci, ni)),
         ),
         out_shape=jax.ShapeDtypeStruct((E, C, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -79,11 +79,18 @@ def run_executor(args):
 def run_simulation(args):
     cfg = get_config("deepseek_v32")
     res = run_sim(cfg, SimConfig(mode=args.mode, rps=args.rps,
-                                 duration=args.duration))
-    print(f"mode={args.mode} rps={args.rps} duration={args.duration}s")
+                                 duration=args.duration,
+                                 ep_skew=args.ep_skew,
+                                 ep_skew_mode=args.ep_skew_mode))
+    print(f"mode={args.mode} rps={args.rps} duration={args.duration}s "
+          f"ep_skew={args.ep_skew} ({args.ep_skew_mode})")
     print(f"  completed: {len(res.ttfts)}/{res.total_requests}")
     print(f"  mean TTFT: {res.mean_ttft*1000:.0f} ms   "
           f"p99: {res.p99_ttft*1000:.0f} ms")
+    if res.moe_device_util is not None:
+        u = res.moe_device_util
+        print(f"  MoE device util: mean {u.mean()*100:.0f}%  "
+              f"max {u.max()*100:.0f}%  imbalance {res.moe_imbalance():.2f}x")
 
 
 def main():
@@ -95,6 +102,11 @@ def main():
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--mode", default="asap",
                     choices=["asap", "default", "chunked"])
+    ap.add_argument("--ep-skew", type=float, default=0.0,
+                    help="Zipf exponent of expert-routing skew (0 = uniform)")
+    ap.add_argument("--ep-skew-mode", default="zipf",
+                    choices=["uniform", "zipf", "layer"],
+                    help="hot experts per-layer (zipf) or layer-correlated")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.engine == "executor":

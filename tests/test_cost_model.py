@@ -1,21 +1,26 @@
-"""Cost-model properties reproducing the paper's §2.2 characterization."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Cost-model properties reproducing the paper's §2.2 characterization.
+
+Formerly hypothesis property tests; rewritten as seeded numpy.random sweeps
+(hypothesis is not available in the pinned environment — ISSUE 1)."""
+import numpy as np
+import pytest
 
 from repro.configs import get_config
-from repro.core.cost_model import CostModel, Deployment
+from repro.core.cost_model import CostModel, Deployment, ExpertLoadModel
 
 CM = CostModel(get_config("deepseek_v32"), dep=Deployment(D=4, T=4, E=16))
 
 
-@given(st.integers(min_value=16_384, max_value=65_536))
-@settings(max_examples=30, deadline=None)
-def test_attention_quadratic_scaling(s):
+@pytest.mark.parametrize("seed", range(6))
+def test_attention_quadratic_scaling(seed):
     """Paper Fig 3a: prefill attention latency ~ s^2 once the quadratic core
     dominates the linear projections (s >= 16k for this geometry)."""
-    l1 = CM.attention_layer_latency([s])
-    l2 = CM.attention_layer_latency([2 * s])
-    assert 2.6 < l2 / l1 < 4.2
+    rng = np.random.default_rng(seed)
+    for s in rng.integers(16_384, 65_536, size=5):
+        s = int(s)
+        l1 = CM.attention_layer_latency([s])
+        l2 = CM.attention_layer_latency([2 * s])
+        assert 2.6 < l2 / l1 < 4.2
 
 
 def test_attention_superlinear_everywhere():
@@ -32,12 +37,13 @@ def test_batch_of_equal_total_tokens_differs():
     assert one_big / many_small > 2.0
 
 
-@given(st.lists(st.integers(min_value=64, max_value=8192), min_size=2,
-                max_size=10))
-@settings(max_examples=30, deadline=None)
-def test_attention_latency_superadditive(lens):
+@pytest.mark.parametrize("seed", range(10))
+def test_attention_latency_superadditive(seed):
     """Merging requests into one batch is never slower than the sum of the
     quadratic parts would suggest: latency(batch) <= sum latency(singletons)."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(2, 11))
+    lens = [int(x) for x in rng.integers(64, 8193, size=n)]
     merged = CM.attention_layer_latency(lens)
     split = sum(CM.attention_layer_latency([l]) for l in lens)
     assert merged <= split * 1.01
@@ -67,3 +73,92 @@ def test_moe_latency_monotone():
         cur = CM.moe_layer_latency(t)
         assert cur >= prev
         prev = cur
+
+
+# ----------------------------------------------------------------------
+# Per-device expert-parallel model (ISSUE 1 tentpole)
+# ----------------------------------------------------------------------
+
+
+def _load_model(mode="uniform", alpha=0.0, seed=0):
+    c = CM.cfg
+    return ExpertLoadModel(num_experts=c.num_experts, top_k=c.top_k,
+                           ep=CM.dep.E, mode=mode, alpha=alpha, seed=seed)
+
+
+@pytest.mark.parametrize("tokens", [100, 1000, 8192, 32_768])
+def test_uniform_per_device_matches_aggregate(tokens):
+    """skew=0: the slowest (== every) device reproduces the seed aggregate
+    moe_layer_latency exactly — the per-device refactor is a strict
+    generalization of the old single-server model."""
+    lm = _load_model()
+    lat = CM.moe_device_latency(lm.device_loads(tokens),
+                                lm.device_experts_hit(tokens), tokens)
+    agg = CM.moe_layer_latency(tokens)
+    assert lat.shape == (CM.dep.E,)
+    np.testing.assert_allclose(lat, agg, rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_device_fractions_are_distributions(seed):
+    rng = np.random.default_rng(seed)
+    for mode in ("uniform", "zipf", "layer"):
+        alpha = float(rng.uniform(0.3, 2.0))
+        lm = _load_model(mode, alpha, seed)
+        for layer in (0, 1, 7):
+            f = lm.device_fractions(layer)
+            assert f.shape == (CM.dep.E,)
+            assert abs(f.sum() - 1.0) < 1e-9
+            assert (f >= 0).all()
+
+
+def test_zipf_skew_increases_straggler_latency():
+    """The hottest device under Zipf routing is strictly slower than uniform
+    once past the memory-bound plateau, and skew is monotone in alpha."""
+    tokens = 16_384
+    uni = CM.moe_device_latency(
+        _load_model().device_loads(tokens),
+        _load_model().device_experts_hit(tokens), tokens).max()
+    prev = uni
+    for alpha in (0.6, 1.0, 1.4):
+        lm = _load_model("zipf", alpha)
+        worst = CM.moe_device_latency(lm.device_loads(tokens),
+                                      lm.device_experts_hit(tokens),
+                                      tokens).max()
+        assert worst > prev * 1.0001, alpha
+        prev = worst
+
+
+def test_layer_mode_is_layer_correlated():
+    """mode='layer': same hot devices on every layer; mode='zipf': hot-expert
+    identity is redrawn per layer."""
+    corr = _load_model("layer", 1.2)
+    dec = _load_model("zipf", 1.2)
+    np.testing.assert_allclose(corr.device_fractions(0),
+                               corr.device_fractions(5))
+    assert not np.allclose(dec.device_fractions(0), dec.device_fractions(5))
+
+
+def test_layer_matrices_shapes_and_consistency():
+    L, tokens = 8, 4096
+    for mode in ("uniform", "zipf", "layer"):
+        lm = _load_model(mode, 1.0)
+        loads = lm.layer_device_loads(tokens, L)
+        hits = lm.layer_device_hits(tokens, L)
+        hot = lm.layer_hot_factors(L)
+        assert loads.shape == hits.shape == (L, CM.dep.E)
+        assert hot.shape == (L,)
+        assert (hot >= 1.0 - 1e-9).all()
+        np.testing.assert_allclose(loads.sum(axis=1),
+                                   tokens * CM.cfg.top_k, rtol=1e-9)
+
+
+def test_skewed_inflection_is_earlier():
+    """The hottest device goes compute-bound at fewer aggregate tokens, so
+    the batcher's inflection target shrinks under skew."""
+    lm = _load_model("zipf", 1.2)
+    assert lm.hot_fraction() > 1.0 / CM.dep.E
+    skewed = CM.moe_inflection_tokens(lm.hot_fraction())
+    uniform = CM.moe_inflection_tokens()
+    assert skewed < uniform
+    assert CM.moe_inflection_tokens(1.0 / CM.dep.E) == uniform

@@ -8,6 +8,10 @@ from repro.configs import get_config
 from repro.core.executor import BatchJob, DisaggregatedExecutor
 from repro.models.lm import init_lm_params, lm_backbone
 
+# whole-module: threaded executor + jit compiles are the slowest unit tests.
+# Deselect locally with `-m "not slow"`; tier-1 still runs everything.
+pytestmark = pytest.mark.slow
+
 
 def _setup(num_layers=3, num_experts=4, top_k=2, shared=0):
     cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(

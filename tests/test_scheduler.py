@@ -1,6 +1,10 @@
-"""Scheduler property tests (hypothesis) + unit behavior."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Scheduler invariants + unit behavior.
+
+Formerly hypothesis property tests; rewritten as seeded numpy.random
+parametrized sweeps (hypothesis is not available in the pinned environment —
+ISSUE 1)."""
+import numpy as np
+import pytest
 
 from repro.core.scheduler import (Batch, LengthAwareBatcher, balanced_partition,
                                   chunk_requests, pair_batches)
@@ -8,17 +12,18 @@ from repro.core.trace import Request
 
 
 def _reqs(lengths, t0=0.0):
-    return [Request(rid=i, arrival=t0 + i * 1e-3, length=l)
+    return [Request(rid=i, arrival=t0 + i * 1e-3, length=int(l))
             for i, l in enumerate(lengths)]
 
 
-lengths_strategy = st.lists(st.integers(min_value=31, max_value=32_768),
-                            min_size=1, max_size=60)
+def _random_lengths(rng):
+    n = int(rng.integers(1, 61))
+    return rng.integers(31, 32_769, size=n)
 
 
-@given(lengths_strategy)
-@settings(max_examples=60, deadline=None)
-def test_batcher_invariants(lengths):
+@pytest.mark.parametrize("seed", range(20))
+def test_batcher_invariants(seed):
+    lengths = _random_lengths(np.random.default_rng(seed))
     b = LengthAwareBatcher(inflection=2048, max_tokens=32_768,
                            exclusive_cutoff=16_384)
     batches = []
@@ -45,9 +50,11 @@ def test_batcher_invariants(lengths):
     assert seen == set(range(len(lengths)))
 
 
-@given(lengths_strategy, st.integers(min_value=1, max_value=8))
-@settings(max_examples=60, deadline=None)
-def test_balanced_partition_invariants(lengths, d):
+@pytest.mark.parametrize("seed", range(20))
+def test_balanced_partition_invariants(seed):
+    rng = np.random.default_rng(1000 + seed)
+    lengths = _random_lengths(rng)
+    d = int(rng.integers(1, 9))
     reqs = _reqs(lengths)
     groups, overflow = balanced_partition(reqs, d, max_tokens_per_group=32_768)
     placed = [r.rid for g in groups for r in g] + [r.rid for r in overflow]
@@ -57,9 +64,11 @@ def test_balanced_partition_invariants(lengths, d):
         assert total <= 32_768 or len(g) == 1
 
 
-@given(lengths_strategy, st.sampled_from([1024, 4096, 8192]))
-@settings(max_examples=40, deadline=None)
-def test_chunking_covers_requests_exactly(lengths, chunk):
+@pytest.mark.parametrize("seed", range(12))
+def test_chunking_covers_requests_exactly(seed):
+    rng = np.random.default_rng(2000 + seed)
+    lengths = _random_lengths(rng)
+    chunk = int(rng.choice([1024, 4096, 8192]))
     reqs = _reqs(lengths)
     chunks = chunk_requests(reqs, chunk)
     per_req = {}
@@ -91,3 +100,27 @@ def test_batcher_age_flush():
     assert not out  # below inflection, not aged
     out = b.poll(now=0.02)  # aged past max_wait
     assert len(out) == 1 and out[0].total_tokens == 100
+
+
+def test_batcher_age_clock_survives_partial_emission():
+    """Regression (ISSUE 1): a partial emission must NOT restart the age
+    clock for leftover requests — the oldest remaining request's enqueue time
+    is preserved, so leftovers wait at most max_wait, not up to 2x."""
+    b = LengthAwareBatcher(inflection=150, max_tokens=130, max_wait=0.02)
+    assert not b.add(Request(rid=0, arrival=0.0, length=60), now=0.0)
+    assert not b.add(Request(rid=1, arrival=0.001, length=60), now=0.001)
+    assert not b.add(Request(rid=2, arrival=0.002, length=50), now=0.002)
+    # aged flush at t=0.02 emits [r0, r1] (cap 130); r2 stays pending
+    out = b.poll(now=0.02)
+    assert len(out) == 1 and [r.rid for r in out[0].requests] == [0, 1]
+    # r2 was enqueued at t=0.002, so by t=0.025 it has aged past max_wait
+    # (buggy behavior: clock restarted at 0.02 -> nothing until t=0.04)
+    out = b.poll(now=0.025)
+    assert len(out) == 1 and [r.rid for r in out[0].requests] == [2]
+
+
+def test_batcher_age_clock_resets_after_full_drain():
+    b = LengthAwareBatcher(inflection=1000, max_tokens=32_768, max_wait=0.02)
+    b.add(Request(rid=0, arrival=0.0, length=1500), now=0.0)  # emits at once
+    assert not b._pending and not b._pending_t
+    assert not b.poll(now=0.05)  # empty batcher never emits aged ghosts

@@ -14,6 +14,10 @@ CFG = get_config("deepseek_v32")
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
        "HOME": "/root"}
 
+# whole-module: multi-minute simulator sweeps + subprocess CLI runs.
+# Deselect locally with `-m "not slow"`; tier-1 still runs everything.
+pytestmark = pytest.mark.slow
+
 
 def test_headline_claim_slo_throughput_ordering():
     """Paper Fig 13: ASAP > ChunkedPrefill > Default SLO throughput, with
