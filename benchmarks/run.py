@@ -16,6 +16,7 @@ MODULES = [
     ("fig16_18_ablations", "Fig16-18 mechanism ablations"),
     ("fig19_failures", "Fig 19   fault tolerance (beyond paper)"),
     ("fig_ep_skew", "EP skew  per-device expert load (beyond paper)"),
+    ("fig_rebalance", "Placement hot-expert replication & rebalance (beyond paper)"),
     ("superkernel_dispatch", "SuperKernel AOT dispatch (structural)"),
     ("roofline", "Roofline table (from dry-run)"),
 ]

@@ -19,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Optional, Sequence
+import re
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,6 +70,124 @@ class Deployment:
 
 
 @dataclasses.dataclass(frozen=True)
+class Placement:
+    """Expert → device placement policy (ISSUE 2 tentpole).
+
+    PR 1 hard-coded round-robin placement inside ExpertLoadModel; this class
+    owns it now, so the simulator's rebalancer and the failure injector can
+    swap placements at runtime.  Policies:
+
+      round_robin     — expert i lives on device i % ep.  Reproduces the PR-1
+                        (and seed) per-device fractions bit-exactly.
+      greedy_balanced — LPT on expert popularity: experts sorted hottest
+                        first, each placed on the currently least-loaded
+                        device (a full reshuffle — expensive to migrate to).
+      replicated      — round_robin base, then each of the `replicate_hot`
+                        hottest experts is replicated across enough
+                        least-loaded devices to bring its per-host share down
+                        to the uniform fair share (MegaScale-Infer-style
+                        popularity-proportional replication, arXiv
+                        2504.02263); a replicated expert's load and dispatch
+                        bytes split uniformly across its hosts.  Keeping the
+                        base layout makes an ONLINE switch cheap: only the
+                        replica copies migrate, which is what lets the
+                        simulator's rebalancer fix a hot expert without
+                        reshuffling the whole model (arXiv 2505.08944).
+
+    Placement tables are derived from a layer's expert-popularity vector, so
+    under per-layer routing skew ("zipf" mode) every MoE layer — which owns
+    its own expert weights — gets its own table.  Devices listed in `dead`
+    host nothing: their replicated experts fail over to the surviving hosts,
+    and their orphaned experts are re-placed greedily on the least-loaded
+    survivors (the simulator charges the weight migration and repair window).
+    """
+    policy: str = "round_robin"  # round_robin | greedy_balanced | replicated
+    replicate_hot: int = 0  # how many of the hottest experts get replicas
+    dead: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.policy not in ("round_robin", "greedy_balanced", "replicated"):
+            raise ValueError(f"unknown placement policy {self.policy!r}")
+        if self.replicate_hot < 0:
+            raise ValueError("replicate_hot must be >= 0")
+
+    @staticmethod
+    def parse(spec: str, replicate_hot: int = 0) -> "Placement":
+        """CLI-friendly constructor: 'round_robin', 'greedy_balanced',
+        'replicated' or 'replicated(k)'."""
+        spec = spec.strip()
+        m = re.fullmatch(r"replicated\s*\(\s*(\d+)\s*\)", spec)
+        if m:
+            return Placement("replicated", replicate_hot=int(m.group(1)))
+        if spec == "replicated":
+            return Placement("replicated",
+                             replicate_hot=replicate_hot or 2)
+        return Placement(spec, replicate_hot=replicate_hot)
+
+    def fail(self, device: int) -> "Placement":
+        """The same policy with `device` marked dead (idempotent)."""
+        if device in self.dead:
+            return self
+        return dataclasses.replace(self, dead=self.dead + (int(device),))
+
+    @functools.lru_cache(maxsize=None)
+    def table(self, fractions: Tuple[float, ...],
+              ep: int) -> Tuple[Tuple[int, ...], ...]:
+        """Hosts of each expert given its popularity vector: a tuple of
+        per-expert device-id tuples.  A replicated expert's load splits
+        uniformly (1/len(hosts)) across its hosts."""
+        n = len(fractions)
+        p = np.asarray(fractions, dtype=np.float64)
+        if self.policy == "greedy_balanced":
+            hosts: List[List[int]] = [[] for _ in range(n)]
+            load = np.zeros(ep)
+            for e in (int(e) for e in np.argsort(-p, kind="stable")):
+                d = int(np.argmin(load))  # LPT: hottest to least-loaded
+                hosts[e] = [d]
+                load[d] += p[e]
+        else:  # round_robin base (replicated keeps it so migrations are
+            # incremental: only replica copies move, never the whole model)
+            hosts = [[e % ep] for e in range(n)]
+            load = np.zeros(ep)
+            np.add.at(load, np.arange(n) % ep, p)
+            if self.policy == "replicated":
+                order = [int(e) for e in np.argsort(-p, kind="stable")]
+                for e in order[:min(self.replicate_hot, n)]:
+                    # enough replicas to bring the per-host share under the
+                    # uniform fair share (popularity-proportional replication)
+                    r = int(min(max(math.ceil(p[e] * ep), 2), ep))
+                    while len(hosts[e]) < r:
+                        h = hosts[e]
+                        s_old, s_new = p[e] / len(h), p[e] / (len(h) + 1)
+                        cand = min((d for d in range(ep) if d not in h),
+                                   key=lambda d: (load[d], d))
+                        for d in h:
+                            load[d] -= s_old - s_new
+                        load[cand] += s_new
+                        h.append(cand)
+        if self.dead:
+            deadset = set(self.dead)
+            alive = [d for d in range(ep) if d not in deadset]
+            if not alive:
+                raise ValueError("every MoE device is dead")
+            load = np.zeros(ep)
+            orphans: List[int] = []
+            for e in range(n):
+                live = [d for d in hosts[e] if d not in deadset]
+                if live:  # surviving replicas absorb the dead host's share
+                    hosts[e] = live
+                    for d in live:
+                        load[d] += p[e] / len(live)
+                else:
+                    orphans.append(e)
+            for e in sorted(orphans, key=lambda e: -p[e]):
+                d = min(alive, key=lambda d: (load[d], d))
+                hosts[e] = [d]
+                load[d] += p[e]
+        return tuple(tuple(h) for h in hosts)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExpertLoadModel:
     """Routing-skew model: how `tokens · top_k` expert assignments spread over
     the E MoE devices of an EP deployment.
@@ -83,9 +202,10 @@ class ExpertLoadModel:
                 layer, i.e. one persistently overloaded device — the
                 worst-case straggler scenario.
 
-    Experts are placed on devices round-robin through a seeded permutation so
-    hot experts scatter across devices the way a static random placement
-    would.  All outputs are expectations (deterministic), not samples, so the
+    Expert→device assignment is delegated to `placement` (ISSUE 2): the
+    default round-robin Placement reproduces the PR-1 hard-coded behaviour
+    bit-exactly; greedy/replicated placements spread or split hot experts.
+    All outputs are expectations (deterministic), not samples, so the
     simulator stays reproducible and the per-device latency math vectorizes.
     """
     num_experts: int
@@ -94,6 +214,7 @@ class ExpertLoadModel:
     mode: str = "uniform"  # uniform | zipf | layer
     alpha: float = 0.0  # Zipf exponent; 0 == uniform
     seed: int = 0
+    placement: Placement = Placement()
 
     def __post_init__(self):
         if self.mode not in ("uniform", "zipf", "layer"):
@@ -113,13 +234,33 @@ class ExpertLoadModel:
         perm = np.random.default_rng(perm_seed).permutation(n)
         return p[perm]
 
+    def placement_table(self, layer: int = 0) -> Tuple[Tuple[int, ...], ...]:
+        """Per-expert host tuple for `layer` (layer-keyed only in zipf mode)."""
+        lkey = layer if self.mode == "zipf" else 0
+        p = self.expert_fractions(lkey)
+        return self.placement.table(tuple(float(x) for x in p), self.ep)
+
+    @functools.lru_cache(maxsize=None)
+    def _assignment(self, lkey: int) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray]:
+        """Flattened (expert_idx, device_idx, weight) replica arrays for the
+        layer's placement table; weight = 1/len(hosts) splits a replicated
+        expert's load uniformly across its hosts."""
+        table = self.placement_table(lkey)
+        rep = np.array([e for e, hosts in enumerate(table) for _ in hosts],
+                       dtype=np.int64)
+        idx = np.array([d for hosts in table for d in hosts], dtype=np.int64)
+        w = np.array([1.0 / len(hosts) for hosts in table for _ in hosts])
+        return rep, idx, w
+
     @functools.lru_cache(maxsize=None)
     def device_fractions(self, layer: int = 0) -> np.ndarray:
         """Fraction of all assignments landing on each of the ep devices."""
-        p = self.expert_fractions(layer if self.mode == "zipf" else 0)
+        lkey = layer if self.mode == "zipf" else 0
+        p = self.expert_fractions(lkey)
+        rep, idx, w = self._assignment(lkey)
         dev = np.zeros(self.ep)
-        idx = np.arange(len(p)) % self.ep  # round-robin expert placement
-        np.add.at(dev, idx, p)
+        np.add.at(dev, idx, p[rep] * w)
         return dev
 
     def device_loads(self, tokens: float, layer: int = 0) -> np.ndarray:
@@ -128,12 +269,16 @@ class ExpertLoadModel:
 
     def device_experts_hit(self, tokens: float, layer: int = 0) -> np.ndarray:
         """Expected number of RESIDENT experts activated per device — drives
-        the weight-streaming (memory-bound) term of moe_device_latency."""
-        p = self.expert_fractions(layer if self.mode == "zipf" else 0)
+        the weight-streaming (memory-bound) term of moe_device_latency.
+        A replica counts as resident on every host (replication trades HBM
+        streaming for load split)."""
+        lkey = layer if self.mode == "zipf" else 0
+        p = self.expert_fractions(lkey)
+        rep, idx, w = self._assignment(lkey)
         a = max(float(tokens) * self.top_k, 0.0)
-        hit = 1.0 - np.power(np.clip(1.0 - p, 0.0, 1.0), a)
+        hit = 1.0 - np.power(np.clip(1.0 - p[rep] * w, 0.0, 1.0), a)
         dev = np.zeros(self.ep)
-        np.add.at(dev, np.arange(len(p)) % self.ep, hit)
+        np.add.at(dev, idx, hit)
         return dev
 
     def hot_fraction(self, layers: int = 4) -> float:
@@ -141,6 +286,22 @@ class ExpertLoadModel:
         to re-derive the batcher inflection point under skew."""
         return float(max(self.device_fractions(l).max()
                          for l in range(max(layers, 1))))
+
+    def expected_copies(self, layers: int = 4) -> float:
+        """Expected number of DISTINCT target devices per token under the
+        current placement — the dispatch-payload fan-out dispatch_bytes needs
+        once placement deviates from uniform round-robin (replicas add
+        targets, a dead device removes one)."""
+        vals = []
+        for l in range(max(layers, 1)):
+            q = self.device_fractions(l)
+            vals.append(float(np.sum(1.0 - np.power(1.0 - q, self.top_k))))
+        return float(np.mean(vals))
+
+    def with_failed(self, device: int) -> "ExpertLoadModel":
+        """This load model with `device` dead: replicated experts fail over
+        to their surviving hosts, orphans re-place onto the survivors."""
+        return dataclasses.replace(self, placement=self.placement.fail(device))
 
     # ------- whole-iteration (L layers) matrices for the sync engine -------
     def layer_device_loads(self, tokens: float, layers: int) -> np.ndarray:
@@ -172,6 +333,10 @@ class CostModel:
     cfg: ModelConfig
     hw: Hardware = V5E
     dep: Deployment = Deployment()
+    # Per-token dispatch fan-out override (ExpertLoadModel.expected_copies).
+    # None keeps the uniform round-robin closed form — the seed/PR-1 exact
+    # path; the simulator sets it only for non-default placements.
+    copies_override: Optional[float] = None
 
     # ------------------------------------------------------------- attention
     def attention_layer_flops(self, seq_lens: Sequence[int]) -> float:
@@ -296,7 +461,8 @@ class CostModel:
         c = self.cfg
         if not c.num_experts:
             return float(tokens) * c.d_model * 2
-        copies = self.dep.E * (1.0 - (1.0 - 1.0 / self.dep.E) ** c.top_k)
+        copies = self.copies_override if self.copies_override is not None \
+            else self.dep.E * (1.0 - (1.0 - 1.0 / self.dep.E) ** c.top_k)
         return float(tokens) * copies * c.d_model * 2
 
     def async_dispatch_latency(self, tokens: int) -> float:

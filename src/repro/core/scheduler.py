@@ -66,6 +66,13 @@ class LengthAwareBatcher:
     # timer for leftovers (which would let them wait up to 2x max_wait).
     _pending_t: List[float] = dataclasses.field(default_factory=list)
 
+    def retarget(self, inflection: int) -> None:
+        """Re-derive the inflection target online (ISSUE 2): the simulator's
+        rebalancer calls this when a placement switch moves the hottest MoE
+        device's compute-bound knee.  Pending requests are kept — they are
+        simply judged against the new target on the next add/poll."""
+        self.inflection = int(inflection)
+
     def add(self, req: Request, now: float) -> List[Batch]:
         out: List[Batch] = []
         if req.length > self.exclusive_cutoff:

@@ -30,11 +30,37 @@ back to `TraceConfig.ep_skew` / `ep_skew_mode` (workload-level default).
 skew 0 == uniform routing and reproduces the seed aggregate-server model's
 latencies exactly (see tests/test_simulator.py).
 
-Failure injection models a DP-group outage: ASAP requeues only that group's
-batches (stale in-flight events are invalidated by a per-batch epoch counter);
-a synchronous engine loses the whole in-flight iteration (global barrier) —
-the iteration is cancelled, its requests requeued, and re-run after the
-repair window — the fault-tolerance contrast quantified in benchmarks.
+Expert placement & replication (ISSUE 2): `SimConfig.placement` selects the
+expert→device Placement policy (core/cost_model.py) — `round_robin` (PR-1
+bit-exact), `greedy_balanced` (LPT on expert popularity) or `replicated`
+(`replicate_hot` hottest experts split across several hosts,
+MegaScale-Infer-style).  With `rebalance_interval` set, AsapSim starts from
+round-robin and an online rebalancer inspects the per-device busy time
+observed in each interval; once the imbalance exceeds `rebalance_threshold`
+it migrates to the target placement — charging expert_bytes/ici_bw per moved
+expert copy to the receiving device, invalidating the per-layer latency
+cache, and re-deriving the batcher inflection from the new hot fraction.
+The async pipeline never drains for this (no global barrier) — the cheap-
+rebalance property of arXiv 2505.08944.
+
+Failure injection, two flavors:
+  * DP-group outage (`failure_group`, default): ASAP requeues only that
+    group's batches from layer 0 with their kernel-time accounting reset
+    (stale in-flight events are invalidated by a per-batch epoch counter);
+    a synchronous engine loses the whole in-flight iteration (global
+    barrier) — cancelled, requeued, re-run after the repair window.
+  * MoE-device outage (`failure_moe_device`, ISSUE 2): the dead device's
+    buffered regions are re-dispatched to the survivors that inherit its
+    experts.  Experts with surviving replicas fail over instantly; orphaned
+    experts are re-placed greedily on the least-loaded survivors, which pay
+    the weight migration AND cannot serve their region queue before the
+    repair window ends (`failure_at + failure_duration`).  The device itself
+    stays dead.  In-flight batch-layers keep their originally scheduled
+    combine events (expectation-level approximation); the lost backlog is
+    conserved by pushing the inheriting survivors' queue clocks.  SyncSim
+    freezes for the repair window (global barrier) and afterwards straddles
+    the DEGRADED slowest rank forever — the contrast fig_rebalance.py
+    quantifies.
 """
 from __future__ import annotations
 
@@ -48,7 +74,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cost_model import (CostModel, Deployment, ExpertLoadModel,
-                                   Hardware, V5E)
+                                   Hardware, Placement, V5E)
 from repro.core.scheduler import (Batch, LengthAwareBatcher, balanced_partition,
                                   chunk_requests)
 from repro.core.trace import Request, TraceConfig, generate_requests
@@ -69,12 +95,18 @@ class SimConfig:
     # expert-parallel routing skew (None -> fall back to trace.ep_skew*)
     ep_skew: Optional[float] = None  # Zipf exponent; 0 == uniform
     ep_skew_mode: Optional[str] = None  # uniform | zipf | layer
+    # expert placement / hot-expert replication / online rebalancing (ISSUE 2)
+    placement: str = "round_robin"  # round_robin|greedy_balanced|replicated(k)
+    replicate_hot: int = 0  # top-k hottest experts replicated (forces policy)
+    rebalance_interval: Optional[float] = None  # s; None = static placement
+    rebalance_threshold: float = 1.05  # observed busy max/mean that triggers
     # ChunkedPrefill
     chunk: int = 8192
     # failure injection
     failure_at: Optional[float] = None
     failure_duration: float = 5.0
     failure_group: int = 0
+    failure_moe_device: Optional[int] = None  # kill an MoE device instead
 
     def resolved_skew(self) -> Tuple[str, float]:
         """Effective (mode, alpha): SimConfig overrides TraceConfig."""
@@ -84,6 +116,22 @@ class SimConfig:
         if alpha <= 0.0:
             mode = "uniform"
         return mode, float(alpha)
+
+    def resolved_placement(self) -> Placement:
+        """Effective Placement: `replicate_hot > 0` promotes the DEFAULT
+        round-robin policy to `replicated`, so `--replicate-hot 2` alone
+        means replicated(2).  Combining it with an explicitly different
+        policy is a conflict and raises rather than silently rewriting."""
+        pl = Placement.parse(self.placement, self.replicate_hot)
+        if self.replicate_hot > 0 and pl.policy != "replicated":
+            if pl.policy != "round_robin":
+                raise ValueError(
+                    f"replicate_hot={self.replicate_hot} conflicts with "
+                    f"placement={self.placement!r} (replication implies the "
+                    f"'replicated' policy)")
+            pl = dataclasses.replace(pl, policy="replicated",
+                                     replicate_hot=int(self.replicate_hot))
+        return pl
 
 
 @dataclasses.dataclass
@@ -176,9 +224,19 @@ class AsapSim(_Engine):
         self.cfg, self.sim, self.dep = cfg, sim, dep
         self.cm = CostModel(cfg, hw, dep)
         mode, alpha = sim.resolved_skew()
+        # With a rebalance interval the system boots on the cold round-robin
+        # placement and the online rebalancer migrates toward the target once
+        # it observes imbalance; otherwise the target is static from t=0.
+        self._placement_target = sim.resolved_placement()
+        initial = Placement() if sim.rebalance_interval \
+            else self._placement_target
         self.load_model = ExpertLoadModel(
             num_experts=max(cfg.num_experts, 1), top_k=max(cfg.top_k, 1),
-            ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed)
+            ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed,
+            placement=initial)
+        if initial != Placement():
+            self.cm = dataclasses.replace(
+                self.cm, copies_override=self.load_model.expected_copies())
         self.batcher = LengthAwareBatcher(
             inflection=self.cm.moe_inflection_tokens(
                 self.load_model.hot_fraction()),
@@ -197,6 +255,12 @@ class AsapSim(_Engine):
         self.ep = dep.E
         self.moe_dev_free = np.zeros(self.ep)
         self.moe_dev_busy_time = np.zeros(self.ep)
+        self._busy_snapshot = np.zeros(self.ep)  # rebalance-window baseline
+        # dead MoE devices do no work at all — not even the shared-expert
+        # share moe_device_latency charges to every device (that 1/E of
+        # shared compute is dropped, a small optimism documented in
+        # _fail_moe); mask applied when the latency cache is (re)filled.
+        self._moe_alive = np.ones(self.ep)
         self._moe_backlog: deque = deque()  # per-job end-time vectors (stats)
         self._q_area = np.zeros(self.ep)  # ∫ waiting-region count dt
         self._q_peak = np.zeros(self.ep, dtype=np.int64)
@@ -214,9 +278,21 @@ class AsapSim(_Engine):
         self.total_requests = len(reqs)
         for r in reqs:
             self.at(r.arrival, lambda r=r: self._arrive(r))
-        if self.sim.failure_at is not None:
+        if self.sim.failure_moe_device is not None:
+            if self.sim.failure_at is None:
+                raise ValueError(
+                    "failure_moe_device requires failure_at to be set")
+            if not 0 <= self.sim.failure_moe_device < self.ep:
+                raise ValueError(
+                    f"failure_moe_device {self.sim.failure_moe_device} "
+                    f"outside [0, {self.ep})")
+            self.at(self.sim.failure_at, self._fail_moe)
+        elif self.sim.failure_at is not None:
             self.at(self.sim.failure_at, self._fail)
-            self.at(self.sim.failure_at + self.sim.failure_duration, self._repair)
+            self.at(self.sim.failure_at + self.sim.failure_duration,
+                    self._repair)
+        if self.sim.rebalance_interval:
+            self.at(self.sim.rebalance_interval, self._rebalance)
         return self
 
     def _arrive(self, r: Request):
@@ -322,6 +398,9 @@ class AsapSim(_Engine):
                 # no comm streams: recv-migrate + combine-send run on each
                 # device's main stream (moe_comm_occupancy is per-device share)
                 lats = lats + self.cm.moe_comm_occupancy(tokens)
+            if not self._moe_alive.all():
+                base = base * self._moe_alive
+                lats = lats * self._moe_alive
             cached = (float(np.max(base)), lats)
             self._moe_lat_cache[(tokens, lkey)] = cached
         base_max, lats = cached
@@ -336,10 +415,12 @@ class AsapSim(_Engine):
         bl = self._moe_backlog
         while bl and float(bl[0].max()) <= self.now:
             bl.popleft()
-        if bl:
-            depth = (np.vstack(bl) > self.now).sum(axis=0)
-            np.maximum(self._q_peak, depth, out=self._q_peak)
+        # the snapshot INCLUDES the region that just arrived (ISSUE 2 bugfix:
+        # taking it before the append under-counted peak depth by one — a
+        # device that was never doubly backlogged reported peak 0)
         bl.append(ends)
+        depth = (np.vstack(bl) > self.now).sum(axis=0)
+        np.maximum(self._q_peak, depth, out=self._q_peak)
         c = self.cm.combine_wire_latency(tokens)
         self.at(float(ends.max()) + c,
                 lambda st=st, e=epoch: self._combined(st, e))
@@ -370,6 +451,74 @@ class AsapSim(_Engine):
         if g is not None:
             self._try_attn(g)
 
+    # ---------------------------------------------------- placement dynamics
+    def _placement_migration(self, old_lm: ExpertLoadModel,
+                             new_lm: ExpertLoadModel) -> np.ndarray:
+        """Per-device weight-migration seconds for a placement switch: every
+        (expert, device) copy present in the new placement but not the old
+        must be shipped over ICI (expert_bytes / ici_bw per expert per MoE
+        layer — each layer owns its own expert weights); receivers pay."""
+        per = self.cm.expert_bytes() / self.cm.hw.ici_bw
+        L = max(self.cfg.num_layers, 1)
+        # zipf mode has a distinct table per layer; other modes share one
+        lkeys, scale = (range(L), 1) if old_lm.mode == "zipf" else ((0,), L)
+        mig = np.zeros(self.ep)
+        for l in lkeys:
+            told = old_lm.placement_table(l)
+            tnew = new_lm.placement_table(l)
+            for e, hosts in enumerate(tnew):
+                old_hosts = told[e]
+                for d in hosts:
+                    if d not in old_hosts:
+                        mig[d] += per * scale
+        return mig
+
+    def _switch_placement(self, placement: Placement,
+                          stall_until: Optional[float] = None) -> np.ndarray:
+        """Swap the live placement: charge weight migration to the receiving
+        devices' queue clocks, invalidate the per-layer latency cache, and
+        re-derive the batcher inflection from the new hot fraction.  With
+        `stall_until` set (MoE-device failure), receivers of re-placed
+        weights additionally cannot serve their region queue before the
+        repair window ends."""
+        old = self.load_model
+        new = dataclasses.replace(old, placement=placement)
+        mig = self._placement_migration(old, new)
+        self.load_model = new
+        self._moe_lat_cache.clear()
+        if placement != Placement():
+            self.cm = dataclasses.replace(
+                self.cm, copies_override=new.expected_copies())
+        self.batcher.retarget(
+            self.cm.moe_inflection_tokens(new.hot_fraction()))
+        free = np.maximum(self.moe_dev_free, self.now)
+        if stall_until is not None:
+            free = np.where(mig > 0, np.maximum(free, stall_until), free)
+        self.moe_dev_free = free + mig
+        self.moe_dev_busy_time += mig  # migration occupies the device
+        return mig
+
+    def _rebalance(self):
+        """Online rebalancer tick (ISSUE 2 tentpole): compare the busy time
+        each device accumulated in the last window; once the observed
+        max/mean imbalance crosses the threshold, migrate to the target
+        placement.  Barrier-free: nothing drains while weights move — only
+        the receiving devices' queue clocks are pushed."""
+        window = self.moe_dev_busy_time - self._busy_snapshot
+        self._busy_snapshot = self.moe_dev_busy_time.copy()
+        if self.load_model.placement != self._placement_target:
+            mean = float(window.mean())
+            imb = float(window.max() / mean) if mean > 0 else 1.0
+            if imb >= self.sim.rebalance_threshold:
+                self._switch_placement(self._placement_target)
+        # keep ticking through the whole drain tail (the backlog above the
+        # knee is where migrating pays off most) — but stop once converged
+        # or once every request completed, so an idle recurring event never
+        # pins the heap and inflates the utilization denominator
+        if self.load_model.placement != self._placement_target \
+                and len(self.done) < self.total_requests:
+            self.at(self.now + self.sim.rebalance_interval, self._rebalance)
+
     # -------------------------------------------------------------- failure
     def _fail(self):
         g = self.sim.failure_group
@@ -383,8 +532,45 @@ class AsapSim(_Engine):
             st.layer = 0
             st.group = None
             st._phase = "wait_attn"
+            # the lost run's kernel seconds are NOT kernel work of the final
+            # run (ISSUE 2 bugfix: they double-counted into the TTFT
+            # decomposition and clamped non_kernel to 0) — they reappear in
+            # non_kernel, which is where failure overhead belongs.
+            # st.t_started intentionally KEEPS the first dispatch time: it
+            # records when the batch first reached a group, not the start of
+            # the run that eventually completed.
+            st.kernel_time = 0.0
             self.pending.appendleft(st)
         self._assign()
+
+    def _fail_moe(self):
+        """Kill one MoE device (ISSUE 2).  Experts with surviving replicas
+        fail over instantly; orphaned experts are re-placed on the least-
+        loaded survivors, which pay the weight migration and stall until the
+        repair window ends.  The dead device's buffered regions are
+        re-dispatched to the survivors that inherit its traffic share."""
+        d = int(self.sim.failure_moe_device)
+        repair_end = self.now + self.sim.failure_duration
+        self._placement_target = self._placement_target.fail(d)
+        self._moe_alive[d] = 0.0
+        old_frac = self.load_model.device_fractions(0).copy()
+        backlog = float(max(self.moe_dev_free[d] - self.now, 0.0))
+        self._switch_placement(self.load_model.placement.fail(d),
+                               stall_until=repair_end)
+        # re-dispatch the dead device's queued regions to its inheritors,
+        # pro-rated by the share of its traffic each one absorbs; the busy
+        # time charged (at arrival) to the dead device for work it will
+        # never finish moves with the regions
+        gain = np.clip(self.load_model.device_fractions(0) - old_frac,
+                       0.0, None)
+        gain[d] = 0.0
+        if backlog > 0 and gain.sum() > 0:
+            share = backlog * gain / gain.sum()
+            self.moe_dev_free += share
+            self.moe_dev_busy_time += share
+            self.moe_dev_busy_time[d] = max(
+                self.moe_dev_busy_time[d] - backlog, 0.0)
+        self.moe_dev_free[d] = self.now  # hosts nothing from here on
 
     def _repair(self):
         self.g_alive[self.sim.failure_group] = True
@@ -423,9 +609,15 @@ class SyncSim(_Engine):
         self.cfg, self.sim, self.dep = cfg, sim, dep
         self.cm = CostModel(cfg, hw, dep)
         mode, alpha = sim.resolved_skew()
+        # Static placement only: an online rebalancer would have to drain the
+        # global barrier first, exactly the cost the async engine avoids.
         self.load_model = ExpertLoadModel(
             num_experts=max(cfg.num_experts, 1), top_k=max(cfg.top_k, 1),
-            ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed)
+            ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed,
+            placement=sim.resolved_placement())
+        if self.load_model.placement != Placement():
+            self.cm = dataclasses.replace(
+                self.cm, copies_override=self.load_model.expected_copies())
         self.queue: deque[Request] = deque()
         self.chunk_progress: Dict[int, int] = {}  # rid -> tokens prefilled
         self.engine_busy = False
@@ -442,6 +634,14 @@ class SyncSim(_Engine):
         self.total_requests = len(reqs)
         for r in reqs:
             self.at(r.arrival, lambda r=r: self._arrive(r))
+        if self.sim.failure_moe_device is not None:
+            if self.sim.failure_at is None:
+                raise ValueError(
+                    "failure_moe_device requires failure_at to be set")
+            if not 0 <= self.sim.failure_moe_device < self.dep.E:
+                raise ValueError(
+                    f"failure_moe_device {self.sim.failure_moe_device} "
+                    f"outside [0, {self.dep.E})")
         if self.sim.failure_at is not None:
             self.at(self.sim.failure_at, self._fail)
         return self
@@ -456,6 +656,15 @@ class SyncSim(_Engine):
         # bump), requeue its requests at the head of the queue, and re-run
         # the iteration once the engine thaws.
         self.frozen_until = self.now + self.sim.failure_duration
+        if self.sim.failure_moe_device is not None:
+            # MoE-device outage (ISSUE 2): after the freeze the dead rank's
+            # experts live on the survivors, so every later iteration
+            # straddles the DEGRADED slowest EP rank — the barrier pins the
+            # whole instance to the inherited load forever.
+            self.load_model = self.load_model.with_failed(
+                int(self.sim.failure_moe_device))
+            self.cm = dataclasses.replace(
+                self.cm, copies_override=self.load_model.expected_copies())
         if self.engine_busy:
             self._iter_epoch += 1  # the scheduled _iteration_done is now stale
             self.engine_busy = False
@@ -647,6 +856,10 @@ def slo_throughput(cfg: ModelConfig, mode: str, slo: float = 5.0,
     lo, hi = 0.0, 0.5
     while hi <= rps_max and ok(hi):
         lo, hi = hi, hi * 2
+    # the doubling scan can exit with hi = 2*lo > rps_max; clamp before
+    # refining so bisection never explores (and returns a rate in)
+    # (rps_max, 2*rps_max] — the result must respect the caller's cap
+    hi = min(hi, rps_max)
     while hi - lo > refine:
         mid = (lo + hi) / 2
         if ok(mid):

@@ -42,6 +42,10 @@ class TraceConfig:
     #   ep_skew      — Zipf exponent over expert popularity; 0.0 == uniform.
     #   ep_skew_mode — "uniform" | "zipf" (hot experts redrawn per layer) |
     #                  "layer" (layer-correlated: same hot experts every layer).
+    # The COUNTER-measures to the skew this trace induces — expert placement
+    # policy, hot-expert replication, online rebalancing — are system-side
+    # knobs and therefore live on SimConfig (placement / replicate_hot /
+    # rebalance_interval), not here.
     ep_skew: float = 0.0
     ep_skew_mode: str = "zipf"
 

@@ -11,6 +11,17 @@ Two modes:
 
   PYTHONPATH=src python -m repro.launch.serve --engine executor --requests 8
   PYTHONPATH=src python -m repro.launch.serve --engine sim --rps 4
+
+Expert placement / fault-injection knobs (sim engine, ISSUE 2):
+  --placement {round_robin,greedy_balanced,replicated,replicated(k)}
+  --replicate-hot K        split the K hottest experts across hosts
+  --rebalance-interval S   online rebalancer tick (migrate once imbalance
+                           is observed; weight migration is charged)
+  --failure-at T --failure-duration W
+  --fail-moe-device D      kill MoE device D at T (otherwise the DP-group
+                           outage of --failure-at applies)
+  e.g. PYTHONPATH=src python -m repro.launch.serve --engine sim --rps 2 \
+         --ep-skew 1.2 --replicate-hot 2 --rebalance-interval 5
 """
 from __future__ import annotations
 
@@ -78,12 +89,27 @@ def run_executor(args):
 
 def run_simulation(args):
     cfg = get_config("deepseek_v32")
-    res = run_sim(cfg, SimConfig(mode=args.mode, rps=args.rps,
-                                 duration=args.duration,
-                                 ep_skew=args.ep_skew,
-                                 ep_skew_mode=args.ep_skew_mode))
+    sim = SimConfig(mode=args.mode, rps=args.rps, duration=args.duration,
+                    ep_skew=args.ep_skew, ep_skew_mode=args.ep_skew_mode,
+                    placement=args.placement,
+                    replicate_hot=args.replicate_hot,
+                    rebalance_interval=args.rebalance_interval,
+                    failure_at=args.failure_at,
+                    failure_duration=args.failure_duration,
+                    failure_moe_device=args.fail_moe_device)
+    res = run_sim(cfg, sim)
+    pl = sim.resolved_placement()
     print(f"mode={args.mode} rps={args.rps} duration={args.duration}s "
           f"ep_skew={args.ep_skew} ({args.ep_skew_mode})")
+    extra = f"placement={pl.policy}"
+    if pl.replicate_hot:
+        extra += f"(hot={pl.replicate_hot})"
+    if args.rebalance_interval:
+        extra += f" rebalance every {args.rebalance_interval}s"
+    if args.fail_moe_device is not None and args.failure_at is not None:
+        extra += (f"  [MoE device {args.fail_moe_device} killed at "
+                  f"t={args.failure_at}s]")
+    print(f"  {extra}")
     print(f"  completed: {len(res.ttfts)}/{res.total_requests}")
     print(f"  mean TTFT: {res.mean_ttft*1000:.0f} ms   "
           f"p99: {res.p99_ttft*1000:.0f} ms")
@@ -107,6 +133,24 @@ def main():
     ap.add_argument("--ep-skew-mode", default="zipf",
                     choices=["uniform", "zipf", "layer"],
                     help="hot experts per-layer (zipf) or layer-correlated")
+    ap.add_argument("--placement", default="round_robin",
+                    help="expert placement policy: round_robin | "
+                         "greedy_balanced | replicated | replicated(k)")
+    ap.add_argument("--replicate-hot", type=int, default=0,
+                    help="replicate the k hottest experts across the least-"
+                         "loaded MoE devices (implies --placement replicated)")
+    ap.add_argument("--rebalance-interval", type=float, default=None,
+                    help="seconds between online rebalancer ticks (asap "
+                         "engine): start round-robin, migrate to the target "
+                         "placement once imbalance is observed")
+    ap.add_argument("--failure-at", type=float, default=None,
+                    help="inject a failure at this time (seconds)")
+    ap.add_argument("--failure-duration", type=float, default=5.0,
+                    help="repair window of the injected failure")
+    ap.add_argument("--fail-moe-device", type=int, default=None,
+                    help="kill this MoE device at --failure-at (instead of "
+                         "the DP-group outage); replicas fail over, orphaned "
+                         "experts re-place after the repair window")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.engine == "executor":

@@ -1,0 +1,164 @@
+"""Expert placement, hot-expert replication & device failover (ISSUE 2).
+
+Placement invariants the tentpole's refactor must preserve:
+  * round_robin reproduces the PR-1 hard-coded fractions BIT-exactly,
+  * replicated(k) lowers the hot fraction monotonically in k,
+  * every expert stays hosted through failures (replica failover + orphan
+    re-placement), and dead devices host nothing.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import (CostModel, Deployment, ExpertLoadModel,
+                                   Placement)
+from repro.core.simulator import SimConfig
+
+CFG = get_config("deepseek_v32")
+EP = 16
+
+
+def _lm(mode="zipf", alpha=1.2, placement=Placement(), seed=0):
+    return ExpertLoadModel(num_experts=CFG.num_experts, top_k=CFG.top_k,
+                           ep=EP, mode=mode, alpha=alpha, seed=seed,
+                           placement=placement)
+
+
+# ---------------------------------------------------------------------------
+# round_robin == PR-1, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,alpha", [("uniform", 0.0), ("zipf", 0.6),
+                                        ("zipf", 1.2), ("layer", 1.2)])
+def test_round_robin_fractions_bit_exact_with_pr1(mode, alpha):
+    """The default Placement must reproduce the formerly hard-coded
+    round-robin scatter np.add.at(dev, arange(n) % ep, p) bit-exactly."""
+    lm = _lm(mode, alpha)
+    for layer in (0, 3):
+        p = lm.expert_fractions(layer if mode == "zipf" else 0)
+        dev = np.zeros(EP)
+        np.add.at(dev, np.arange(len(p)) % EP, p)
+        assert np.array_equal(dev, lm.device_fractions(layer))
+        a = 4096.0 * lm.top_k
+        hit = 1.0 - np.power(np.clip(1.0 - p, 0.0, 1.0), a)
+        devh = np.zeros(EP)
+        np.add.at(devh, np.arange(len(p)) % EP, hit)
+        assert np.array_equal(devh, lm.device_experts_hit(4096, layer))
+
+
+def test_round_robin_keeps_seed_dispatch_copies():
+    """With the default placement the CostModel keeps its closed-form
+    dispatch fan-out (copies_override is only set for other placements)."""
+    cm = CostModel(CFG, dep=Deployment(D=4, T=4, E=16))
+    lm = _lm("uniform", 0.0)
+    closed = 16 * (1.0 - (1.0 - 1.0 / 16) ** CFG.top_k)
+    assert lm.expected_copies() == pytest.approx(closed, rel=1e-12)
+    assert cm.dispatch_bytes(1000) == pytest.approx(
+        1000 * closed * CFG.d_model * 2, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# replication & balancing
+# ---------------------------------------------------------------------------
+
+
+def test_replication_lowers_hot_fraction_monotonically():
+    prev = None
+    hf = {}
+    for k in (0, 1, 2, 4, 8):
+        hf[k] = _lm(placement=Placement("replicated",
+                                        replicate_hot=k)).hot_fraction()
+        assert prev is None or hf[k] <= prev + 1e-12, k
+        prev = hf[k]
+    assert hf[8] < hf[0] * 0.5  # replication substantially flattens the peak
+    assert hf[0] == _lm().hot_fraction()  # k=0 == plain round_robin base
+
+
+def test_replicated_splits_load_across_hosts():
+    lm = _lm(placement=Placement("replicated", replicate_hot=2))
+    table = lm.placement_table(0)
+    p = lm.expert_fractions(0)
+    hot = int(np.argmax(p))
+    assert len(table[hot]) >= 2  # the hottest expert has replicas
+    assert len(set(table[hot])) == len(table[hot])  # on distinct devices
+    f = lm.device_fractions(0)
+    assert abs(f.sum() - 1.0) < 1e-9  # load split, not duplicated
+
+
+def test_greedy_balanced_no_worse_hot_fraction_than_round_robin():
+    for alpha in (0.6, 1.2):
+        rr = _lm(alpha=alpha).hot_fraction()
+        gb = _lm(alpha=alpha,
+                 placement=Placement("greedy_balanced")).hot_fraction()
+        assert gb <= rr + 1e-12, alpha
+
+
+def test_fractions_remain_distributions_under_all_policies():
+    for pl in (Placement(), Placement("greedy_balanced"),
+               Placement("replicated", replicate_hot=4),
+               Placement("replicated", replicate_hot=4, dead=(5,))):
+        lm = _lm(placement=pl)
+        for layer in (0, 2):
+            f = lm.device_fractions(layer)
+            assert f.shape == (EP,)
+            assert abs(f.sum() - 1.0) < 1e-9
+            assert (f >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# device failure / failover
+# ---------------------------------------------------------------------------
+
+
+def test_failed_device_hosts_nothing_and_experts_survive():
+    for base in (Placement(), Placement("replicated", replicate_hot=2)):
+        lm = _lm(placement=base).with_failed(3)
+        for layer in (0, 1):
+            table = lm.placement_table(layer)
+            assert len(table) == CFG.num_experts
+            assert all(len(h) >= 1 for h in table)  # every expert hosted
+            assert all(3 not in h for h in table)  # dead hosts nothing
+            assert lm.device_fractions(layer)[3] == 0.0
+
+
+def test_replica_failover_preserves_surviving_hosts():
+    """Killing one host of a replicated expert consolidates its load onto the
+    surviving replicas (no re-placement)."""
+    lm = _lm(placement=Placement("replicated", replicate_hot=1))
+    p = lm.expert_fractions(0)
+    hot = int(np.argmax(p))
+    hosts = lm.placement_table(0)[hot]
+    dead = hosts[0]
+    survivors = [d for d in hosts if d != dead]
+    after = lm.with_failed(dead).placement_table(0)[hot]
+    assert list(after) == survivors
+
+
+def test_placement_parse_and_resolution():
+    assert Placement.parse("round_robin") == Placement()
+    assert Placement.parse("replicated(3)") == \
+        Placement("replicated", replicate_hot=3)
+    assert Placement.parse("replicated").replicate_hot == 2  # default k
+    with pytest.raises(ValueError):
+        Placement.parse("nonsense")
+    # SimConfig: --replicate-hot alone promotes the (default) policy
+    assert SimConfig(replicate_hot=2).resolved_placement() == \
+        Placement("replicated", replicate_hot=2)
+    assert SimConfig(placement="replicated(4)").resolved_placement() \
+        .replicate_hot == 4
+    assert SimConfig().resolved_placement() == Placement()
+    # ...but conflicts with an explicitly different policy instead of
+    # silently rewriting it
+    with pytest.raises(ValueError):
+        SimConfig(placement="greedy_balanced",
+                  replicate_hot=2).resolved_placement()
+
+
+def test_expected_copies_tracks_placement():
+    """Replicas add dispatch targets; a dead device removes one."""
+    rr = _lm()
+    rep = _lm(placement=Placement("replicated", replicate_hot=4))
+    assert rep.expected_copies() > rr.expected_copies()
+    dead = _lm(placement=Placement(dead=(0,)))
+    assert dead.expected_copies() < rr.expected_copies() + 1e-9

@@ -1,10 +1,12 @@
 """Discrete-event simulator: completeness, orderings, ablations, failures,
-per-device expert-parallel MoE stage (ISSUE 1)."""
+per-device expert-parallel MoE stage (ISSUE 1), expert placement /
+replication / rebalancing and per-MoE-device failure injection (ISSUE 2)."""
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.cost_model import CostModel, Deployment, optimal_deployment
+from repro.core.cost_model import (CostModel, Deployment, Placement,
+                                   optimal_deployment)
 from repro.core.scheduler import Batch
 from repro.core.simulator import (AsapSim, SimConfig, SyncSim, _BatchState,
                                   run_sim, slo_throughput)
@@ -237,3 +239,190 @@ def test_slo_throughput_bisects_below_half_rps(monkeypatch):
     monkeypatch.setattr(simmod, "run_sim",
                         lambda cfg, sim, **kw: _Fake(1e9))
     assert slo_throughput(CFG, "asap", slo=2.0, refine=0.01) < 0.02
+
+
+def test_slo_throughput_respects_rps_max(monkeypatch):
+    """Regression (ISSUE 2): the doubling scan can exit with hi = 2*lo >
+    rps_max; bisection then explored (rps_max, 2*rps_max] and returned a
+    rate above the caller's cap."""
+    import repro.core.simulator as simmod
+
+    class _AlwaysOk:
+        mean_ttft = 0.0
+
+        def completed_fraction(self, total=None):
+            return 1.0
+
+    monkeypatch.setattr(simmod, "run_sim",
+                        lambda cfg, sim, **kw: _AlwaysOk())
+    for r in (3.0, 4.0, 64.0):
+        thr = slo_throughput(CFG, "asap", slo=5.0, refine=0.25, rps_max=r)
+        assert thr <= r, (thr, r)
+        assert thr >= r - 0.25  # everything sustainable -> cap (within refine)
+
+
+# ---------------------------------------------------------------------------
+# Accounting regressions (ISSUE 2 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_failure_victim_kernel_accounting_reset():
+    """Regression: a failure requeue must reset kernel_time — the victim's
+    lost run otherwise double-counts into the TTFT decomposition."""
+    sim = AsapSim(CFG, SimConfig(mode="asap"))
+    st = _BatchState(Batch(requests=[Request(rid=0, arrival=0.0, length=512)]))
+    st.kernel_time = 1.23  # progress of the doomed run
+    st.group = 0
+    sim.g_active[0] = [st]
+    sim.g_alive = [False] * sim.dep.D  # keep the victim parked in `pending`
+    sim._fail()
+    assert st.kernel_time == 0.0
+    assert st.layer == 0 and st.group is None
+    assert sim.pending and sim.pending[0] is st
+
+
+def test_failure_victim_decomposition_sums_to_ttft():
+    """kernel + non_kernel must equal TTFT for every request — including
+    failure victims, whose non_kernel was clamped to 0 whenever the stale
+    kernel seconds exceeded the true TTFT."""
+    for fa in (5.0, 10.0):
+        res = run_sim(CFG, SimConfig(mode="asap", rps=2.0, duration=30.0,
+                                     failure_at=fa, failure_duration=5.0))
+        assert res.completed_fraction() == 1.0
+        for r in res.requests:
+            d = res.decomposition[r.rid]
+            assert d["kernel"] <= r.ttft + 1e-9, r.rid  # no double count
+            assert d["kernel"] + d["non_kernel"] == pytest.approx(r.ttft)
+        # the failure window really produced non-kernel overhead
+        victims = [res.decomposition[r.rid]["non_kernel"]
+                   for r in res.requests if r.ttft > 4.0]
+        assert victims and min(victims) > 0.0
+
+
+def test_peak_qdepth_counts_arriving_region():
+    """Regression: the depth snapshot excluded the arriving job, so a device
+    that was never doubly backlogged reported peak 0."""
+    res = run_sim(CFG, SimConfig(mode="asap", rps=1.0, duration=10.0))
+    assert res.moe_device_peak_qdepth is not None
+    assert (res.moe_device_peak_qdepth >= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Placement / replication / rebalancing at the engine level (ISSUE 2)
+# ---------------------------------------------------------------------------
+
+
+def test_default_placement_config_is_pr1_exact():
+    """SimConfig() resolves to the round-robin Placement, whose fractions are
+    bit-exact with PR 1 (tests/test_placement.py) — so the existing golden
+    TTFT values (test_uniform_skew_reproduces_seed_aggregate_ttft) pin the
+    sim path and nothing else needs re-recording."""
+    sim = AsapSim(CFG, SimConfig(mode="asap", ep_skew=1.2))
+    assert sim.load_model.placement == Placement()
+    assert sim.cm.copies_override is None
+
+
+def test_replication_beats_round_robin_under_skew():
+    kw = dict(mode="asap", rps=2.0, duration=20.0, ep_skew=1.2)
+    rr = run_sim(CFG, SimConfig(**kw))
+    rep = run_sim(CFG, SimConfig(placement="replicated", replicate_hot=2,
+                                 **kw))
+    assert rep.completed_fraction() == 1.0
+    assert rep.mean_ttft < rr.mean_ttft
+    assert rep.moe_imbalance() < rr.moe_imbalance() * 1.5
+
+
+def test_rebalancer_migrates_and_retargets_batcher():
+    cfgsim = SimConfig(mode="asap", rps=2.0, duration=20.0, ep_skew=1.2,
+                       placement="replicated", replicate_hot=2,
+                       rebalance_interval=4.0)
+    sim = AsapSim(CFG, cfgsim)
+    assert sim.load_model.placement == Placement()  # cold start: round robin
+    infl0 = sim.batcher.inflection
+    sim.start()
+    sim.run(horizon=200.0)
+    # the observed imbalance crossed the threshold -> placement switched
+    assert sim.load_model.placement == cfgsim.resolved_placement()
+    assert sim.cm.copies_override is not None
+    assert sim.batcher.inflection != infl0  # re-derived from new hot frac
+    res_rr = run_sim(CFG, SimConfig(mode="asap", rps=2.0, duration=20.0,
+                                    ep_skew=1.2))
+    done = [r.ttft for r in sim.done if r.ttft is not None]
+    assert len(done) == sim.total_requests
+    # cheap online migration: no worse than never rebalancing
+    assert np.mean(done) <= res_rr.mean_ttft * 1.05
+
+
+def test_rebalancer_noop_without_imbalance():
+    """Uniform routing never crosses the threshold: the target placement is
+    never installed, no migration is charged."""
+    sim = AsapSim(CFG, SimConfig(mode="asap", rps=1.0, duration=15.0,
+                                 placement="replicated", replicate_hot=2,
+                                 rebalance_interval=3.0))
+    sim.start()
+    sim.run(horizon=200.0)
+    assert sim.load_model.placement == Placement()
+
+
+# ---------------------------------------------------------------------------
+# Per-MoE-device failure injection (ISSUE 2)
+# ---------------------------------------------------------------------------
+
+
+def test_moe_device_failure_asap_graceful_with_replicas():
+    """Killing one MoE device mid-run: replicas fail over, orphaned experts
+    re-place after the repair window — completion stays >= 99% and the dead
+    device stops accruing busy time."""
+    kw = dict(mode="asap", rps=1.0, duration=25.0, ep_skew=1.2,
+              failure_at=8.0, failure_duration=5.0, failure_moe_device=0)
+    rep = run_sim(CFG, SimConfig(placement="replicated", replicate_hot=2,
+                                 **kw))
+    assert rep.completed_fraction() >= 0.99
+    healthy = run_sim(CFG, SimConfig(mode="asap", rps=1.0, duration=25.0,
+                                     ep_skew=1.2, placement="replicated",
+                                     replicate_hot=2))
+    assert rep.mean_ttft >= healthy.mean_ttft  # outage is not free
+    rr = run_sim(CFG, SimConfig(**kw))
+    assert rr.completed_fraction() >= 0.99  # orphan re-place also completes
+
+
+def test_moe_device_failure_requires_failure_at_and_valid_device():
+    """A requested MoE-device outage must never be silently ignored."""
+    with pytest.raises(ValueError):
+        AsapSim(CFG, SimConfig(mode="asap", failure_moe_device=3)).start()
+    with pytest.raises(ValueError):
+        AsapSim(CFG, SimConfig(mode="asap", failure_at=5.0,
+                               failure_moe_device=999)).start()
+    with pytest.raises(ValueError):
+        SyncSim(CFG, SimConfig(mode="default", failure_moe_device=3)).start()
+
+
+def test_moe_device_failure_dead_device_stops_working():
+    sim = AsapSim(CFG, SimConfig(mode="asap", rps=1.0, duration=25.0,
+                                 ep_skew=1.2, failure_at=8.0,
+                                 failure_duration=5.0, failure_moe_device=3))
+    sim.start()
+    sim.run(horizon=8.0)
+    busy_at_fail = sim.moe_dev_busy_time[3]
+    sim.run(horizon=300.0)
+    assert sim.moe_dev_busy_time[3] == busy_at_fail
+    assert sim.load_model.device_fractions(0)[3] == 0.0
+
+
+def test_moe_device_failure_sync_stalls_and_degrades():
+    """The sync engine freezes for the repair window (no completion inside
+    it) and afterwards straddles the DEGRADED slowest rank: TTFT is worse
+    than both its healthy run and the async engine under the same outage."""
+    fa, fd = 8.0, 5.0
+    kw = dict(rps=0.75, duration=25.0, ep_skew=1.2, failure_at=fa,
+              failure_duration=fd, failure_moe_device=0)
+    sync = run_sim(CFG, SimConfig(mode="default", **kw))
+    inside = [r.rid for r in sync.requests if r.first_token_time is not None
+              and fa < r.first_token_time <= fa + fd]
+    assert not inside  # global barrier: nothing completes mid-outage
+    healthy = run_sim(CFG, SimConfig(mode="default", rps=0.75, duration=25.0,
+                                     ep_skew=1.2))
+    assert sync.mean_ttft > healthy.mean_ttft
+    asap = run_sim(CFG, SimConfig(mode="asap", placement="replicated",
+                                  replicate_hot=2, **kw))
+    assert asap.mean_ttft < sync.mean_ttft
