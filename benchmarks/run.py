@@ -18,6 +18,7 @@ MODULES = [
     ("fig_ep_skew", "EP skew  per-device expert load (beyond paper)"),
     ("fig_rebalance", "Placement hot-expert replication & rebalance (beyond paper)"),
     ("superkernel_dispatch", "SuperKernel AOT dispatch (structural)"),
+    ("fig_executor_hotpath", "Executor hot path: fused vs eager (beyond paper)"),
     ("roofline", "Roofline table (from dry-run)"),
 ]
 

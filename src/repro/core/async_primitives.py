@@ -33,12 +33,22 @@ from typing import Any, Dict, List, Optional, Tuple
 
 
 class Bitmap:
-    """An N-bit flag word with condition-variable semantics."""
+    """An N-bit flag word with condition-variable semantics.
 
-    def __init__(self, n: int):
+    `cv` lets several bitmaps share ONE condition variable (and lock): the
+    MoE device buffer hands the same cv to all D region bitmaps so a receiver
+    can block in `wait_any` on "any region complete" and be woken by whichever
+    sender sets the completing bit — no sleep-polling."""
+
+    def __init__(self, n: int, cv: Optional[threading.Condition] = None):
         self.n = n
         self._bits = 0
-        self._cv = threading.Condition()
+        self._cv = cv if cv is not None else threading.Condition()
+
+    @property
+    def full(self) -> bool:
+        """All n bits set. Caller must hold the (shared) cv lock."""
+        return self._bits == (1 << self.n) - 1
 
     def set_bit(self, i: int):
         with self._cv:
@@ -56,12 +66,11 @@ class Bitmap:
 
     def all_set(self) -> bool:
         with self._cv:
-            return self._bits == (1 << self.n) - 1
+            return self.full
 
     def wait_all(self, timeout: Optional[float] = None) -> bool:
         with self._cv:
-            return self._cv.wait_for(
-                lambda: self._bits == (1 << self.n) - 1, timeout)
+            return self._cv.wait_for(lambda: self.full, timeout)
 
     def wait_clear(self, i: int, timeout: Optional[float] = None) -> bool:
         """Backpressure: block while bit i is still set."""
@@ -87,9 +96,15 @@ class MoEDeviceBuffer:
 
     def __init__(self, D: int, T: int):
         self.D, self.T = D, T
+        # region rows are preallocated once and overwritten in place — a
+        # drain clears slots instead of reallocating the row list, mirroring
+        # a fixed shared-memory region on the real device
         self.rows: List[List[Optional[DispatchPayload]]] = \
             [[None] * T for _ in range(D)]
-        self.flags = [Bitmap(T) for _ in range(D)]
+        # all regions share one condition variable so `wait_any` can block on
+        # "any region complete" and wake on the completing sender's set_bit
+        self._cv = threading.Condition()
+        self.flags = [Bitmap(T, cv=self._cv) for _ in range(D)]
 
     # ---- sender side (attention device NPU_ij) ----
     def dispatch_send(self, dp_i: int, tp_j: int, payload: DispatchPayload,
@@ -108,11 +123,41 @@ class MoEDeviceBuffer:
                 return i
         return None
 
+    def wait_any(self, timeout: Optional[float] = None,
+                 stop: Optional[threading.Event] = None) -> Optional[int]:
+        """Block until ANY region has all T flags set; return its index.
+
+        Event-driven replacement for the poll_ready + sleep loop: the shared
+        condition variable is notified by every dispatch_send, so the receiver
+        wakes exactly when a region completes.  Returns None on `timeout`
+        expiry or once `stop` is set (checked on every wakeup; pair with
+        `wake()` after setting the event for a prompt exit)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                for i in range(self.D):
+                    if self.flags[i].full:
+                        return i
+                if stop is not None and stop.is_set():
+                    return None
+                wait = None if deadline is None \
+                    else deadline - time.monotonic()
+                if wait is not None and wait <= 0:
+                    return None
+                self._cv.wait(wait)
+
+    def wake(self):
+        """Wake any `wait_any` blockers (used on executor shutdown)."""
+        with self._cv:
+            self._cv.notify_all()
+
     def dispatch_recv(self, dp_i: int) -> List[DispatchPayload]:
         """async-dispatch-recv: migrate payload to private memory, clear flags."""
         assert self.flags[dp_i].all_set(), "recv before region complete"
-        out = list(self.rows[dp_i])  # "migrate to private memory"
-        self.rows[dp_i] = [None] * self.T
+        row = self.rows[dp_i]
+        out = list(row)  # "migrate to private memory"
+        for j in range(self.T):  # clear the preallocated row in place
+            row[j] = None
         self.flags[dp_i].clear()  # acknowledge: sender may write again
         return out  # type: ignore
 

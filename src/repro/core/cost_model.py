@@ -130,6 +130,28 @@ class Placement:
             return self
         return dataclasses.replace(self, dead=self.dead + (int(device),))
 
+    @staticmethod
+    def uniform_fractions(num_experts: int) -> Tuple[float, ...]:
+        """Popularity vector when nothing is known about routing skew — the
+        real executor's default input to `table` (the simulator feeds
+        ExpertLoadModel.expert_fractions instead)."""
+        n = max(num_experts, 1)
+        return (1.0 / n,) * n
+
+    def device_experts(self, fractions: Tuple[float, ...],
+                       ep: int) -> Tuple[Tuple[int, ...], ...]:
+        """Inverse view of `table`: for each of the ep devices, the sorted
+        tuple of (global) expert ids it hosts.  This is the layout the REAL
+        executor uses to build each MoE device's resident [L, n_e, ...]
+        weight stack, so executor and simulator agree on expert→device
+        assignment by construction (ROADMAP item d)."""
+        table = self.table(fractions, ep)
+        held: List[List[int]] = [[] for _ in range(ep)]
+        for e, hosts in enumerate(table):
+            for d in hosts:
+                held[d].append(e)
+        return tuple(tuple(sorted(h)) for h in held)
+
     @functools.lru_cache(maxsize=None)
     def table(self, fractions: Tuple[float, ...],
               ep: int) -> Tuple[Tuple[int, ...], ...]:

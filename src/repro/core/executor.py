@@ -8,22 +8,50 @@ core/async_primitives.py. Every mechanism of the paper is present:
 
   * async dispatch/combine with bitmap flags + backpressure (§3.2)
   * dual-batch interleaving on attention devices (§3.3.2)
-  * out-of-order MoE: devices poll regions and process whichever DP group's
-    batch-layer is ready — the layer id arrives as DATA (metadata ①) and
-    indexes the resident [L, E_local, ...] weight stack exactly like the
-    MoE Super Kernel's scalar-prefetch index (§3.4.2)
+  * out-of-order MoE: devices block in `wait_any` and process whichever DP
+    group's batch-layer completes first — the layer id arrives as DATA
+    (metadata ①) and indexes the resident [L, n_e, ...] weight stack exactly
+    like the MoE Super Kernel's scalar-prefetch index (§3.4.2)
   * shared-expert compute on the attention device overlapped with the routed
     experts' remote execution (beyond-paper overlap; disable with
     `shared_on_attention=False`)
+  * replica-aware dispatch: expert→device assignment comes from a
+    `core.cost_model.Placement` (round_robin / greedy_balanced /
+    replicated(k)), and a replicated hot expert's traffic is routed to its
+    least-loaded replica — the same placement tables that drive the
+    simulator's `ExpertLoadModel` (ROADMAP item d).
+
+Hot path (`moe_path="fused"`, the default — §3.4.2 made real):
+
+  * Attention side: one shape-keyed jitted step computes attention + norms +
+    router (+ shared expert) with the LAYER ID AS RUNTIME DATA — the step
+    dynamic-indexes the stacked per-layer params inside the trace, so every
+    layer of every batch reuses ONE compiled program (zero steady-state
+    retraces; `trace_counts` proves it).
+  * Dispatch: a single stable argsort over (device, expert) keys builds all
+    E payloads per batch-layer — no per-device boolean scans.
+  * MoE side: each drained region is packed into dropless per-expert
+    capacity buffers ([n_e, C, d]; C bucketed to powers of two so the jit
+    cache stays finite) by `kernels.super_gmm.ops.pack_capacity` — a
+    vectorized segment-sort/scatter — then ONE jitted `super_moe_ffn` call
+    runs all three expert projections against the device's resident
+    [L, n_e, ...] weight stack with the layer id as a runtime scalar: the
+    layer-oblivious super-kernel semantics (global weight access +
+    pre-calculated indexing + dynamic resolution), not an eager per-expert
+    Python loop.  `moe_path="eager"` keeps the pre-fusion per-expert loop as
+    the benchmark baseline (benchmarks/fig_executor_hotpath.py).
 
 Numerical contract (tested): pipeline output == lm_backbone(..., moe_mode=
-"dense") for the same params — asynchrony must not change the math.
+"dense") for the same params — asynchrony, placement and fusion must not
+change the math.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +59,12 @@ import numpy as np
 
 from repro.core.async_primitives import (AttnDeviceBuffer, CombinePayload,
                                          DispatchPayload, MoEDeviceBuffer)
+from repro.core.cost_model import Placement
+from repro.kernels.super_gmm.ops import (pack_capacity, super_moe_ffn,
+                                         unpack_capacity)
 from repro.models.attention import attention_forward
 from repro.models.common import ModelConfig, act_fn, apply_norm
-from repro.models.moe import router_topk
+from repro.models.moe import gated_ffn, router_topk
 from repro.models.lm import embed_tokens, lm_stages
 
 
@@ -47,30 +78,73 @@ class BatchJob:
 class DisaggregatedExecutor:
     def __init__(self, params, cfg: ModelConfig, D: int = 2, E: int = 4,
                  T: int = 1, interleave: bool = True,
-                 shared_on_attention: bool = True):
+                 shared_on_attention: bool = True,
+                 placement: Optional[Placement] = None,
+                 expert_fractions: Optional[Sequence[float]] = None,
+                 moe_path: str = "fused", moe_kernel: str = "pallas",
+                 idle_backoff: Optional[float] = 0.05):
         assert cfg.family == "moe", "executor drives MoE models"
-        assert cfg.num_experts % E == 0, "E must divide num_experts"
+        assert moe_path in ("fused", "eager"), moe_path
+        assert moe_kernel in ("pallas", "ref"), moe_kernel
         (kind, n, opts), = lm_stages(cfg)
         assert kind == "decoder" and opts["moe"]
         self.params, self.cfg = params, cfg
         self.D, self.E, self.T = D, E, T
         self.L = cfg.num_layers
-        self.e_local = cfg.num_experts // E
         self.interleave = interleave
         self.shared_on_attention = shared_on_attention
+        self.moe_path = moe_path
+        self.moe_kernel = moe_kernel
+        self.idle_backoff = idle_backoff  # max CV wait in the MoE workers
         self.stage = params["stages"][0]
+        # --- replica-aware expert placement (ROADMAP item d) --------------
+        # The SAME Placement.table that drives the simulator's
+        # ExpertLoadModel decides which device hosts which expert here, so
+        # the real runtime and the simulator agree on the routing layer.
+        self.placement = placement if placement is not None else Placement()
+        fr = tuple(float(x) for x in expert_fractions) \
+            if expert_fractions is not None \
+            else Placement.uniform_fractions(cfg.num_experts)
+        assert len(fr) == cfg.num_experts
+        self.expert_fractions = fr
+        self.table = self.placement.table(fr, E)
+        self.dev_experts = self.placement.device_experts(fr, E)
+        # routing lookups: primary host per expert, replica sets, and the
+        # per-device global→local expert index
+        self._primary = np.array([h[0] for h in self.table], np.int64)
+        self._replicated = [e for e, h in enumerate(self.table) if len(h) > 1]
+        self._g2l = np.full((E, cfg.num_experts), -1, np.int64)
+        for e, held in enumerate(self.dev_experts):
+            self._g2l[e, list(held)] = np.arange(len(held))
+        self._dev_load = np.zeros(E, np.int64)  # dispatched assignments
+        self._load_lock = threading.Lock()
         # buffers
         self.moe_bufs = [MoEDeviceBuffer(D, T) for _ in range(E)]
         self.attn_bufs = [[AttnDeviceBuffer(E) for _ in range(2)]
                           for _ in range(D)]  # per group x dual-batch slot
-        # "resident" expert weights per MoE device: [L, e_local, ...] — the
-        # super-kernel layout (all layers resident; layer id indexes at runtime)
+        # "resident" expert weights per MoE device: [L, n_e, ...] — the
+        # super-kernel layout (all layers resident; layer id indexes at
+        # runtime).  n_e follows the placement: replicas are resident on
+        # every host.
         ex = self.stage["ffn"]["experts"]
+        ex_np = {k: np.asarray(v) for k, v in ex.items()}
         self.resident = []
         for e in range(E):
-            lo, hi = e * self.e_local, (e + 1) * self.e_local
-            self.resident.append({k: np.asarray(v[:, lo:hi])
-                                  for k, v in ex.items()})
+            ids = np.asarray(self.dev_experts[e], np.int64)
+            self.resident.append({k: v[:, ids] for k, v in ex_np.items()})
+        # jit caches (shape-keyed via jax.jit) + trace-count probes
+        self.trace_counts: collections.Counter = collections.Counter()
+        self._trace_lock = threading.Lock()  # counters bump from N threads
+        self._hung: List[threading.Thread] = []  # left over by a timed-out run
+        self._attn_stage = {"attn": self.stage["attn"],
+                            "ln_attn": self.stage["ln_attn"],
+                            "ln_ffn": self.stage["ln_ffn"],
+                            "router": self.stage["ffn"]["router"]}
+        if "shared" in self.stage["ffn"] and shared_on_attention:
+            self._attn_stage["shared"] = self.stage["ffn"]["shared"]
+        self._attn_step = self._make_attn_step()
+        self._moe_step = [self._make_moe_step(e) if len(self.dev_experts[e])
+                          else None for e in range(E)]
         self.stop = threading.Event()
         self.errors: List[BaseException] = []
         # event log for protocol assertions in tests
@@ -85,7 +159,40 @@ class DisaggregatedExecutor:
     def _layer_params(self, l: int):
         return jax.tree.map(lambda a: a[l], self.stage)
 
+    def _make_attn_step(self):
+        """One jitted attention+norm+router(+shared) step for ALL layers:
+        the layer id is a traced scalar indexing the stacked params, so the
+        steady state performs zero retraces (jax.jit keys on shapes only).
+        The stacked params are closed over (resident, like the MoE steps'
+        weights) so per-call dispatch doesn't re-flatten the pytree."""
+        cfg = self.cfg
+        sp = self._attn_stage
+
+        def step(lid, h):
+            with self._trace_lock:  # runs at trace time only
+                self.trace_counts["attn"] += 1
+            lp = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, lid, 0,
+                                                       keepdims=False), sp)
+            h = h + attention_forward(lp["attn"],
+                                      apply_norm(h, lp["ln_attn"], cfg),
+                                      cfg, use_dense=True)
+            x = apply_norm(h, lp["ln_ffn"], cfg)
+            B, S, d = x.shape
+            xf = x.reshape(B * S, d)
+            weights, idx, _ = router_topk(lp["router"], xf, cfg)
+            shared = None
+            if "shared" in sp:
+                s = lp["shared"]
+                shared = gated_ffn(xf, s["w_gate"], s["w_up"], s["w_down"],
+                                   act_fn(cfg.act))
+            return h, xf, weights, idx, shared
+
+        return jax.jit(step)
+
     def _attn_part(self, lp, h):
+        """Eager (pre-fusion) attention step — the `moe_path="eager"`
+        baseline: per-layer host slicing + op-by-op dispatch."""
         cfg = self.cfg
         h = h + attention_forward(lp["attn"], apply_norm(h, lp["ln_attn"], cfg),
                                   cfg, use_dense=True)
@@ -96,34 +203,82 @@ class DisaggregatedExecutor:
         shared = None
         if "shared" in lp["ffn"] and self.shared_on_attention:
             sp = lp["ffn"]["shared"]
-            act = act_fn(cfg.act)
-            shared = (act(xf @ sp["w_gate"]) * (xf @ sp["w_up"])) @ sp["w_down"]
+            shared = gated_ffn(xf, sp["w_gate"], sp["w_up"], sp["w_down"],
+                               act_fn(cfg.act))
         return h, xf, np.asarray(weights), np.asarray(idx), shared
 
-    def _dispatch(self, g: int, slot: int, layer: int, xf, idx):
-        """async-dispatch-send to every MoE device (empty payloads included so
-        T·D bitmap regions always complete)."""
-        xf_np = np.asarray(xf)
+    # ------------------------------------------------------------- dispatch
+    def _route(self, flat_e: np.ndarray) -> np.ndarray:
+        """Device id per (token, k) assignment under the placement table.
+
+        Single-host experts go to their host; a replicated expert's rows are
+        spread round-robin over its hosts ordered by the CURRENT dispatched
+        load, so hot-expert traffic lands on the least-loaded replica first
+        (MegaScale-style load-splitting, executed at dispatch time)."""
+        dev = self._primary[flat_e]
+        with self._load_lock:
+            for e in self._replicated:
+                rows = np.nonzero(flat_e == e)[0]
+                if not rows.size:
+                    continue
+                hosts = np.asarray(self.table[e], np.int64)
+                by_load = hosts[np.argsort(self._dev_load[hosts],
+                                           kind="stable")]
+                dev[rows] = by_load[np.arange(rows.size) % hosts.size]
+            self._dev_load += np.bincount(dev, minlength=self.E)
+        return dev
+
+    def _flat_routing(self, idx: np.ndarray):
         Tn, K = idx.shape
-        flat_t = np.repeat(np.arange(Tn), K)
         flat_e = idx.reshape(-1)
+        flat_t = np.repeat(np.arange(Tn), K)
         flat_k = np.tile(np.arange(K), Tn)
+        return flat_e, flat_t, flat_k, self._route(flat_e)
+
+    def _send_device(self, g: int, slot: int, layer: int, e: int, xf_np,
+                     t_rows, k_rows, local_ids):
+        """Write one device's T payload rows (empty payloads included so the
+        T·D bitmap regions always complete)."""
+        token_ids = np.stack([t_rows, k_rows], 1)  # (token, k)
+        counts = np.bincount(local_ids,
+                             minlength=max(len(self.dev_experts[e]), 1))
+        payload_tokens = xf_np[t_rows]
+        for j in range(self.T):
+            sl = slice(j, None, self.T)  # row-split across TP members
+            p = DispatchPayload(layer=layer, slot=slot,
+                                counts=counts if j == 0 else None,
+                                tokens=payload_tokens[sl],
+                                token_ids=token_ids[sl],
+                                expert_ids=local_ids[sl])
+            self.moe_bufs[e].dispatch_send(g, j, p)
+        self._logev("dispatch", g, slot, layer, e, int(len(t_rows)))
+
+    def _dispatch(self, g: int, slot: int, layer: int, xf, idx):
+        """async-dispatch-send: ONE stable argsort over (device, expert)
+        keys builds all E payloads — no per-device boolean scans."""
+        xf_np = np.asarray(xf)
+        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx))
+        order = np.argsort(dev * max(self.cfg.num_experts, 1) + flat_e,
+                           kind="stable")
+        dev_s, e_s = dev[order], flat_e[order]
+        t_s, k_s = flat_t[order], flat_k[order]
+        bounds = np.concatenate(
+            ([0], np.cumsum(np.bincount(dev_s, minlength=self.E))))
         for e in range(self.E):
-            lo, hi = e * self.e_local, (e + 1) * self.e_local
-            m = (flat_e >= lo) & (flat_e < hi)
-            token_ids = np.stack([flat_t[m], flat_k[m]], 1)  # (token, k)
-            local_ids = flat_e[m] - lo
-            counts = np.bincount(local_ids, minlength=self.e_local)
-            payload_tokens = xf_np[flat_t[m]]
-            for j in range(self.T):
-                sl = slice(j, None, self.T)  # row-split across TP members
-                p = DispatchPayload(layer=layer, slot=slot,
-                                    counts=counts if j == 0 else None,
-                                    tokens=payload_tokens[sl],
-                                    token_ids=token_ids[sl],
-                                    expert_ids=local_ids[sl])
-                self.moe_bufs[e].dispatch_send(g, j, p)
-            self._logev("dispatch", g, slot, layer, e, int(m.sum()))
+            sl = slice(bounds[e], bounds[e + 1])
+            self._send_device(g, slot, layer, e, xf_np, t_s[sl], k_s[sl],
+                              self._g2l[e, e_s[sl]])
+
+    def _dispatch_eager(self, g: int, slot: int, layer: int, xf, idx):
+        """Pre-fusion dispatch: E boolean scans over the flat assignment
+        arrays (kept as the benchmark baseline; still placement-routed so
+        the numerical contract holds on every policy)."""
+        xf_np = np.asarray(xf)
+        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx))
+        for e in range(self.E):
+            m = dev == e
+            self._send_device(g, slot, layer, e, xf_np, flat_t[m], flat_k[m],
+                              self._g2l[e, flat_e[m]])
 
     def _combine(self, g: int, slot: int, h, xf, weights, shared):
         """async-combine-recv + weighted accumulation (token-order restore)."""
@@ -147,17 +302,60 @@ class DisaggregatedExecutor:
         return h + y.reshape(B, S, d)
 
     # ----------------------------------------------------------- moe worker
-    def _moe_worker(self, e: int):
-        buf = self.moe_bufs[e]
+    def _make_moe_step(self, e: int):
+        """Jitted super-kernel FFN for device e: the resident [L, n_e, ...]
+        stack is closed over (weights stay device-resident across calls) and
+        the layer id is a runtime [1] scalar — ONE trace serves every layer;
+        new traces only occur for new capacity buckets."""
+        res = {k: jnp.asarray(v) for k, v in self.resident[e].items()}
+        cfg, kernel = self.cfg, self.moe_kernel
+
+        def step(lid, xb):
+            with self._trace_lock:  # runs at trace time only
+                self.trace_counts["moe"] += 1
+            return super_moe_ffn(lid, res, xb, cfg, kernel=kernel)
+
+        return jax.jit(step)
+
+    def _expert_ffn_fused(self, e: int, layer: int, tokens: np.ndarray,
+                          eids: np.ndarray) -> np.ndarray:
+        """Capacity-buffer pack -> one super-kernel call -> unpack."""
+        n_e = len(self.dev_experts[e])
+        xb, order, slots, _ = pack_capacity(tokens, eids, n_e)
+        yb = self._moe_step[e](jnp.asarray([layer], jnp.int32),
+                               jnp.asarray(xb))
+        return unpack_capacity(np.asarray(yb), order, slots, len(tokens))
+
+    def _expert_ffn_eager(self, e: int, layer: int, tokens: np.ndarray,
+                          eids: np.ndarray) -> np.ndarray:
+        """Pre-fusion per-expert loop: three un-jitted GEMMs and a
+        host<->device round trip per LOCAL expert (benchmark baseline)."""
         res = self.resident[e]
         act = act_fn(self.cfg.act)
+        wg, wu, wd = (res["w_gate"][layer], res["w_up"][layer],
+                      res["w_down"][layer])
+        out = np.zeros((len(tokens), tokens.shape[1]), np.float32)
+        xj = jnp.asarray(tokens)
+        for le in np.unique(eids):
+            m = eids == le
+            xm = xj[np.where(m)[0]]
+            y = (act(xm @ jnp.asarray(wg[le]))
+                 * (xm @ jnp.asarray(wu[le]))) @ jnp.asarray(wd[le])
+            out[m] = np.asarray(y, np.float32)
+        return out
+
+    def _moe_worker(self, e: int):
+        buf = self.moe_bufs[e]
+        ffn = self._expert_ffn_fused if self.moe_path == "fused" \
+            else self._expert_ffn_eager
         try:
             while True:
-                i = buf.poll_ready()
+                # block on "any region complete" (condition variable — no
+                # sleep-polling; idle_backoff only bounds the stop check)
+                i = buf.wait_any(timeout=self.idle_backoff, stop=self.stop)
                 if i is None:
                     if self.stop.is_set():
                         return
-                    threading.Event().wait(0.0002)
                     continue
                 rows = buf.dispatch_recv(i)
                 layer = rows[0].layer
@@ -168,17 +366,7 @@ class DisaggregatedExecutor:
                 if len(tokens):
                     # layer-oblivious: `layer` is runtime data indexing the
                     # resident all-layer weight stack (super-kernel semantics)
-                    wg = res["w_gate"][layer]
-                    wu = res["w_up"][layer]
-                    wd = res["w_down"][layer]
-                    out = np.zeros((len(tokens), tokens.shape[1]), np.float32)
-                    xj = jnp.asarray(tokens)
-                    for le in np.unique(eids):
-                        m = eids == le
-                        xm = xj[np.where(m)[0]]
-                        y = (act(xm @ jnp.asarray(wg[le]))
-                             * (xm @ jnp.asarray(wu[le]))) @ jnp.asarray(wd[le])
-                        out[m] = np.asarray(y, np.float32)
+                    out = ffn(e, layer, tokens, eids)
                 else:
                     out = None
                 self._logev("moe", e, i, slot, layer, len(tokens))
@@ -192,6 +380,8 @@ class DisaggregatedExecutor:
     # --------------------------------------------------------- group worker
     def _group_worker(self, g: int, jobs: List[BatchJob]):
         try:
+            fused = self.moe_path == "fused"
+            dispatch = self._dispatch if fused else self._dispatch_eager
             queue = list(jobs)
             active: List[Dict[str, Any]] = []
             free_slots = [0, 1] if self.interleave else [0]
@@ -208,11 +398,16 @@ class DisaggregatedExecutor:
                 for st in active:
                     if st["phase"] != "attn":
                         continue
-                    lp = self._layer_params(st["layer"])
-                    h, xf, w, idx, shared = self._attn_part(lp, st["h"])
+                    if fused:
+                        h, xf, w, idx, shared = self._attn_step(
+                            jnp.asarray(st["layer"], jnp.int32), st["h"])
+                        w, idx = np.asarray(w), np.asarray(idx)
+                    else:
+                        h, xf, w, idx, shared = self._attn_part(
+                            self._layer_params(st["layer"]), st["h"])
                     st["h"] = h
                     st["ctx"] = (xf, w, shared)
-                    self._dispatch(g, st["slot"], st["layer"], xf, idx)
+                    dispatch(g, st["slot"], st["layer"], xf, idx)
                     st["phase"] = "wait"
                     st["seq"] = seq = seq + 1
                 # block on the oldest outstanding combine
@@ -235,22 +430,53 @@ class DisaggregatedExecutor:
             self.stop.set()
 
     # ------------------------------------------------------------------ run
-    def run(self, jobs_per_group: List[List[BatchJob]]) -> List[BatchJob]:
+    def run(self, jobs_per_group: List[List[BatchJob]],
+            timeout: float = 300.0) -> List[BatchJob]:
         assert len(jobs_per_group) == self.D
+        if self.errors:
+            raise RuntimeError("executor reused after a thread failure") \
+                from self.errors[0]
+        self._hung = [t for t in self._hung if t.is_alive()]
+        if self._hung:
+            # a timed-out run left live threads sharing our buffers —
+            # clearing `stop` would revive them mid-protocol and race a new
+            # worker set on dispatch_recv
+            raise RuntimeError(
+                "executor reused while thread(s) from a timed-out run are "
+                f"still alive: {[t.name for t in self._hung]}")
+        self.stop.clear()  # executors are reusable: warm runs re-enter here
         moe_threads = [threading.Thread(target=self._moe_worker, args=(e,),
-                                        daemon=True) for e in range(self.E)]
+                                        name=f"moe-{e}", daemon=True)
+                       for e in range(self.E)]
         for t in moe_threads:
             t.start()
         g_threads = [threading.Thread(target=self._group_worker, args=(g, js),
-                                      daemon=True)
+                                      name=f"group-{g}", daemon=True)
                      for g, js in enumerate(jobs_per_group)]
         for t in g_threads:
             t.start()
+        deadline = time.monotonic() + timeout
         for t in g_threads:
-            t.join(timeout=300)
+            t.join(timeout=max(deadline - time.monotonic(), 1e-3))
+        self._hung = [t for t in g_threads if t.is_alive()]
+        hung = [t.name for t in self._hung]
         self.stop.set()
+        for buf in self.moe_bufs:
+            buf.wake()  # prompt exit for workers idling in wait_any
         for t in moe_threads:
             t.join(timeout=30)
         if self.errors:
             raise RuntimeError("executor thread failed") from self.errors[0]
+        if hung:
+            # a hung group thread must NOT silently return jobs with
+            # result=None — report which threads are stuck and what the
+            # protocol saw last
+            self._hung += [t for t in moe_threads if t.is_alive()]
+            stuck_moe = [t.name for t in moe_threads if t.is_alive()]
+            with self._log_lock:
+                tail = self.log[-6:]
+            raise TimeoutError(
+                f"executor run exceeded {timeout}s: group thread(s) "
+                f"{hung} still alive (moe alive: {stuck_moe or 'none'}); "
+                f"last protocol events: {tail}")
         return [j for js in jobs_per_group for j in js]

@@ -9,11 +9,13 @@ layer id is scan data, and XLA emits ONE kernel for all layers.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.super_gmm.ref import super_moe_ffn_ref
 from repro.kernels.super_gmm.super_gmm import super_gmm
 from repro.models.common import ModelConfig, act_fn
 
@@ -28,11 +30,17 @@ def _pick_blocks(C: int, N: int, K: int):
 
 
 def super_moe_ffn(layer_id: jax.Array, experts: dict, xb: jax.Array,
-                  cfg: ModelConfig, interpret: bool = True) -> jax.Array:
+                  cfg: ModelConfig, interpret: bool = True,
+                  kernel: str = "pallas") -> jax.Array:
     """Gated expert FFN on capacity buffers via three super-GMM calls.
 
-    xb: [E, C, d] -> [E, C, d] (fp32)."""
+    xb: [E, C, d] -> [E, C, d] (fp32).  kernel="ref" routes through the
+    layer-indexed einsum oracle instead of the Pallas grid — same layer-
+    oblivious semantics (layer id stays runtime data), useful where
+    interpret-mode Pallas is the bottleneck (CPU hot paths)."""
     act = act_fn(cfg.act)
+    if kernel == "ref":
+        return super_moe_ffn_ref(jnp.reshape(layer_id, ()), experts, xb, act)
     E, C, d = xb.shape
     f = experts["w_gate"].shape[-1]
     bc, bn, bk = _pick_blocks(C, f, d)
@@ -60,3 +68,55 @@ def make_super_kernel_gmm(stacked_experts: dict, cfg: ModelConfig,
         return out.astype(xb.dtype)
 
     return gmm
+
+
+# ---------------------------------------------------------------------------
+# Capacity-buffer packing (host side, for the threaded executor's hot path)
+# ---------------------------------------------------------------------------
+
+
+def round_capacity(n: int, minimum: int = 8) -> int:
+    """Round a per-expert row count up to the next power of two (>= minimum).
+
+    Bucketing the capacity keeps the jit cache keyed on O(log N) distinct
+    [n_experts, C, d] shapes, so steady-state regions hit an existing trace
+    instead of recompiling for every token count."""
+    return max(minimum, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def pack_capacity(tokens: np.ndarray, eids: np.ndarray, n_experts: int,
+                  capacity: Optional[int] = None
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Scatter N token rows into dropless [n_experts, C, d] capacity buffers.
+
+    One vectorized segment-sort (stable argsort by expert + exclusive-prefix
+    offsets) replaces the per-expert boolean-mask loop: every row lands at
+    slot ``expert * C + position_within_expert``.  C defaults to the bucketed
+    max per-expert count so nothing is dropped (the executor's numerical
+    contract) and the buffer shape stays jit-cache friendly.
+
+    Returns (xb [n_experts, C, d], order, slots, C) where `order`/`slots`
+    invert the packing in `unpack_capacity`.
+    """
+    n, d = tokens.shape
+    counts = np.bincount(eids, minlength=n_experts)
+    cmax = int(counts.max()) if n else 1
+    C = capacity if capacity is not None else round_capacity(cmax)
+    assert C >= cmax, f"capacity {C} drops rows (max count {cmax})"
+    order = np.argsort(eids, kind="stable")
+    offsets = np.cumsum(counts) - counts  # exclusive prefix sum
+    pos = np.arange(n) - offsets[eids[order]]
+    slots = eids[order] * C + pos
+    xb = np.zeros((n_experts * C, d), tokens.dtype)
+    xb[slots] = tokens[order]
+    return xb.reshape(n_experts, C, d), order, slots, C
+
+
+def unpack_capacity(yb: np.ndarray, order: np.ndarray, slots: np.ndarray,
+                    n: int) -> np.ndarray:
+    """Gather expert outputs back to the original row order (inverse of
+    `pack_capacity`). yb: [n_experts, C, d] -> [n, d]."""
+    d = yb.shape[-1]
+    out = np.empty((n, d), yb.dtype)
+    out[order] = yb.reshape(-1, d)[slots]
+    return out

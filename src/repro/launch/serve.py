@@ -12,6 +12,12 @@ Two modes:
   PYTHONPATH=src python -m repro.launch.serve --engine executor --requests 8
   PYTHONPATH=src python -m repro.launch.serve --engine sim --rps 4
 
+Executor hot-path knobs (ISSUE 3): --moe-path fused|eager selects the fused
+super-kernel pipeline (jitted attention step + capacity-buffer packed MoE)
+or the pre-fusion per-expert loop; --moe-kernel pallas|ref picks the fused
+backend; --placement/--replicate-hot drive the executor's replica-aware
+dispatch through the same Placement tables as the simulator.
+
 Expert placement / fault-injection knobs (sim engine, ISSUE 2):
   --placement {round_robin,greedy_balanced,replicated,replicated(k)}
   --replicate-hot K        split the K hottest experts across hosts
@@ -33,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.cost_model import Deployment
+from repro.core.cost_model import Deployment, Placement
 from repro.core.executor import BatchJob, DisaggregatedExecutor
 from repro.core.scheduler import LengthAwareBatcher
 from repro.core.simulator import SimConfig, run_sim
@@ -47,8 +53,14 @@ def run_executor(args):
     key = jax.random.PRNGKey(args.seed)
     params = init_lm_params(key, cfg)
     D, E = 2, 4
+    placement = Placement.parse(args.placement,
+                                replicate_hot=args.replicate_hot)
     print(f"disaggregated executor: D={D} attention groups, E={E} MoE devices, "
-          f"{cfg.num_layers}L x {cfg.num_experts}e model")
+          f"{cfg.num_layers}L x {cfg.num_experts}e model  "
+          f"[moe_path={args.moe_path} kernel={args.moe_kernel} "
+          f"placement={placement.policy}"
+          + (f"(hot={placement.replicate_hot})" if placement.replicate_hot
+             else "") + "]")
 
     # length-aware batching of incoming requests
     lengths = np.clip(sample_lengths(args.requests,
@@ -72,7 +84,10 @@ def run_executor(args):
     per_group = [jobs[g::D] for g in range(D)]
 
     t0 = time.time()
-    ex = DisaggregatedExecutor(params, cfg, D=D, E=E)
+    ex = DisaggregatedExecutor(params, cfg, D=D, E=E, placement=placement,
+                               moe_path=args.moe_path,
+                               moe_kernel=args.moe_kernel,
+                               idle_backoff=args.idle_backoff)
     done = ex.run(per_group)
     wall = time.time() - t0
     ooo = sum(1 for i in range(1, len(ex.log))
@@ -151,6 +166,16 @@ def main():
                     help="kill this MoE device at --failure-at (instead of "
                          "the DP-group outage); replicas fail over, orphaned "
                          "experts re-place after the repair window")
+    ap.add_argument("--moe-path", default="fused", choices=["fused", "eager"],
+                    help="executor engine: fused super-kernel hot path or the "
+                         "pre-fusion per-expert loop (benchmark baseline)")
+    ap.add_argument("--moe-kernel", default="pallas",
+                    choices=["pallas", "ref"],
+                    help="fused path backend: Pallas super_gmm grid or the "
+                         "layer-indexed einsum oracle")
+    ap.add_argument("--idle-backoff", type=float, default=0.05,
+                    help="max seconds a MoE worker waits on its condition "
+                         "variable before re-checking the stop flag")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.engine == "executor":

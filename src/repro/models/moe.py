@@ -93,9 +93,15 @@ def load_balance_loss(probs: jax.Array, idx: jax.Array, num_experts: int):
 # ---------------------------------------------------------------------------
 
 
-def _ffn(x, w_gate, w_up, w_down, act):
+def gated_ffn(x, w_gate, w_up, w_down, act):
+    """One gated FFN: act(x @ w_gate) * (x @ w_up) @ w_down — the shared-
+    expert / single-expert building block (also used by the threaded executor
+    for shared-expert compute on the attention device)."""
     h = act(x @ w_gate) * (x @ w_up)
     return h @ w_down
+
+
+_ffn = gated_ffn  # internal alias (historical name)
 
 
 def default_gmm(xb: jax.Array, experts: dict, cfg: ModelConfig) -> jax.Array:

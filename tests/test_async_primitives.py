@@ -88,6 +88,61 @@ def test_combine_waits_for_all_segments():
     assert len(got) == 1 and len(got[0]) == 3
 
 
+def test_wait_any_returns_ready_region_immediately():
+    buf = MoEDeviceBuffer(D=3, T=1)
+    buf.dispatch_send(2, 0, _payload(layer=7))
+    assert buf.wait_any(timeout=1.0) == 2
+
+
+def test_wait_any_blocks_until_send_completes_region():
+    """Event-driven: the receiver parks on the shared condition variable and
+    is woken by the completing sender — no sleep-polling."""
+    buf = MoEDeviceBuffer(D=2, T=2)
+    buf.dispatch_send(1, 0, _payload())  # 1 of T=2 rows: region incomplete
+    got = []
+
+    def recv():
+        got.append(buf.wait_any(timeout=5.0))
+
+    t = threading.Thread(target=recv, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not got, "wait_any must block while no region is complete"
+    buf.dispatch_send(1, 1, _payload())  # completes region 1 -> wakes waiter
+    t.join(timeout=2)
+    assert got == [1]
+
+
+def test_wait_any_timeout_and_stop():
+    buf = MoEDeviceBuffer(D=1, T=1)
+    t0 = time.monotonic()
+    assert buf.wait_any(timeout=0.05) is None  # expiry -> None
+    assert time.monotonic() - t0 < 1.0
+    stop = threading.Event()
+    got = []
+
+    def recv():
+        got.append(buf.wait_any(timeout=30.0, stop=stop))
+
+    t = threading.Thread(target=recv, daemon=True)
+    t.start()
+    time.sleep(0.02)
+    stop.set()
+    buf.wake()  # prompt wakeup: waiter must exit well before the timeout
+    t.join(timeout=2)
+    assert got == [None]
+
+
+def test_dispatch_recv_reuses_preallocated_row():
+    buf = MoEDeviceBuffer(D=1, T=2)
+    row_before = buf.rows[0]
+    buf.dispatch_send(0, 0, _payload())
+    buf.dispatch_send(0, 1, _payload())
+    buf.dispatch_recv(0)
+    assert buf.rows[0] is row_before  # cleared in place, not reallocated
+    assert buf.rows[0] == [None, None]
+
+
 def test_sync_p2p_blocks_without_receiver():
     p2p = SyncP2P()
     with pytest.raises(TimeoutError):

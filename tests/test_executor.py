@@ -1,10 +1,13 @@
 """Threaded disaggregated executor: asynchrony must not change the math."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.cost_model import ExpertLoadModel, Placement
 from repro.core.executor import BatchJob, DisaggregatedExecutor
 from repro.models.lm import init_lm_params, lm_backbone
 
@@ -64,6 +67,115 @@ def test_shared_expert_on_attention_device():
     ex = DisaggregatedExecutor(params, cfg, D=1, E=2)
     done = ex.run([jobs])
     _check(done, params, cfg)
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "greedy_balanced",
+                                    "replicated(2)"])
+def test_fused_hot_path_contract_all_placements(policy):
+    """The fused super-kernel path must preserve the dense-reference math
+    under every placement policy (replica fan-out included)."""
+    cfg, params = _setup(num_experts=8)
+    jobs = _jobs(cfg, 2, seed=21)
+    ex = DisaggregatedExecutor(params, cfg, D=2, E=4,
+                               placement=Placement.parse(policy),
+                               moe_path="fused")
+    done = ex.run([jobs[:1], jobs[1:]])
+    _check(done, params, cfg)
+
+
+def test_eager_fallback_contract():
+    """--path eager (the pre-fusion baseline) stays correct, placement-routed."""
+    cfg, params = _setup(num_experts=8)
+    jobs = _jobs(cfg, 2, seed=23)
+    ex = DisaggregatedExecutor(params, cfg, D=1, E=4, moe_path="eager",
+                               placement=Placement("replicated",
+                                                   replicate_hot=2))
+    done = ex.run([jobs])
+    _check(done, params, cfg)
+
+
+def test_executor_simulator_placement_parity():
+    """The SAME Placement must yield the SAME expert→device (and replica
+    fan-out) assignment in the real executor and in the simulator's
+    ExpertLoadModel (ROADMAP item d)."""
+    cfg, params = _setup(num_experts=8)
+    E = 4
+    for pl in (Placement(), Placement("greedy_balanced"),
+               Placement("replicated", replicate_hot=2)):
+        ex = DisaggregatedExecutor(params, cfg, D=1, E=E, placement=pl)
+        lm = ExpertLoadModel(num_experts=cfg.num_experts, top_k=cfg.top_k,
+                             ep=E, mode="uniform", placement=pl)
+        assert ex.table == lm.placement_table(0)
+        assert ex.dev_experts == pl.device_experts(ex.expert_fractions, E)
+        # resident weight stacks follow the fan-out: a replicated expert is
+        # resident on every one of its hosts
+        for e, hosts in enumerate(ex.table):
+            for d in hosts:
+                assert e in ex.dev_experts[d]
+    # measured (non-uniform) popularity flows through identically
+    lmz = ExpertLoadModel(num_experts=cfg.num_experts, top_k=cfg.top_k, ep=E,
+                          mode="layer", alpha=1.2,
+                          placement=Placement("replicated", replicate_hot=2))
+    fr = tuple(float(x) for x in lmz.expert_fractions(0))
+    ex = DisaggregatedExecutor(params, cfg, D=1, E=E,
+                               placement=lmz.placement, expert_fractions=fr)
+    assert ex.table == lmz.placement_table(0)
+
+
+def test_replica_routing_targets_hosts_and_spreads():
+    cfg, params = _setup(num_experts=8)
+    pl = Placement("replicated", replicate_hot=1)
+    ex = DisaggregatedExecutor(params, cfg, D=1, E=4, placement=pl)
+    hot = next(e for e, h in enumerate(ex.table) if len(h) > 1)
+    dev = ex._route(np.full(64, hot))
+    # hot-expert traffic spreads over exactly its replicas, evenly
+    assert set(int(d) for d in dev) == set(ex.table[hot])
+    counts = np.bincount(dev, minlength=4)[list(ex.table[hot])]
+    assert counts.max() - counts.min() <= 1
+    # single-host experts always go to their one host
+    solo = next(e for e, h in enumerate(ex.table) if len(h) == 1)
+    assert set(int(d) for d in ex._route(np.full(5, solo))) \
+        == {ex.table[solo][0]}
+
+
+def test_jit_cache_stable_after_warmup():
+    """After one warmup run, a full multi-layer multi-batch run performs ZERO
+    new traces — including the interleave=True dual-slot path (dispatch
+    bubble criterion, paper Fig 10)."""
+    cfg, params = _setup(num_layers=4)
+    ex = DisaggregatedExecutor(params, cfg, D=2, E=2, interleave=True)
+    jobs = _jobs(cfg, 4, seed=31)
+    # pre-warm the attention trace single-threaded (two group threads racing
+    # the same first compile could legitimately trace twice)
+    from repro.models.lm import embed_tokens
+    h0 = embed_tokens(params, jnp.asarray(jobs[0].tokens), None, cfg)
+    ex._attn_step(jnp.asarray(0, jnp.int32), h0)
+    assert ex.trace_counts["attn"] == 1
+    # same token arrays both runs: identical routing -> identical capacity
+    # buckets, so ANY second-run trace is a genuine cache miss
+    fresh = lambda: [[BatchJob(tokens=j.tokens, bid=j.bid) for j in jobs[:2]],
+                     [BatchJob(tokens=j.tokens, bid=j.bid) for j in jobs[2:]]]
+    ex.run(fresh())
+    warm = dict(ex.trace_counts)
+    assert warm["attn"] == 1  # one trace serves all layers x slots x batches
+    assert warm.get("moe", 0) >= 1
+    done = ex.run(fresh())
+    assert dict(ex.trace_counts) == warm, "steady state must not retrace"
+    _check(done, params, cfg)
+
+
+def test_run_raises_on_hung_group_thread(monkeypatch):
+    """A hung group thread must raise (with thread state), not silently
+    return jobs with result=None."""
+    cfg, params = _setup()
+    ex = DisaggregatedExecutor(params, cfg, D=1, E=2)
+    monkeypatch.setattr(DisaggregatedExecutor, "_group_worker",
+                        lambda self, g, jobs: time.sleep(30))
+    with pytest.raises(TimeoutError, match="group-0"):
+        ex.run([_jobs(cfg, 1)], timeout=0.3)
+    # the hung thread still shares our buffers: reuse must refuse, not race
+    with pytest.raises(RuntimeError, match="timed-out run"):
+        ex.run([_jobs(cfg, 1)], timeout=0.3)
 
 
 def test_out_of_order_moe_execution_observed():

@@ -72,6 +72,67 @@ def test_super_moe_ffn_matches_ref():
                                    atol=2e-4)
 
 
+def test_super_moe_ffn_ref_kernel_option():
+    """kernel="ref" must match the Pallas grid bit-for-bit in fp32."""
+    cfg = ModelConfig(name="k", family="moe", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab_size=64, num_experts=4, top_k=2, moe_d_ff=48,
+                      dtype=jnp.float32)
+    L, E, d, f = 2, 4, 32, 48
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    experts = {"w_gate": jax.random.normal(ks[0], (L, E, d, f)),
+               "w_up": jax.random.normal(ks[1], (L, E, d, f)),
+               "w_down": jax.random.normal(ks[2], (L, E, f, d))}
+    xb = jax.random.normal(ks[3], (E, 16, d))
+    lid = jnp.array([1], jnp.int32)
+    out_p = super_moe_ffn(lid, experts, xb, cfg, kernel="pallas")
+    out_r = super_moe_ffn(lid, experts, xb, cfg, kernel="ref")
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------- capacity packing
+
+def test_pack_unpack_capacity_roundtrip():
+    from repro.kernels.super_gmm.ops import (pack_capacity, round_capacity,
+                                             unpack_capacity)
+    rng = np.random.RandomState(0)
+    for n, n_experts in [(1, 1), (7, 3), (64, 4), (129, 8)]:
+        tokens = rng.randn(n, 16).astype(np.float32)
+        eids = rng.randint(0, n_experts, n)
+        xb, order, slots, C = pack_capacity(tokens, eids, n_experts)
+        counts = np.bincount(eids, minlength=n_experts)
+        assert C == round_capacity(counts.max())
+        assert xb.shape == (n_experts, C, 16)
+        # every row landed in its own expert's buffer, in arrival order
+        for e in range(n_experts):
+            rows = tokens[eids == e]
+            np.testing.assert_array_equal(xb[e, :len(rows)], rows)
+            assert not xb[e, len(rows):].any()  # padding stays zero
+        # unpack inverts pack exactly (identity FFN)
+        out = unpack_capacity(xb, order, slots, n)
+        np.testing.assert_array_equal(out, tokens)
+
+
+def test_pack_capacity_rejects_dropping_capacity():
+    from repro.kernels.super_gmm.ops import pack_capacity
+    tokens = np.ones((10, 4), np.float32)
+    eids = np.zeros(10, np.int64)
+    with pytest.raises(AssertionError):
+        pack_capacity(tokens, eids, 1, capacity=8)  # 10 rows won't fit
+
+
+def test_round_capacity_buckets():
+    from repro.kernels.super_gmm.ops import round_capacity
+    assert round_capacity(0) == 8
+    assert round_capacity(1) == 8
+    assert round_capacity(8) == 8
+    assert round_capacity(9) == 16
+    assert round_capacity(100) == 128
+    # bucketing -> O(log N) distinct shapes for the jit cache
+    assert len({round_capacity(n) for n in range(1, 1000)}) <= 8
+
+
 def test_lm_forward_with_super_kernel_matches_einsum():
     from repro.configs import get_config
     from repro.models.lm import init_lm_params, lm_forward

@@ -155,6 +155,31 @@ def test_placement_parse_and_resolution():
                   replicate_hot=2).resolved_placement()
 
 
+def test_device_experts_is_inverse_of_table():
+    """The executor-facing per-device view must agree with the per-expert
+    host table on every policy (this is what keeps the REAL executor and the
+    simulator on the same expert→device assignment — ROADMAP item d)."""
+    fr = Placement.uniform_fractions(CFG.num_experts)
+    assert sum(fr) == pytest.approx(1.0)
+    for pl in (Placement(), Placement("greedy_balanced"),
+               Placement("replicated", replicate_hot=3),
+               Placement("replicated", replicate_hot=3, dead=(2,))):
+        table = pl.table(fr, EP)
+        held = pl.device_experts(fr, EP)
+        assert len(held) == EP
+        for e, hosts in enumerate(table):
+            for d in range(EP):
+                assert (e in held[d]) == (d in hosts)
+        for d in pl.dead:
+            assert held[d] == ()
+
+
+def test_device_experts_round_robin_uniform():
+    fr = Placement.uniform_fractions(8)
+    held = Placement().device_experts(fr, 4)
+    assert held == ((0, 4), (1, 5), (2, 6), (3, 7))
+
+
 def test_expected_copies_tracks_placement():
     """Replicas add dispatch targets; a dead device removes one."""
     rr = _lm()
