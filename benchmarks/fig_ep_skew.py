@@ -10,6 +10,13 @@ simulator's per-device MoE stage with Zipf(alpha) expert popularity:
   * ASAP's async pipeline only pays the straggler on the affected batch's
     combine, so the async-vs-sync SLO-throughput gap WIDENS with skew;
   * per-MoE-device utilization/queue stats (SimResult) quantify the imbalance.
+
+`--skew measured` (ISSUE 4, ROADMAP item (a) first half) replaces the
+synthetic Zipf knob with per-expert token fractions MEASURED on a live
+executor-engine run — either loaded from a RouterStatsCollector JSON
+(`--measured-from`, e.g. `repro.launch.serve --engine executor
+--save-router-stats stats.json`) or recorded in-process from a short live
+run — resampled onto the simulator's expert count.
 """
 import numpy as np
 
@@ -18,6 +25,62 @@ from repro.core.simulator import SimConfig, run_sim, slo_throughput
 
 SKEWS = [0.0, 0.6, 1.0, 1.4]
 GAP_SKEWS = [0.0, 1.2]
+
+
+def _measured_fractions(measured_from=None, quick=True):
+    """Per-expert fractions from a live run: load a saved RouterStatsCollector
+    JSON, or measure in-process with a short executor-engine run."""
+    from repro.core.engine import RouterStatsCollector
+    if measured_from:
+        col = RouterStatsCollector.load(measured_from)
+    else:
+        import jax
+        from repro.configs import get_config
+        from repro.core.engine import ExecutorEngine
+        from repro.core.executor import DisaggregatedExecutor
+        from repro.core.trace import Request, TraceClock
+        from repro.models.lm import init_lm_params
+        cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+            num_layers=3, num_experts=8, top_k=2)
+        params = init_lm_params(jax.random.PRNGKey(0), cfg)
+        ex = DisaggregatedExecutor(params, cfg, D=2, E=4)
+        engine = ExecutorEngine(ex, clock=TraceClock(speed=200.0))
+        n = 4 if quick else 8
+        rng = np.random.RandomState(0)
+        engine.submit_all([
+            Request(rid=i, arrival=i * 0.05,
+                    length=int(rng.choice([16, 24, 32])))
+            for i in range(n)])
+        engine.drain(timeout=300)
+        engine.close()
+        col = engine.router_stats
+    return col, col.resampled(max(CFG.num_experts, 1))
+
+
+def run_measured(quick: bool = False, measured_from=None) -> dict:
+    """asap-vs-sync comparison with the expert-load model driven by measured
+    fractions (uniform baseline alongside, for the contrast)."""
+    duration = 20.0 if quick else 40.0
+    rps = 2.0
+    col, fr = _measured_fractions(measured_from, quick)
+    rows = []
+    for label, kw in (("uniform", dict(ep_skew=0.0)),
+                      ("measured", dict(measured_fractions=fr))):
+        asap = run_sim(CFG, SimConfig(mode="asap", rps=rps, duration=duration,
+                                      **kw),
+                       asap_dep=ASAP_DEP, sync_dep=SYNC_DEP)
+        sync = run_sim(CFG, SimConfig(mode="default", rps=rps,
+                                      duration=duration, **kw),
+                       asap_dep=ASAP_DEP, sync_dep=SYNC_DEP)
+        u = asap.moe_device_util
+        rows.append((label, round(asap.mean_ttft * 1e3),
+                     round(sync.mean_ttft * 1e3),
+                     f"{sync.mean_ttft / max(asap.mean_ttft, 1e-9):.2f}x",
+                     f"{asap.moe_imbalance():.2f}x",
+                     f"{np.max(u) * 100:.0f}%/{np.mean(u) * 100:.0f}%"))
+    hot = [int(e) for e in np.argsort(-np.asarray(fr))[:4]]
+    return dict(rows=rows, fractions=fr, hot=hot,
+                assignments=col.total, source_experts=col.num_experts)
 
 
 def run(quick: bool = False) -> dict:
@@ -51,7 +114,16 @@ def run(quick: bool = False) -> dict:
     return dict(rows=rows, gap_rows=gap_rows, gaps=gaps)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, skew: str = "zipf", measured_from=None):
+    if skew == "measured":
+        r = run_measured(quick, measured_from)
+        print("== EP skew from MEASURED router stats (live run -> sim) ==")
+        print(f"source: {r['assignments']:.0f} measured assignments over "
+              f"{r['source_experts']} experts, resampled to "
+              f"{len(r['fractions'])}; hottest {r['hot']}")
+        print(fmt_table(r["rows"], ["load", "asap_ms", "sync_ms", "sync/asap",
+                                    "imbalance", "util max/mean"]))
+        return r
     r = run(quick)
     print("== EP routing skew: per-device MoE stage (beyond paper) ==")
     print(fmt_table(r["rows"], ["zipf_a", "asap_ms", "sync_ms", "sync/asap",
@@ -69,4 +141,14 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skew", choices=["zipf", "measured"], default="zipf",
+                    help="synthetic Zipf sweep, or expert load measured on a "
+                         "live executor-engine run (ROADMAP item (a))")
+    ap.add_argument("--measured-from", default=None, metavar="PATH",
+                    help="RouterStatsCollector JSON from `serve.py "
+                         "--save-router-stats` (default: measure in-process)")
+    a = ap.parse_args()
+    main(quick=a.quick, skew=a.skew, measured_from=a.measured_from)

@@ -1,62 +1,74 @@
-"""End-to-end ASAP serving demo (deliverable: serve a small model with batched
-requests): heterogeneous requests -> length-aware batching -> disaggregated
-asynchronous pipeline (real threads + shared-buffer primitives) -> first
-tokens, with the out-of-order MoE execution made visible.
+"""End-to-end ASAP serving demo through the online `ServingEngine` API
+(ISSUE 4): heterogeneous requests arrive with jitter on a replayable trace
+clock -> length-aware batching in the admission loop -> disaggregated
+asynchronous pipeline (real threads + shared-buffer primitives) -> streaming
+OUT-OF-ORDER completions with per-request TTFT decompositions, first tokens,
+and measured per-expert router statistics.
 
   PYTHONPATH=src python examples/serve_asap.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.executor import BatchJob, DisaggregatedExecutor
-from repro.core.scheduler import LengthAwareBatcher, pair_batches
-from repro.core.trace import Request
-from repro.models.lm import init_lm_params, lm_head
+from repro.core.engine import ExecutorEngine
+from repro.core.executor import DisaggregatedExecutor
+from repro.core.scheduler import LengthAwareBatcher
+from repro.core.trace import Request, TraceClock
+from repro.models.lm import init_lm_params
 
 cfg = get_config("qwen3-moe-235b-a22b").smoke().replace(
     num_layers=4, num_experts=8, top_k=2)
 params = init_lm_params(jax.random.PRNGKey(0), cfg)
 
-# --- a burst of heterogeneous requests (the DP-imbalance trigger)
+# --- a jittered stream of heterogeneous requests (the DP-imbalance trigger).
+# Arrivals are NOT all at t=0: the engine replays them on the trace clock, so
+# late requests genuinely miss the first batching wave.
 rng = np.random.RandomState(0)
 lengths = rng.choice([8, 12, 16, 24, 32, 48], size=10)
-reqs = [Request(rid=i, arrival=i * 0.01, length=int(l))
-        for i, l in enumerate(lengths)]
-print("request lengths:", list(lengths))
+arrivals = np.cumsum(rng.exponential(0.25, size=10))
+reqs = [Request(rid=i, arrival=float(t), length=int(l))
+        for i, (t, l) in enumerate(zip(arrivals, lengths))]
+print("request (arrival s, length):",
+      [(round(r.arrival, 2), r.length) for r in reqs])
 
-# --- length-aware batching (§3.3.1): batch past the MoE inflection point
-batcher = LengthAwareBatcher(inflection=48, max_tokens=96,
-                             exclusive_cutoff=1_000)
-batches = []
-for r in reqs:
-    batches += batcher.add(r, r.arrival)
-batches += batcher.flush(1.0)
-pairs = pair_batches(batches)
-print(f"-> {len(batches)} batches, {len(pairs)} dual-batch pairs "
-      f"(tokens per batch: {[b.total_tokens for b in batches]})")
-
-# --- run through the disaggregated async pipeline (D=2 groups + E=4 MoE devs)
-S = 48
-jobs = [BatchJob(tokens=rng.randint(0, cfg.vocab_size,
-                                    (len(b.requests), S)).astype(np.int32),
-                 bid=b.bid) for b in batches]
-t0 = time.time()
+# --- one ServingEngine over the real pipeline (D=2 groups + E=4 MoE devs):
+# submit timed requests, stream completions as they land.
 ex = DisaggregatedExecutor(params, cfg, D=2, E=4)
-done = ex.run([jobs[0::2], jobs[1::2]])
-print(f"pipeline completed {len(done)} batches in {time.time()-t0:.1f}s")
+engine = ExecutorEngine(
+    ex, clock=TraceClock(speed=25.0),  # 25 trace-seconds per wall second
+    batcher=LengthAwareBatcher(inflection=48, max_tokens=96,
+                               exclusive_cutoff=1_000, max_wait=0.1))
+t0 = time.time()
+handles = engine.submit_all(reqs)
+results = []
+while len(results) < len(reqs) and time.time() - t0 < 300:
+    for r in engine.poll():  # completions stream OUT OF ORDER
+        results.append(r)
+        d = {k: round(v, 2) for k, v in r.decomposition.items()}
+        print(f"  done rid={r.rid} batch={r.batch_id} group={r.group} "
+              f"ttft={r.ttft:.2f}s first_token={r.first_token} {d}")
+    time.sleep(0.02)
+results += engine.drain(timeout=120)
+print(f"engine completed {len(results)}/{len(reqs)} requests "
+      f"in {time.time() - t0:.1f}s wall")
 
-# --- out-of-order MoE execution (the barrier-free property, §3.4.2)
-moe_events = [(e[1], e[4]) for e in ex.log if e[0] == "moe"][:18]
-print("MoE (device, layer) execution order:", moe_events)
-inversions = sum(1 for a, b in zip(moe_events, moe_events[1:]) if b[1] < a[1])
-print(f"layer-order inversions (out-of-order execution): {inversions}")
+# --- the async-serving property, now visible at the REQUEST level: a late
+# short request can finish before an early long one.
+order = [r.rid for r in results]
+inversions = sum(1 for a, b in zip(order, order[1:]) if b < a)
+print(f"completion order: {order} -> {inversions} out-of-order completions")
 
-# --- first tokens
-for j in done:
-    h = jnp.asarray(j.result[:, -1])
-    first = jnp.argmax(lm_head(params, h, cfg), -1)
-    print(f"batch {j.bid}: first tokens {np.asarray(first)}")
+# --- measured router statistics (ROADMAP d2): recorded from the live run,
+# ready to feed back as expert_fractions / Placement popularity input.
+st = engine.stats()
+fr = st.expert_fractions
+hot = [int(e) for e in engine.router_stats.hot_experts(3)]
+print(f"measured router stats: {st.router_assignments:.0f} assignments; "
+      f"hottest experts {hot} with fractions "
+      f"{[round(float(fr[e]), 3) for e in hot]} (sum {fr.sum():.3f})")
+print(f"MoE device util {np.round(st.moe_device_util, 2)}  "
+      f"attention group util {np.round(st.group_util, 2)}")
+engine.close()

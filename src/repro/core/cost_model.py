@@ -209,20 +209,50 @@ class Placement:
         return tuple(tuple(h) for h in hosts)
 
 
+@functools.lru_cache(maxsize=None)
+def resample_fractions(fractions: Tuple[float, ...], n: int) -> np.ndarray:
+    """Resample a measured expert-popularity vector onto `n` experts.
+
+    Interpolates the SORTED (descending) popularity curve at n quantile
+    positions and renormalizes — the skew SHAPE (how concentrated traffic is
+    on the hottest experts) survives the change of expert count, which is
+    what lets an 8-expert smoke-run measurement calibrate a production-scale
+    simulator (`ExpertLoadModel(mode="measured")`, fig_ep_skew --skew
+    measured).  Returned descending; callers scatter identities."""
+    p = np.sort(np.asarray(fractions, dtype=np.float64))[::-1]
+    p = p / max(p.sum(), 1e-12)
+    m = len(p)
+    if m == n:
+        return p
+    xs = (np.arange(m) + 0.5) / m
+    xt = (np.arange(n) + 0.5) / n
+    q = np.interp(xt, xs, p)
+    return q / max(q.sum(), 1e-12)
+
+
 @dataclasses.dataclass(frozen=True)
 class ExpertLoadModel:
     """Routing-skew model: how `tokens · top_k` expert assignments spread over
     the E MoE devices of an EP deployment.
 
-    Three modes (ISSUE 1 tentpole):
-      uniform — every expert equally popular (the seed aggregate model's
-                implicit assumption); skew `alpha` is ignored.
-      zipf    — Zipf(alpha) expert popularity with the hot-expert *identity*
-                redrawn per layer (decorrelated layers: a different device is
-                the straggler on each layer).
-      layer   — layer-correlated Zipf skew: the SAME hot experts on every
-                layer, i.e. one persistently overloaded device — the
-                worst-case straggler scenario.
+    Four modes (ISSUE 1 tentpole; "measured" added in ISSUE 4):
+      uniform  — every expert equally popular (the seed aggregate model's
+                 implicit assumption); skew `alpha` is ignored.
+      zipf     — Zipf(alpha) expert popularity with the hot-expert *identity*
+                 redrawn per layer (decorrelated layers: a different device is
+                 the straggler on each layer).
+      layer    — layer-correlated Zipf skew: the SAME hot experts on every
+                 layer, i.e. one persistently overloaded device — the
+                 worst-case straggler scenario.
+      measured — expert popularity taken from a MEASURED per-expert token-
+                 fraction vector (`measured`, e.g. RouterStatsCollector
+                 .fractions() from a live executor run — ROADMAP item (a)/(d2)
+                 closed by ISSUE 4).  Layer-correlated like "layer".  When the
+                 measured vector's length differs from `num_experts` (e.g. an
+                 8-expert smoke run calibrating a 256-expert sim) the sorted
+                 popularity curve is resampled onto `num_experts` experts and
+                 the identities are scattered with `seed`; an exact-length
+                 vector is used verbatim (identities preserved).
 
     Expert→device assignment is delegated to `placement` (ISSUE 2): the
     default round-robin Placement reproduces the PR-1 hard-coded behaviour
@@ -233,19 +263,33 @@ class ExpertLoadModel:
     num_experts: int
     top_k: int
     ep: int  # number of MoE devices (Deployment.E)
-    mode: str = "uniform"  # uniform | zipf | layer
+    mode: str = "uniform"  # uniform | zipf | layer | measured
     alpha: float = 0.0  # Zipf exponent; 0 == uniform
     seed: int = 0
     placement: Placement = Placement()
+    # "measured" mode: per-expert token fractions observed on a live run
+    # (RouterStatsCollector.fractions_tuple()); any length, resampled to
+    # num_experts when they differ.
+    measured: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
-        if self.mode not in ("uniform", "zipf", "layer"):
+        if self.mode not in ("uniform", "zipf", "layer", "measured"):
             raise ValueError(f"unknown skew mode {self.mode!r}")
+        if self.mode == "measured" and not self.measured:
+            raise ValueError("mode='measured' requires a measured fractions "
+                             "vector (RouterStatsCollector.fractions_tuple())")
 
     @functools.lru_cache(maxsize=None)
     def expert_fractions(self, layer: int = 0) -> np.ndarray:
         """P(assignment -> expert i) for each of num_experts experts."""
         n = max(self.num_experts, 1)
+        if self.mode == "measured":
+            p = np.asarray(self.measured, dtype=np.float64)
+            if len(p) == n:
+                return p / max(p.sum(), 1e-12)
+            p = resample_fractions(tuple(float(x) for x in p), n)
+            perm = np.random.default_rng(self.seed).permutation(n)
+            return p[perm]
         if self.mode == "uniform" or self.alpha <= 0.0:
             return np.full(n, 1.0 / n)
         ranks = np.arange(1, n + 1, dtype=np.float64) ** (-self.alpha)

@@ -44,6 +44,19 @@ Hot path (`moe_path="fused"`, the default — §3.4.2 made real):
 Numerical contract (tested): pipeline output == lm_backbone(..., moe_mode=
 "dense") for the same params — asynchrony, placement and fusion must not
 change the math.
+
+Lifecycle (ISSUE 4 api_redesign): the executor is a LONG-LIVED engine, not a
+one-shot batch call.  `ensure_started()` spawns the D group workers + E MoE
+workers once; group workers then PULL work from a shared admission queue
+(`submit_job`) — an un-pinned job goes to whichever group frees a dual-batch
+slot first, which is exactly least-loaded assignment and replaces the
+caller-side hand partition.  Completions surface out of order through the
+`on_complete` callback (per-job queue/kernel/comm timing in `clock` units —
+the `core.engine.ExecutorEngine` wires a replayable `core.trace.TraceClock`
+and a `RouterStatsCollector` here and exposes the `ServingEngine` protocol on
+top).  `run(jobs_per_group)` survives as a thin compatibility shim: it pins
+each job to its hand-chosen group, submits, and blocks until that wave
+completes.
 """
 from __future__ import annotations
 
@@ -73,6 +86,17 @@ class BatchJob:
     tokens: Any  # [B, S] int32
     result: Any = None  # final hidden states [B, S, d]
     bid: int = 0
+    # --- engine fields (ISSUE 4) ------------------------------------------
+    group: Optional[int] = None  # pinned attention group; None = least-loaded
+    lengths: Optional[List[int]] = None  # per-row valid prompt lengths
+    meta: Any = None  # opaque engine payload (the batched Requests)
+    # timestamps/durations in `DisaggregatedExecutor.clock` units (trace
+    # seconds when driven by a TraceClock, wall seconds otherwise)
+    t_submitted: Optional[float] = None
+    t_started: Optional[float] = None  # first attention dispatch
+    t_finished: Optional[float] = None
+    kernel_time: float = 0.0  # attention-side compute (this group's stream)
+    comm_time: float = 0.0  # blocked in combine (MoE compute + wire + queue)
 
 
 class DisaggregatedExecutor:
@@ -150,6 +174,24 @@ class DisaggregatedExecutor:
         # event log for protocol assertions in tests
         self.log: List[tuple] = []
         self._log_lock = threading.Lock()
+        # --- long-lived engine state (ISSUE 4) ----------------------------
+        # `clock` is assignable: the ExecutorEngine points it at a replayable
+        # TraceClock.now so every timestamp below is in trace seconds.
+        self.clock = time.monotonic
+        # duck-typed measured-router-stats sink: anything with
+        # .record(layer, expert_ids) — see core.engine.RouterStatsCollector.
+        self.router_stats: Optional[Any] = None
+        self.on_complete: Optional[Any] = None  # callable(BatchJob)
+        self._jobq: List[BatchJob] = []  # shared admission queue
+        self._jobq_cv = threading.Condition()
+        self._done_cv = threading.Condition()
+        self._started = False
+        self._g_threads: List[threading.Thread] = []
+        self._moe_threads: List[threading.Thread] = []
+        self._t_serving_start: Optional[float] = None
+        # measured busy time per device (clock units) for EngineStats
+        self.moe_busy = np.zeros(E)
+        self.group_busy = np.zeros(D)
 
     def _logev(self, *ev):
         with self._log_lock:
@@ -228,11 +270,21 @@ class DisaggregatedExecutor:
             self._dev_load += np.bincount(dev, minlength=self.E)
         return dev
 
-    def _flat_routing(self, idx: np.ndarray):
+    def _flat_routing(self, idx: np.ndarray, layer: int = 0,
+                      valid: Optional[np.ndarray] = None):
         Tn, K = idx.shape
         flat_e = idx.reshape(-1)
         flat_t = np.repeat(np.arange(Tn), K)
         flat_k = np.tile(np.arange(K), Tn)
+        if self.router_stats is not None:
+            # MEASURED per-expert routing stats (ROADMAP d2): every real
+            # router assignment is counted before placement routing, so the
+            # collector sees expert popularity, not device load.  `valid`
+            # masks out padding rows — pad tokens still flow through
+            # dispatch/compute (the dense-reference contract covers them)
+            # but must not contaminate the measured fractions.
+            rec = flat_e if valid is None else flat_e[np.repeat(valid, K)]
+            self.router_stats.record(layer, rec)
         return flat_e, flat_t, flat_k, self._route(flat_e)
 
     def _send_device(self, g: int, slot: int, layer: int, e: int, xf_np,
@@ -253,11 +305,13 @@ class DisaggregatedExecutor:
             self.moe_bufs[e].dispatch_send(g, j, p)
         self._logev("dispatch", g, slot, layer, e, int(len(t_rows)))
 
-    def _dispatch(self, g: int, slot: int, layer: int, xf, idx):
+    def _dispatch(self, g: int, slot: int, layer: int, xf, idx,
+                  valid: Optional[np.ndarray] = None):
         """async-dispatch-send: ONE stable argsort over (device, expert)
         keys builds all E payloads — no per-device boolean scans."""
         xf_np = np.asarray(xf)
-        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx))
+        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx),
+                                                         layer, valid)
         order = np.argsort(dev * max(self.cfg.num_experts, 1) + flat_e,
                            kind="stable")
         dev_s, e_s = dev[order], flat_e[order]
@@ -269,12 +323,14 @@ class DisaggregatedExecutor:
             self._send_device(g, slot, layer, e, xf_np, t_s[sl], k_s[sl],
                               self._g2l[e, e_s[sl]])
 
-    def _dispatch_eager(self, g: int, slot: int, layer: int, xf, idx):
+    def _dispatch_eager(self, g: int, slot: int, layer: int, xf, idx,
+                        valid: Optional[np.ndarray] = None):
         """Pre-fusion dispatch: E boolean scans over the flat assignment
         arrays (kept as the benchmark baseline; still placement-routed so
         the numerical contract holds on every policy)."""
         xf_np = np.asarray(xf)
-        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx))
+        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx),
+                                                         layer, valid)
         for e in range(self.E):
             m = dev == e
             self._send_device(g, slot, layer, e, xf_np, flat_t[m], flat_k[m],
@@ -366,7 +422,9 @@ class DisaggregatedExecutor:
                 if len(tokens):
                     # layer-oblivious: `layer` is runtime data indexing the
                     # resident all-layer weight stack (super-kernel semantics)
+                    t0 = self.clock()
                     out = ffn(e, layer, tokens, eids)
+                    self.moe_busy[e] += self.clock() - t0
                 else:
                     out = None
                 self._logev("moe", e, i, slot, layer, len(tokens))
@@ -374,30 +432,80 @@ class DisaggregatedExecutor:
                     e, CombinePayload(layer=layer, token_ids=token_ids,
                                       expert_ids=eids, outputs=out))
         except BaseException as ex:  # surface thread failures to the caller
-            self.errors.append(ex)
-            self.stop.set()
+            self._panic(ex)
 
     # --------------------------------------------------------- group worker
-    def _group_worker(self, g: int, jobs: List[BatchJob]):
+    def _panic(self, ex: BaseException):
+        """Surface a worker-thread failure to every waiter."""
+        self.errors.append(ex)
+        self.stop.set()
+        with self._jobq_cv:
+            self._jobq_cv.notify_all()
+        with self._done_cv:
+            self._done_cv.notify_all()
+        for buf in self.moe_bufs:
+            buf.wake()
+
+    def _take_job(self, g: int, timeout: float = 0.0) -> Optional[BatchJob]:
+        """Pop the oldest admitted job this group may serve (un-pinned or
+        pinned to g).  `timeout` > 0 blocks until one arrives — the pull
+        model IS the least-loaded assignment: whichever group frees a slot
+        first takes the head of the shared queue."""
+        deadline = time.monotonic() + timeout if timeout > 0 else None
+        with self._jobq_cv:
+            while True:
+                for i, job in enumerate(self._jobq):
+                    if job.group is None or job.group == g:
+                        job = self._jobq.pop(i)
+                        job.group = g  # record the measured assignment
+                        return job
+                if deadline is None or self.stop.is_set():
+                    return None
+                wait = deadline - time.monotonic()
+                if wait <= 0:
+                    return None
+                self._jobq_cv.wait(wait)
+
+    def _group_worker(self, g: int):
+        """Persistent serving loop of one attention DP group (ISSUE 4): pull
+        jobs from the shared admission queue into free dual-batch slots, run
+        the attention+dispatch/combine state machine, report completions out
+        of order via `on_complete`, repeat until the engine closes."""
         try:
             fused = self.moe_path == "fused"
             dispatch = self._dispatch if fused else self._dispatch_eager
-            queue = list(jobs)
             active: List[Dict[str, Any]] = []
             free_slots = [0, 1] if self.interleave else [0]
             seq = 0
-            while queue or active:
-                while queue and free_slots:
-                    job = queue.pop(0)
+            while not self.stop.is_set():
+                # admit into free slots; block (bounded) only when idle
+                while free_slots:
+                    job = self._take_job(
+                        g, timeout=0.0 if active else (self.idle_backoff
+                                                       or 0.05))
+                    if job is None:
+                        break
+                    if job.t_started is None:
+                        job.t_started = self.clock()
+                    tok = np.asarray(job.tokens)
+                    # valid-position mask: pad rows compute but don't count
+                    # toward measured router stats
+                    valid = None
+                    if job.lengths is not None:
+                        valid = (np.arange(tok.shape[1])[None, :]
+                                 < np.asarray(job.lengths)[:, None]).reshape(-1)
                     h = embed_tokens(self.params, jnp.asarray(job.tokens),
                                      None, self.cfg)
                     active.append({"job": job, "h": h, "layer": 0,
                                    "phase": "attn", "slot": free_slots.pop(0),
-                                   "ctx": None, "seq": 0})
+                                   "ctx": None, "seq": 0, "valid": valid})
+                if not active:
+                    continue  # idle: loop back into the blocking take
                 # run attention+dispatch for every slot that is ready
                 for st in active:
                     if st["phase"] != "attn":
                         continue
+                    t0 = self.clock()
                     if fused:
                         h, xf, w, idx, shared = self._attn_step(
                             jnp.asarray(st["layer"], jnp.int32), st["h"])
@@ -405,9 +513,12 @@ class DisaggregatedExecutor:
                     else:
                         h, xf, w, idx, shared = self._attn_part(
                             self._layer_params(st["layer"]), st["h"])
+                    dt = self.clock() - t0
+                    st["job"].kernel_time += dt
+                    self.group_busy[g] += dt
                     st["h"] = h
                     st["ctx"] = (xf, w, shared)
-                    dispatch(g, st["slot"], st["layer"], xf, idx)
+                    dispatch(g, st["slot"], st["layer"], xf, idx, st["valid"])
                     st["phase"] = "wait"
                     st["seq"] = seq = seq + 1
                 # block on the oldest outstanding combine
@@ -416,67 +527,156 @@ class DisaggregatedExecutor:
                     continue
                 st = min(waiting, key=lambda s: s["seq"])
                 xf, w, shared = st["ctx"]
+                t0 = self.clock()
                 st["h"] = self._combine(g, st["slot"], st["h"], xf, w, shared)
+                st["job"].comm_time += self.clock() - t0
                 st["layer"] += 1
                 if st["layer"] >= self.L:
-                    st["job"].result = np.asarray(
+                    job = st["job"]
+                    t0 = self.clock()
+                    job.result = np.asarray(
                         apply_norm(st["h"], self.params["final_norm"], self.cfg))
+                    dt = self.clock() - t0
+                    job.kernel_time += dt
+                    self.group_busy[g] += dt
+                    job.t_finished = self.clock()
                     free_slots.append(st["slot"])
                     active.remove(st)
+                    if self.on_complete is not None:
+                        self.on_complete(job)  # streaming completion hook
+                    with self._done_cv:
+                        self._done_cv.notify_all()
                 else:
                     st["phase"] = "attn"
         except BaseException as ex:
-            self.errors.append(ex)
-            self.stop.set()
+            self._panic(ex)
 
-    # ------------------------------------------------------------------ run
-    def run(self, jobs_per_group: List[List[BatchJob]],
-            timeout: float = 300.0) -> List[BatchJob]:
-        assert len(jobs_per_group) == self.D
+    # ------------------------------------------------- engine lifecycle/run
+    def ensure_started(self):
+        """Spawn the persistent worker set once; raise instead of racing a
+        wedged engine (thread failure or a timed-out wave still in flight)."""
         if self.errors:
             raise RuntimeError("executor reused after a thread failure") \
                 from self.errors[0]
         self._hung = [t for t in self._hung if t.is_alive()]
         if self._hung:
-            # a timed-out run left live threads sharing our buffers —
-            # clearing `stop` would revive them mid-protocol and race a new
-            # worker set on dispatch_recv
+            # a timed-out wave left live threads sharing our buffers —
+            # submitting more work would race them mid-protocol
             raise RuntimeError(
                 "executor reused while thread(s) from a timed-out run are "
                 f"still alive: {[t.name for t in self._hung]}")
-        self.stop.clear()  # executors are reusable: warm runs re-enter here
-        moe_threads = [threading.Thread(target=self._moe_worker, args=(e,),
-                                        name=f"moe-{e}", daemon=True)
-                       for e in range(self.E)]
-        for t in moe_threads:
+        if self._started:
+            return
+        self.stop.clear()
+        if self._t_serving_start is None:
+            self._t_serving_start = self.clock()
+        self._moe_threads = [
+            threading.Thread(target=self._moe_worker, args=(e,),
+                             name=f"moe-{e}", daemon=True)
+            for e in range(self.E)]
+        self._g_threads = [
+            threading.Thread(target=self._group_worker, args=(g,),
+                             name=f"group-{g}", daemon=True)
+            for g in range(self.D)]
+        for t in self._moe_threads + self._g_threads:
             t.start()
-        g_threads = [threading.Thread(target=self._group_worker, args=(g, js),
-                                      name=f"group-{g}", daemon=True)
-                     for g, js in enumerate(jobs_per_group)]
-        for t in g_threads:
-            t.start()
-        deadline = time.monotonic() + timeout
-        for t in g_threads:
-            t.join(timeout=max(deadline - time.monotonic(), 1e-3))
-        self._hung = [t for t in g_threads if t.is_alive()]
-        hung = [t.name for t in self._hung]
-        self.stop.set()
-        for buf in self.moe_bufs:
-            buf.wake()  # prompt exit for workers idling in wait_any
-        for t in moe_threads:
-            t.join(timeout=30)
+        self._started = True
+
+    def submit_job(self, job: BatchJob) -> BatchJob:
+        """Admit one batch job (engine path).  Un-pinned jobs go to the
+        least-loaded group (pull model); `job.group` pins (run() shim)."""
+        self.ensure_started()
+        if job.t_submitted is None:
+            job.t_submitted = self.clock()
+        with self._jobq_cv:
+            self._jobq.append(job)
+            self._jobq_cv.notify_all()
+        return job
+
+    def wait_jobs(self, jobs: Sequence[BatchJob],
+                  timeout: Optional[float] = None) -> bool:
+        """Block until every job in `jobs` completed (or a worker died).
+        Returns False on timeout."""
+        with self._done_cv:
+            ok = self._done_cv.wait_for(
+                lambda: bool(self.errors)
+                or all(j.result is not None for j in jobs), timeout)
         if self.errors:
             raise RuntimeError("executor thread failed") from self.errors[0]
-        if hung:
-            # a hung group thread must NOT silently return jobs with
-            # result=None — report which threads are stuck and what the
-            # protocol saw last
-            self._hung += [t for t in moe_threads if t.is_alive()]
-            stuck_moe = [t.name for t in moe_threads if t.is_alive()]
-            with self._log_lock:
-                tail = self.log[-6:]
-            raise TimeoutError(
-                f"executor run exceeded {timeout}s: group thread(s) "
-                f"{hung} still alive (moe alive: {stuck_moe or 'none'}); "
-                f"last protocol events: {tail}")
-        return [j for js in jobs_per_group for j in js]
+        return bool(ok)
+
+    def close(self, timeout: float = 30.0):
+        """Stop the persistent workers and join them.  Drain first (the
+        engine does) — a close with work in flight abandons it."""
+        if not self._started:
+            return
+        self.stop.set()
+        with self._jobq_cv:
+            self._jobq_cv.notify_all()
+        with self._done_cv:
+            self._done_cv.notify_all()
+        for buf in self.moe_bufs:
+            buf.wake()  # prompt exit for workers idling in wait_any
+        for t in self._g_threads + self._moe_threads:
+            t.join(timeout=timeout)
+        alive = [t.name for t in self._g_threads + self._moe_threads
+                 if t.is_alive()]
+        self._hung += [t for t in self._g_threads + self._moe_threads
+                       if t.is_alive()]
+        self._g_threads, self._moe_threads = [], []
+        self._started = False
+        if not alive:
+            self.stop.clear()  # a clean close is restartable (warm jit
+            # caches); with survivors, `stop` must STAY set so a zombie that
+            # later escapes a blocked combine exits instead of serving again
+        if alive:
+            raise TimeoutError(f"executor close: thread(s) {alive} did not "
+                               f"exit within {timeout}s")
+
+    def run(self, jobs_per_group: List[List[BatchJob]],
+            timeout: float = 300.0) -> List[BatchJob]:
+        """One-shot compatibility shim over the engine: pin each job to its
+        hand-chosen group, submit the wave, block until it completes, then
+        release the worker set (pre-engine callers never close(); the jit
+        caches live on the object, so warm re-runs stay warm)."""
+        assert len(jobs_per_group) == self.D
+        self.ensure_started()
+        jobs: List[BatchJob] = []
+        for g, js in enumerate(jobs_per_group):
+            for j in js:
+                j.group = g
+                j.result = None
+                j.t_started = j.t_finished = None
+                j.kernel_time = j.comm_time = 0.0
+                jobs.append(j)
+        for j in jobs:
+            self.submit_job(j)
+        if self.wait_jobs(jobs, timeout):
+            self.close()  # idle workers join promptly; one-shot semantics
+            return [j for js in jobs_per_group for j in js]
+        # a hung wave must NOT silently return jobs with result=None — stop
+        # the engine, reap what exits, and refuse reuse while survivors
+        # still share our buffers (they would race a new worker set
+        # mid-protocol); report thread state + the protocol tail
+        self.stop.set()
+        with self._jobq_cv:
+            self._jobq_cv.notify_all()
+        for buf in self.moe_bufs:
+            buf.wake()
+        grace = time.monotonic() + 2.0
+        for t in self._g_threads + self._moe_threads:
+            t.join(timeout=max(grace - time.monotonic(), 1e-3))
+        self._hung = [t for t in self._g_threads + self._moe_threads
+                      if t.is_alive()]
+        hung_g = [t.name for t in self._g_threads if t.is_alive()]
+        stuck_moe = [t.name for t in self._moe_threads if t.is_alive()]
+        self._g_threads, self._moe_threads = [], []
+        self._started = False
+        if not self._hung:  # a late-but-clean exit leaves the executor
+            self.stop.clear()  # reusable, like the pre-engine run()
+        with self._log_lock:
+            tail = self.log[-6:]
+        raise TimeoutError(
+            f"executor run exceeded {timeout}s: group thread(s) "
+            f"{hung_g} still alive (moe alive: {stuck_moe or 'none'}); "
+            f"last protocol events: {tail}")

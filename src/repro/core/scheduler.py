@@ -66,6 +66,22 @@ class LengthAwareBatcher:
     # timer for leftovers (which would let them wait up to 2x max_wait).
     _pending_t: List[float] = dataclasses.field(default_factory=list)
 
+    @property
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_tokens(self) -> int:
+        return sum(r.length for r in self._pending)
+
+    def next_flush_due(self, now: float) -> Optional[float]:
+        """When the oldest pending request will age out (None if empty) —
+        the executor engine's admission loop sleeps until min(next arrival,
+        this deadline) instead of spin-polling the batcher."""
+        if not self._pending:
+            return None
+        return self._pending_t[0] + self.max_wait
+
     def retarget(self, inflection: int) -> None:
         """Re-derive the inflection target online (ISSUE 2): the simulator's
         rebalancer calls this when a placement switch moves the hottest MoE

@@ -95,6 +95,11 @@ class SimConfig:
     # expert-parallel routing skew (None -> fall back to trace.ep_skew*)
     ep_skew: Optional[float] = None  # Zipf exponent; 0 == uniform
     ep_skew_mode: Optional[str] = None  # uniform | zipf | layer
+    # MEASURED per-expert token fractions from a live run (ISSUE 4 / ROADMAP
+    # item (a)): overrides the synthetic Zipf knob when set — the load model
+    # runs in "measured" mode on this vector (resampled onto the model's
+    # expert count when the lengths differ).
+    measured_fractions: Optional[Tuple[float, ...]] = None
     # expert placement / hot-expert replication / online rebalancing (ISSUE 2)
     placement: str = "round_robin"  # round_robin|greedy_balanced|replicated(k)
     replicate_hot: int = 0  # top-k hottest experts replicated (forces policy)
@@ -109,7 +114,10 @@ class SimConfig:
     failure_moe_device: Optional[int] = None  # kill an MoE device instead
 
     def resolved_skew(self) -> Tuple[str, float]:
-        """Effective (mode, alpha): SimConfig overrides TraceConfig."""
+        """Effective (mode, alpha): SimConfig overrides TraceConfig; a
+        measured-fractions vector overrides both (alpha unused)."""
+        if self.measured_fractions is not None:
+            return "measured", 0.0
         alpha = self.ep_skew if self.ep_skew is not None else self.trace.ep_skew
         mode = self.ep_skew_mode if self.ep_skew_mode is not None \
             else self.trace.ep_skew_mode
@@ -183,6 +191,17 @@ class _Engine:
     def at(self, t: float, fn: Callable):
         heapq.heappush(self._heap, (t, next(self._ctr), fn))
 
+    def step(self) -> bool:
+        """Pop and execute ONE event; False when the heap is empty.  The
+        incremental drive the SimEngine uses to stream completions out of a
+        batch-oriented simulation (virtual time advances event by event)."""
+        if not self._heap:
+            return False
+        t, _, fn = heapq.heappop(self._heap)
+        self.now = max(self.now, t)  # events injected late never rewind time
+        fn()
+        return True
+
     def run(self, horizon: float):
         while self._heap:
             t, _, fn = heapq.heappop(self._heap)
@@ -233,7 +252,7 @@ class AsapSim(_Engine):
         self.load_model = ExpertLoadModel(
             num_experts=max(cfg.num_experts, 1), top_k=max(cfg.top_k, 1),
             ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed,
-            placement=initial)
+            placement=initial, measured=sim.measured_fractions)
         if initial != Placement():
             self.cm = dataclasses.replace(
                 self.cm, copies_override=self.load_model.expected_copies())
@@ -271,13 +290,22 @@ class AsapSim(_Engine):
                                   Tuple[float, np.ndarray]] = {}
         self.done: List[Request] = []
         self.decomp: Dict[int, Dict[str, float]] = {}
+        self.total_requests = 0
+        self._armed = False
+        # router-statistics hook (ISSUE 4): callable(tokens, lkey) invoked
+        # once per batch-layer the MoE stage serves — the SimEngine feeds a
+        # RouterStatsCollector with the load model's per-expert fractions so
+        # sim and executor expose the same measured-stats surface.
+        self.router_hook: Optional[Callable] = None
 
     # --------------------------------------------------------------- intake
-    def start(self):
-        reqs = generate_requests(self.sim.rps, self.sim.duration, self.sim.trace)
-        self.total_requests = len(reqs)
-        for r in reqs:
-            self.at(r.arrival, lambda r=r: self._arrive(r))
+    def arm(self):
+        """Schedule the non-request events (failure injection, rebalancer
+        ticks) exactly once.  Split out of start() so the SimEngine can drive
+        submissions itself (ISSUE 4): arm() + inject() == start()."""
+        if self._armed:
+            return self
+        self._armed = True
         if self.sim.failure_moe_device is not None:
             if self.sim.failure_at is None:
                 raise ValueError(
@@ -293,6 +321,19 @@ class AsapSim(_Engine):
                     self._repair)
         if self.sim.rebalance_interval:
             self.at(self.sim.rebalance_interval, self._rebalance)
+        return self
+
+    def inject(self, reqs: List[Request]):
+        """Schedule externally supplied requests (engine submissions).  An
+        arrival in the virtual past is admitted 'now' — time never rewinds."""
+        self.total_requests += len(reqs)
+        for r in reqs:
+            self.at(max(r.arrival, self.now), lambda r=r: self._arrive(r))
+
+    def start(self):
+        self.arm()
+        self.inject(generate_requests(self.sim.rps, self.sim.duration,
+                                      self.sim.trace))
         return self
 
     def _arrive(self, r: Request):
@@ -384,6 +425,8 @@ class AsapSim(_Engine):
             return
         tokens = st.batch.total_tokens
         lkey = st.layer if self.load_model.mode == "zipf" else 0
+        if self.router_hook is not None:
+            self.router_hook(tokens, lkey)
         cached = self._moe_lat_cache.get((tokens, lkey))
         if cached is None:
             loads = self.load_model.device_loads(tokens, lkey)
@@ -443,9 +486,14 @@ class AsapSim(_Engine):
         for r in st.batch.requests:
             r.first_token_time = self.now
             self.done.append(r)
+            non_kernel = max((r.ttft or 0.0) - st.kernel_time, 0.0)
+            started = st.t_started if st.t_started is not None else r.arrival
             self.decomp[r.rid] = {
                 "kernel": st.kernel_time,
-                "non_kernel": max((r.ttft or 0.0) - st.kernel_time, 0.0),
+                "non_kernel": non_kernel,
+                # admission wait (a component OF non_kernel, reported
+                # separately for the engine's RequestResult decomposition)
+                "queue": min(max(started - r.arrival, 0.0), non_kernel),
             }
         self._assign()
         if g is not None:
@@ -614,7 +662,8 @@ class SyncSim(_Engine):
         self.load_model = ExpertLoadModel(
             num_experts=max(cfg.num_experts, 1), top_k=max(cfg.top_k, 1),
             ep=dep.E, mode=mode, alpha=alpha, seed=sim.trace.seed,
-            placement=sim.resolved_placement())
+            placement=sim.resolved_placement(),
+            measured=sim.measured_fractions)
         if self.load_model.placement != Placement():
             self.cm = dataclasses.replace(
                 self.cm, copies_override=self.load_model.expected_copies())
@@ -628,12 +677,15 @@ class SyncSim(_Engine):
         self.moe_rank_time = np.zeros(dep.E)
         self.done: List[Request] = []
         self.decomp: Dict[int, Dict[str, float]] = {}
+        self.total_requests = 0
+        self._armed = False
+        self.router_hook: Optional[Callable] = None  # see AsapSim
 
-    def start(self):
-        reqs = generate_requests(self.sim.rps, self.sim.duration, self.sim.trace)
-        self.total_requests = len(reqs)
-        for r in reqs:
-            self.at(r.arrival, lambda r=r: self._arrive(r))
+    def arm(self):
+        """Schedule the failure event once (SimEngine split, see AsapSim)."""
+        if self._armed:
+            return self
+        self._armed = True
         if self.sim.failure_moe_device is not None:
             if self.sim.failure_at is None:
                 raise ValueError(
@@ -644,6 +696,17 @@ class SyncSim(_Engine):
                     f"outside [0, {self.dep.E})")
         if self.sim.failure_at is not None:
             self.at(self.sim.failure_at, self._fail)
+        return self
+
+    def inject(self, reqs: List[Request]):
+        self.total_requests += len(reqs)
+        for r in reqs:
+            self.at(max(r.arrival, self.now), lambda r=r: self._arrive(r))
+
+    def start(self):
+        self.arm()
+        self.inject(generate_requests(self.sim.rps, self.sim.duration,
+                                      self.sim.trace))
         return self
 
     def _arrive(self, r: Request):
@@ -723,6 +786,10 @@ class SyncSim(_Engine):
             self.engine_busy = False
             self._inflight = None
             return
+        if self.router_hook is not None:
+            zipf = self.load_model.mode == "zipf"
+            for l in range(self.cfg.num_layers):
+                self.router_hook(total_tokens, l if zipf else 0)
         attn = [self.cm_group_attention(lens[g], prefixes[g]) for g in range(D)]
         attn_max = max(attn)
         L = self.cfg.num_layers

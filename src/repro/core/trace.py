@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import time
 from typing import Iterator, List, Optional
 
 import numpy as np
@@ -70,3 +72,55 @@ def generate_requests(rps: float, duration: float,
         out.append(Request(rid=rid, arrival=t, length=int(lengths[rid % len(lengths)])))
         rid += 1
     return out
+
+
+class TraceClock:
+    """Replayable wall clock in TRACE seconds (ISSUE 4 tentpole).
+
+    The real executor engine honors `Request.arrival` by replaying the trace
+    timeline against this clock: `now()` returns seconds of trace time since
+    `start()`, advancing `speed` trace-seconds per wall-second, so a 60 s
+    production trace can be replayed through the smoke-scale executor in
+    60/speed wall seconds without changing any arrival arithmetic.  All
+    engine-side timestamps (queue/kernel/comm decompositions, TTFT) are in
+    trace seconds, directly comparable with the discrete-event simulator's
+    virtual time.
+
+    `sleep_until(t)` blocks (in wall time) until trace time `t`, waking early
+    when `event` is set — the admission loop uses it to replay arrivals.
+    """
+
+    def __init__(self, speed: float = 1.0):
+        assert speed > 0, "speed must be positive"
+        self.speed = float(speed)
+        self._t0: Optional[float] = None
+
+    def start(self) -> "TraceClock":
+        """(Re)anchor trace t=0 at the current wall time.  Idempotent-safe:
+        calling start() again replays the trace from the beginning."""
+        self._t0 = time.monotonic()
+        return self
+
+    def now(self) -> float:
+        if self._t0 is None:
+            self.start()
+        return (time.monotonic() - self._t0) * self.speed
+
+    def wall_delay(self, trace_dt: float) -> float:
+        """Wall seconds corresponding to `trace_dt` trace seconds."""
+        return max(trace_dt, 0.0) / self.speed
+
+    def sleep_until(self, t: float,
+                    event: Optional[threading.Event] = None,
+                    max_wall: float = 0.05) -> float:
+        """Block until trace time >= t (or `event` fires); returns now().
+        Sleeps in <= `max_wall`-second wall slices so a close() is prompt."""
+        while True:
+            now = self.now()
+            if now >= t or (event is not None and event.is_set()):
+                return now
+            delay = min(self.wall_delay(t - now), max_wall)
+            if event is not None:
+                event.wait(delay)
+            else:
+                time.sleep(delay)

@@ -1,109 +1,161 @@
-"""Serving launcher: drives the ASAP pipeline end-to-end.
+"""Serving launcher: drives the ASAP pipeline end-to-end through the ONE
+online `ServingEngine` API (core/engine.py, ISSUE 4) — timed request
+arrivals, streaming out-of-order completions, measured router statistics —
+over either runtime:
 
-Two modes:
-  --engine executor : REAL disaggregated threaded runtime (attention device
+  --engine executor : REAL disaggregated threaded runtime (attention group
                       threads + MoE device threads + shared-buffer async
-                      primitives) on a reduced MoE model, batched requests
-                      through length-aware batching + dual-batch interleaving,
-                      then token sampling from the returned hidden states.
-  --engine sim      : discrete-event simulation at production scale — prints
-                      the TTFT/SLO summary for a given RPS.
+                      primitives) on a reduced MoE model.  Requests arrive
+                      on a replayable TraceClock at --rps (Poisson), flow
+                      through the length-aware batcher into the shared
+                      admission queue, and whichever attention group frees a
+                      dual-batch slot first pulls the batch (least-loaded
+                      assignment — no caller-side hand partition).  Each
+                      completion prints as it lands: TTFT with its
+                      queue/kernel/comm decomposition and the sampled first
+                      token.  Measured per-expert routing fractions are
+                      reported (and saved with --save-router-stats) — the
+                      vector `--placement`/`expert_fractions` consumers eat.
+  --engine sim      : the same lifecycle over the discrete-event simulator
+                      at production scale (virtual time).
 
-  PYTHONPATH=src python -m repro.launch.serve --engine executor --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --engine executor --requests 8 --rps 4
   PYTHONPATH=src python -m repro.launch.serve --engine sim --rps 4
 
+Geometry is shared by both engines: --dp-groups D attention groups and
+--moe-devices E MoE devices (defaults: 2x4 executor smoke, 4x16 sim
+paper-faithful).  --time-scale compresses the executor's wall-clock replay
+(trace seconds per wall second).
+
 Executor hot-path knobs (ISSUE 3): --moe-path fused|eager selects the fused
-super-kernel pipeline (jitted attention step + capacity-buffer packed MoE)
-or the pre-fusion per-expert loop; --moe-kernel pallas|ref picks the fused
-backend; --placement/--replicate-hot drive the executor's replica-aware
-dispatch through the same Placement tables as the simulator.
+super-kernel pipeline or the pre-fusion per-expert loop; --moe-kernel
+pallas|ref picks the fused backend.
 
 Expert placement / fault-injection knobs (sim engine, ISSUE 2):
   --placement {round_robin,greedy_balanced,replicated,replicated(k)}
   --replicate-hot K        split the K hottest experts across hosts
-  --rebalance-interval S   online rebalancer tick (migrate once imbalance
-                           is observed; weight migration is charged)
+  --rebalance-interval S   online rebalancer tick
   --failure-at T --failure-duration W
-  --fail-moe-device D      kill MoE device D at T (otherwise the DP-group
-                           outage of --failure-at applies)
+  --fail-moe-device D      kill MoE device D at T
+  --measured-from PATH     drive the sim's expert-load model from router
+                           stats measured on a live run (RouterStatsCollector
+                           JSON, e.g. --save-router-stats output) instead of
+                           the synthetic --ep-skew Zipf
   e.g. PYTHONPATH=src python -m repro.launch.serve --engine sim --rps 2 \
          --ep-skew 1.2 --replicate-hot 2 --rebalance-interval 5
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.cost_model import Deployment, Placement
-from repro.core.executor import BatchJob, DisaggregatedExecutor
+from repro.core.engine import (ExecutorEngine, RouterStatsCollector,
+                               SimEngine)
+from repro.core.executor import DisaggregatedExecutor
 from repro.core.scheduler import LengthAwareBatcher
-from repro.core.simulator import SimConfig, run_sim
-from repro.core.trace import Request, TraceConfig, sample_lengths
-from repro.models.lm import init_lm_params, lm_head
+from repro.core.simulator import SimConfig
+from repro.core.trace import Request, TraceClock, TraceConfig, \
+    generate_requests, sample_lengths
+from repro.models.lm import init_lm_params
 
 
-def run_executor(args):
+def _fmt_decomp(d):
+    return " ".join(f"{k}={v * 1000:.0f}ms" for k, v in d.items())
+
+
+def run_executor(args) -> int:
     cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
         num_layers=3, num_experts=8, top_k=2)
     key = jax.random.PRNGKey(args.seed)
     params = init_lm_params(key, cfg)
-    D, E = 2, 4
+    D = args.dp_groups if args.dp_groups is not None else 2
+    E = args.moe_devices if args.moe_devices is not None else 4
     placement = Placement.parse(args.placement,
                                 replicate_hot=args.replicate_hot)
-    print(f"disaggregated executor: D={D} attention groups, E={E} MoE devices, "
-          f"{cfg.num_layers}L x {cfg.num_experts}e model  "
+    print(f"disaggregated executor engine: D={D} attention groups, E={E} MoE "
+          f"devices, {cfg.num_layers}L x {cfg.num_experts}e model  "
           f"[moe_path={args.moe_path} kernel={args.moe_kernel} "
           f"placement={placement.policy}"
           + (f"(hot={placement.replicate_hot})" if placement.replicate_hot
-             else "") + "]")
+             else "") + f" time-scale={args.time_scale}x]")
 
-    # length-aware batching of incoming requests
+    # timed arrivals: Poisson at --rps on the replayable trace clock
+    # (satellite: --rps now drives the executor path, not just the sim)
+    rng = np.random.default_rng(args.seed + 1)
     lengths = np.clip(sample_lengths(args.requests,
                                      TraceConfig(mean_len=48, max_len=64,
                                                  seed=args.seed)), 8, 64)
-    batcher = LengthAwareBatcher(inflection=64, max_tokens=128,
-                                 exclusive_cutoff=10_000)
-    batches = []
-    for i, ln in enumerate(lengths):
-        batches += batcher.add(Request(rid=i, arrival=0.0, length=int(ln)), 0.0)
-    batches += batcher.flush(0.0)
-    print(f"{args.requests} requests -> {len(batches)} length-aware batches "
-          f"(tokens: {[b.total_tokens for b in batches]})")
+    arrivals = np.cumsum(rng.exponential(1.0 / max(args.rps, 1e-9),
+                                         size=args.requests))
+    reqs = [Request(rid=i, arrival=float(arrivals[i]), length=int(lengths[i]))
+            for i in range(args.requests)]
+    print(f"{args.requests} requests, Poisson arrivals at {args.rps} req/s "
+          f"(last at t={arrivals[-1]:.2f}s), lengths "
+          f"{[int(x) for x in lengths]}")
 
-    S = 32  # per-request padded length inside the demo executor
-    jobs = []
-    for b in batches:
-        toks = np.random.RandomState(b.bid).randint(
-            0, cfg.vocab_size, (len(b.requests), S)).astype(np.int32)
-        jobs.append(BatchJob(tokens=toks, bid=b.bid))
-    per_group = [jobs[g::D] for g in range(D)]
-
-    t0 = time.time()
     ex = DisaggregatedExecutor(params, cfg, D=D, E=E, placement=placement,
                                moe_path=args.moe_path,
                                moe_kernel=args.moe_kernel,
                                idle_backoff=args.idle_backoff)
-    done = ex.run(per_group)
+    engine = ExecutorEngine(
+        ex, clock=TraceClock(speed=args.time_scale),
+        batcher=LengthAwareBatcher(inflection=64, max_tokens=128,
+                                   exclusive_cutoff=10_000, max_wait=0.05))
+    t0 = time.time()
+    handles = engine.submit_all(reqs)
+    results = []
+    while len(results) < len(reqs) and time.time() - t0 < 600:
+        for r in engine.poll():
+            results.append(r)
+            print(f"  done rid={r.rid:<3d} batch={r.batch_id} "
+                  f"group={r.group} ttft={r.ttft:.3f}s "
+                  f"first_token={r.first_token}  [{_fmt_decomp(r.decomposition)}]")
+        time.sleep(0.01)
+    results += engine.drain(timeout=120)
     wall = time.time() - t0
-    ooo = sum(1 for i in range(1, len(ex.log))
-              if ex.log[i][0] == "moe" and ex.log[i - 1][0] == "moe"
-              and ex.log[i][4] < ex.log[i - 1][4])
-    print(f"completed {len(done)} batches in {wall:.1f}s; "
-          f"out-of-order MoE layer transitions observed: {ooo}")
-    for j in done[: args.show]:
-        h = jnp.asarray(j.result[:, -1])
-        logits = lm_head(params, h, cfg)
-        next_tok = jnp.argmax(logits, -1)
-        print(f"  batch {j.bid}: first tokens {np.asarray(next_tok)[:4]}")
+
+    # out-of-order completion evidence (the async-serving property)
+    order = [r.rid for r in results]
+    ooo = sum(1 for a, b in zip(order, order[1:]) if b < a)
+    st = engine.stats()
+    print(f"completed {len(results)}/{len(reqs)} requests in {wall:.1f}s wall "
+          f"({st.elapsed:.1f}s trace); out-of-order completions: {ooo}")
+    u = st.moe_device_util
+    print(f"MoE device util: mean {u.mean() * 100:.0f}%  max "
+          f"{u.max() * 100:.0f}%  imbalance {st.moe_imbalance():.2f}x; "
+          f"attention group util: {np.round(st.group_util, 2)}")
+    fr = st.expert_fractions
+    hot = [int(e) for e in engine.router_stats.hot_experts(3)]
+    print(f"measured router stats: {st.router_assignments:.0f} assignments, "
+          f"fractions sum {fr.sum():.3f}, hottest experts {hot} "
+          f"({', '.join(f'{fr[e]:.3f}' for e in hot)})")
+    if args.save_router_stats:
+        engine.router_stats.save(args.save_router_stats)
+        print(f"router stats saved to {args.save_router_stats}")
+    engine.close()
+
+    missing = [h.rid for h in handles if not h.done()]
+    if missing:  # CI smoke gate: per-request results must all exist
+        print(f"ERROR: missing results for rids {missing}", file=sys.stderr)
+        return 1
+    return 0
 
 
-def run_simulation(args):
+def run_simulation(args) -> int:
     cfg = get_config("deepseek_v32")
+    measured = None
+    if args.measured_from:
+        col = RouterStatsCollector.load(args.measured_from)
+        measured = col.resampled(max(cfg.num_experts, 1))
+        print(f"expert-load model driven by MEASURED fractions from "
+              f"{args.measured_from} ({col.total:.0f} assignments over "
+              f"{col.num_experts} experts, resampled to {cfg.num_experts})")
     sim = SimConfig(mode=args.mode, rps=args.rps, duration=args.duration,
                     ep_skew=args.ep_skew, ep_skew_mode=args.ep_skew_mode,
                     placement=args.placement,
@@ -111,11 +163,23 @@ def run_simulation(args):
                     rebalance_interval=args.rebalance_interval,
                     failure_at=args.failure_at,
                     failure_duration=args.failure_duration,
-                    failure_moe_device=args.fail_moe_device)
-    res = run_sim(cfg, sim)
+                    failure_moe_device=args.fail_moe_device,
+                    measured_fractions=measured)
+    deps = {}
+    if args.dp_groups is not None or args.moe_devices is not None:
+        D = args.dp_groups if args.dp_groups is not None else 4
+        E = args.moe_devices if args.moe_devices is not None else 16
+        deps = dict(asap_dep=Deployment(D=D, T=4, E=E),
+                    sync_dep=Deployment(D=2 * D, T=4, E=2 * E))
+    engine = SimEngine(cfg, sim, **deps)
+    engine.submit_all(generate_requests(args.rps, args.duration, sim.trace))
+    results = engine.drain()
+    st = engine.stats()
+
     pl = sim.resolved_placement()
     print(f"mode={args.mode} rps={args.rps} duration={args.duration}s "
-          f"ep_skew={args.ep_skew} ({args.ep_skew_mode})")
+          f"ep_skew={args.ep_skew} ({args.ep_skew_mode})"
+          + (" [measured fractions]" if measured else ""))
     extra = f"placement={pl.policy}"
     if pl.replicate_hot:
         extra += f"(hot={pl.replicate_hot})"
@@ -125,22 +189,42 @@ def run_simulation(args):
         extra += (f"  [MoE device {args.fail_moe_device} killed at "
                   f"t={args.failure_at}s]")
     print(f"  {extra}")
-    print(f"  completed: {len(res.ttfts)}/{res.total_requests}")
-    print(f"  mean TTFT: {res.mean_ttft*1000:.0f} ms   "
-          f"p99: {res.p99_ttft*1000:.0f} ms")
-    if res.moe_device_util is not None:
-        u = res.moe_device_util
-        print(f"  MoE device util: mean {u.mean()*100:.0f}%  "
-              f"max {u.max()*100:.0f}%  imbalance {res.moe_imbalance():.2f}x")
+    ttfts = np.array([r.ttft for r in results])
+    print(f"  completed: {len(results)}/{st.submitted}")
+    if len(ttfts):
+        print(f"  mean TTFT: {ttfts.mean() * 1000:.0f} ms   "
+              f"p99: {np.percentile(ttfts, 99) * 1000:.0f} ms")
+    if st.moe_device_util is not None:
+        u = st.moe_device_util
+        print(f"  MoE device util: mean {u.mean() * 100:.0f}%  "
+              f"max {u.max() * 100:.0f}%  imbalance {st.moe_imbalance():.2f}x")
+    return 0
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=["executor", "sim"], default="executor")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--show", type=int, default=4)
-    ap.add_argument("--rps", type=float, default=4.0)
+    ap.add_argument("--rps", type=float, default=4.0,
+                    help="Poisson arrival rate — drives BOTH engines' timed "
+                         "admission (ISSUE 4)")
     ap.add_argument("--duration", type=float, default=30.0)
+    ap.add_argument("--dp-groups", type=int, default=None,
+                    help="attention DP groups D, shared by both engines "
+                         "(default: 2 executor / 4 sim)")
+    ap.add_argument("--moe-devices", type=int, default=None,
+                    help="MoE expert devices E, shared by both engines "
+                         "(default: 4 executor / 16 sim)")
+    ap.add_argument("--time-scale", type=float, default=50.0,
+                    help="executor engine: trace seconds replayed per wall "
+                         "second (TraceClock speed)")
+    ap.add_argument("--save-router-stats", default=None, metavar="PATH",
+                    help="write measured per-expert routing stats (JSON) "
+                         "after an executor run — feed back via "
+                         "--measured-from or fig_ep_skew --skew measured")
+    ap.add_argument("--measured-from", default=None, metavar="PATH",
+                    help="sim engine: drive expert load from measured router "
+                         "stats JSON instead of synthetic --ep-skew")
     ap.add_argument("--mode", default="asap",
                     choices=["asap", "default", "chunked"])
     ap.add_argument("--ep-skew", type=float, default=0.0,
@@ -179,9 +263,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.engine == "executor":
-        run_executor(args)
-    else:
-        run_simulation(args)
+        sys.exit(run_executor(args))
+    sys.exit(run_simulation(args))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,215 @@
+"""ServingEngine (ISSUE 4): one request-lifecycle API over the simulator and
+the real executor — timed arrivals, streaming out-of-order completions,
+measured router statistics, and the sim/executor parity contract."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import ExpertLoadModel, resample_fractions
+from repro.core.engine import (EngineStats, RequestResult,
+                               RouterStatsCollector, SimEngine)
+from repro.core.simulator import SimConfig, run_sim
+from repro.core.trace import Request, TraceClock, generate_requests
+
+CFG = get_config("deepseek_v32")
+
+
+def _check_result_contract(results, requests):
+    """One RequestResult per request, monotone non-negative decomposition."""
+    assert sorted(r.rid for r in results) == sorted(r.rid for r in requests)
+    by_rid = {r.rid: r for r in requests}
+    for res in results:
+        req = by_rid[res.rid]
+        assert res.arrival == req.arrival and res.length == req.length
+        assert res.first_token_time >= res.arrival  # monotone timeline
+        assert res.ttft >= 0.0
+        for k, v in res.decomposition.items():
+            assert v >= -1e-12, (res.rid, k, v)
+        assert sum(res.decomposition.values()) <= res.ttft * (1 + 1e-6) + 1e-9
+
+
+# ---------------------------------------------------------------- TraceClock
+
+
+def test_trace_clock_speed_and_replay():
+    c = TraceClock(speed=200.0).start()
+    t0 = time.monotonic()
+    now = c.sleep_until(1.0)
+    wall = time.monotonic() - t0
+    assert now >= 1.0
+    assert wall < 0.5  # 1 trace-second at 200x is 5 ms wall
+    c.start()  # replayable: re-anchor to t=0
+    assert c.now() < 0.5
+
+
+def test_trace_clock_event_wakes_sleep():
+    c = TraceClock(speed=1.0).start()
+    ev = threading.Event()
+    ev.set()
+    t0 = time.monotonic()
+    c.sleep_until(30.0, event=ev)  # would be 30 s without the event
+    assert time.monotonic() - t0 < 1.0
+
+
+# ------------------------------------------------------- RouterStatsCollector
+
+
+def test_router_stats_fractions_sum_and_ranking():
+    """Acceptance criterion: fractions from a skewed run sum to 1 and rank
+    hot experts exactly as the router's measured assignments do."""
+    import jax
+    from repro.models.moe import router_topk
+    cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_experts=8, top_k=2)
+    # a deliberately skewed router: biased logits make a few experts hot
+    rng = np.random.RandomState(0)
+    router = rng.randn(cfg.d_model, cfg.num_experts).astype(np.float32)
+    router[:, 0] += 0.5  # hot expert
+    x = rng.randn(512, cfg.d_model).astype(np.float32)
+    _, idx, _ = router_topk(jax.numpy.asarray(router),
+                            jax.numpy.asarray(x), cfg)
+    idx = np.asarray(idx)
+
+    col = RouterStatsCollector(cfg.num_experts)
+    for layer in range(3):  # the executor records once per batch-layer
+        col.record(layer, idx)
+    fr = col.fractions()
+    assert fr.sum() == pytest.approx(1.0)
+    assert (fr >= 0).all()
+    assert col.total == pytest.approx(3 * idx.size)
+    # ranking must match the measured assignment histogram exactly
+    counts = np.bincount(idx.reshape(-1), minlength=cfg.num_experts)
+    assert list(col.hot_experts()) == \
+        list(np.argsort(-counts.astype(np.float64), kind="stable"))
+    np.testing.assert_allclose(fr, counts / counts.sum())
+    # per-layer view: identical rows were recorded on every layer
+    np.testing.assert_allclose(col.fractions(layer=1), fr)
+
+
+def test_router_stats_roundtrip_and_resample(tmp_path):
+    col = RouterStatsCollector(4)
+    col.record(0, counts=np.array([40.0, 30.0, 20.0, 10.0]))
+    p = tmp_path / "stats.json"
+    col.save(str(p))
+    back = RouterStatsCollector.load(str(p))
+    np.testing.assert_allclose(back.fractions(), col.fractions())
+    # resampling preserves normalization and descending order
+    r = np.asarray(col.resampled(16))
+    assert r.sum() == pytest.approx(1.0)
+    assert (np.diff(r) <= 1e-12).all()
+    # matching expert count: fractions verbatim, identities preserved
+    assert col.resampled(4) == col.fractions_tuple()
+    # exact-length resample is the sorted vector itself
+    np.testing.assert_allclose(resample_fractions((0.1, 0.4, 0.5), 3),
+                               [0.5, 0.4, 0.1])
+
+
+def test_expert_load_model_measured_mode():
+    # exact length: fractions used verbatim (identities preserved)
+    lm = ExpertLoadModel(num_experts=4, top_k=2, ep=2, mode="measured",
+                         measured=(0.4, 0.3, 0.2, 0.1))
+    np.testing.assert_allclose(lm.expert_fractions(0), [0.4, 0.3, 0.2, 0.1])
+    # layer-correlated: same fractions on every layer
+    np.testing.assert_allclose(lm.expert_fractions(3), lm.expert_fractions(0))
+    assert lm.hot_fraction() > 1.0 / lm.ep  # skew visible at the device level
+    # length mismatch: resampled onto the model's expert count
+    lm2 = ExpertLoadModel(num_experts=16, top_k=2, ep=4, mode="measured",
+                          measured=(0.7, 0.2, 0.1))
+    fr = lm2.expert_fractions(0)
+    assert len(fr) == 16 and fr.sum() == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="measured"):
+        ExpertLoadModel(num_experts=4, top_k=2, ep=2, mode="measured")
+
+
+def test_sim_config_measured_fractions_resolution():
+    sim = SimConfig(mode="asap", ep_skew=1.2,
+                    measured_fractions=(0.5, 0.3, 0.2))
+    assert sim.resolved_skew() == ("measured", 0.0)
+    res = run_sim(CFG, SimConfig(mode="asap", rps=1.0, duration=10.0,
+                                 measured_fractions=(0.5, 0.3, 0.2)))
+    assert res.completed_fraction() == 1.0
+
+
+# ------------------------------------------------------------------ SimEngine
+
+
+def test_sim_engine_streams_and_matches_batch_path():
+    """Engine lifecycle over the simulator: submissions with timed arrivals
+    produce exactly the batch path's TTFTs, streamed in completion order."""
+    sim = SimConfig(mode="asap", rps=2.0, duration=15.0)
+    reqs = generate_requests(sim.rps, sim.duration, sim.trace)
+    eng = SimEngine(CFG, sim)
+    handles = eng.submit_all(reqs)
+    first = eng.poll()  # advances virtual time until something completes
+    assert first, "poll() must stream the first completion"
+    rest = eng.drain()
+    results = first + rest
+    _check_result_contract(results, reqs)
+    # completion order is monotone in virtual completion time
+    times = [r.first_token_time for r in results]
+    assert times == sorted(times)
+    # bit-exact parity with the offline batch driver on the same trace
+    batch = run_sim(CFG, SimConfig(mode="asap", rps=2.0, duration=15.0))
+    assert {r.rid: r.ttft for r in results} == \
+        {r.rid: r.ttft for r in batch.requests}
+    # handles were fulfilled out of band
+    assert all(h.done() for h in handles)
+    assert handles[0].result().rid == reqs[0].rid
+    st = eng.stats()
+    assert isinstance(st, EngineStats)
+    assert st.completed == len(reqs)
+    assert st.expert_fractions.sum() == pytest.approx(1.0)
+    assert st.moe_device_util is not None and st.moe_device_util.mean() > 0
+
+
+def test_sim_engine_sync_backend_decomposition():
+    sim = SimConfig(mode="default", rps=1.0, duration=10.0)
+    reqs = generate_requests(sim.rps, sim.duration, sim.trace)
+    eng = SimEngine(CFG, sim)
+    eng.submit_all(reqs)
+    results = eng.drain()
+    _check_result_contract(results, reqs)
+    # the sync engine's decomposition partitions the whole TTFT
+    for r in results:
+        assert sum(r.decomposition.values()) == pytest.approx(r.ttft)
+
+
+def test_sim_engine_handle_result_fast_forwards():
+    sim = SimConfig(mode="asap", rps=1.0, duration=10.0)
+    reqs = generate_requests(sim.rps, sim.duration, sim.trace)
+    eng = SimEngine(CFG, sim)
+    handles = eng.submit_all(reqs)
+    last = handles[-1].result()  # drives the event heap to completion
+    assert last.rid == reqs[-1].rid and last.ttft >= 0
+    # everything that completed on the way is still delivered by poll()
+    assert len(eng.poll()) + 1 >= len([h for h in handles if h.done()]) - 1
+
+
+def test_sim_engine_late_submission_never_rewinds_time():
+    """A request submitted after the sim advanced past its arrival is
+    admitted at the current virtual time, not in the past."""
+    eng = SimEngine(CFG, SimConfig(mode="asap", rps=1.0, duration=5.0))
+    eng.submit(Request(rid=0, arrival=0.0, length=1024))
+    eng.drain()
+    t = eng._sim.now
+    eng.submit(Request(rid=1, arrival=0.0, length=1024))  # arrival in past
+    res = eng.drain()
+    assert len(res) == 1
+    assert res[0].first_token_time >= t
+
+
+def test_sim_engine_router_stats_follow_load_model():
+    """Expectation-recorded fractions rank experts exactly as the skewed
+    load model does."""
+    eng = SimEngine(CFG, SimConfig(mode="asap", rps=1.0, duration=10.0,
+                                   ep_skew=1.2, ep_skew_mode="layer"))
+    eng.submit_all(generate_requests(1.0, 10.0))
+    eng.drain()
+    fr = eng.stats().expert_fractions
+    assert fr.sum() == pytest.approx(1.0)
+    expect = eng._sim.load_model.expert_fractions(0)
+    assert list(np.argsort(-fr, kind="stable")) == \
+        list(np.argsort(-expect, kind="stable"))

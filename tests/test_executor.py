@@ -170,7 +170,7 @@ def test_run_raises_on_hung_group_thread(monkeypatch):
     cfg, params = _setup()
     ex = DisaggregatedExecutor(params, cfg, D=1, E=2)
     monkeypatch.setattr(DisaggregatedExecutor, "_group_worker",
-                        lambda self, g, jobs: time.sleep(30))
+                        lambda self, g: time.sleep(30))
     with pytest.raises(TimeoutError, match="group-0"):
         ex.run([_jobs(cfg, 1)], timeout=0.3)
     # the hung thread still shares our buffers: reuse must refuse, not race
