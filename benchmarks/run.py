@@ -16,7 +16,8 @@ MODULES = [
     ("fig16_18_ablations", "Fig16-18 mechanism ablations"),
     ("fig19_failures", "Fig 19   fault tolerance (beyond paper)"),
     ("fig_ep_skew", "EP skew  per-device expert load (beyond paper)"),
-    ("fig_rebalance", "Placement hot-expert replication & rebalance (beyond paper)"),
+    ("fig_rebalance", "Placement replication & control plane: sim rebalance "
+     "+ REAL-executor live re-placement (beyond paper)"),
     ("superkernel_dispatch", "SuperKernel AOT dispatch (structural)"),
     ("fig_executor_hotpath", "Executor hot path: fused vs eager (beyond paper)"),
     ("roofline", "Roofline table (from dry-run)"),

@@ -151,6 +151,15 @@ class MoEDeviceBuffer:
         with self._cv:
             self._cv.notify_all()
 
+    def any_pending(self) -> bool:
+        """True while any region holds undrained rows (any flag bit set).
+        The live re-placement quiesce (ISSUE 5) polls this with dispatch
+        frozen: once it reads False and the device reports no in-flight
+        region, every payload routed under the OLD dispatch tables has been
+        served and the resident weight stacks may be swapped."""
+        with self._cv:
+            return any(f._bits for f in self.flags)
+
     def dispatch_recv(self, dp_i: int) -> List[DispatchPayload]:
         """async-dispatch-recv: migrate payload to private memory, clear flags."""
         assert self.flags[dp_i].all_set(), "recv before region complete"

@@ -93,6 +93,12 @@ class Placement:
                         replica copies migrate, which is what lets the
                         simulator's rebalancer fix a hot expert without
                         reshuffling the whole model (arXiv 2505.08944).
+      explicit        — a literal per-expert host table (`table_override`),
+                        used by the placement control plane (ISSUE 5): the
+                        `partial` and `drift` policies emit INTERMEDIATE
+                        layouts that no closed-form policy describes, so the
+                        plan pins the table verbatim.  Popularity input is
+                        ignored; `dead` failover still applies.
 
     Placement tables are derived from a layer's expert-popularity vector, so
     under per-layer routing skew ("zipf" mode) every MoE layer — which owns
@@ -101,15 +107,28 @@ class Placement:
     and their orphaned experts are re-placed greedily on the least-loaded
     survivors (the simulator charges the weight migration and repair window).
     """
-    policy: str = "round_robin"  # round_robin | greedy_balanced | replicated
+    policy: str = "round_robin"  # round_robin|greedy_balanced|replicated|explicit
     replicate_hot: int = 0  # how many of the hottest experts get replicas
     dead: Tuple[int, ...] = ()
+    # policy == "explicit": the literal per-expert host tuples
+    table_override: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def __post_init__(self):
-        if self.policy not in ("round_robin", "greedy_balanced", "replicated"):
+        if self.policy not in ("round_robin", "greedy_balanced", "replicated",
+                               "explicit"):
             raise ValueError(f"unknown placement policy {self.policy!r}")
         if self.replicate_hot < 0:
             raise ValueError("replicate_hot must be >= 0")
+        if (self.policy == "explicit") != (self.table_override is not None):
+            raise ValueError("table_override is required by (and exclusive "
+                             "to) the 'explicit' policy")
+
+    @staticmethod
+    def explicit(table: Sequence[Sequence[int]]) -> "Placement":
+        """A placement pinned to a literal expert→hosts table (the layout an
+        in-progress migration plan has installed so far)."""
+        return Placement("explicit", table_override=tuple(
+            tuple(int(d) for d in hosts) for hosts in table))
 
     @staticmethod
     def parse(spec: str, replicate_hot: int = 0) -> "Placement":
@@ -152,15 +171,58 @@ class Placement:
                 held[d].append(e)
         return tuple(tuple(sorted(h)) for h in held)
 
-    @functools.lru_cache(maxsize=None)
+    def device_fractions(self, fractions: Tuple[float, ...],
+                         ep: int) -> np.ndarray:
+        """Traffic share per device under this placement: a replicated
+        expert's popularity splits uniformly across its hosts.  The
+        load-model-free view the placement controller and the placement-aware
+        `optimal_deployment` use (ExpertLoadModel.device_fractions is the
+        layer-keyed equivalent on the simulator side)."""
+        p = np.asarray(fractions, dtype=np.float64)
+        dev = np.zeros(ep)
+        for e, hosts in enumerate(self.table(tuple(fractions), ep)):
+            for d in hosts:
+                dev[d] += p[e] / len(hosts)
+        return dev
+
     def table(self, fractions: Tuple[float, ...],
               ep: int) -> Tuple[Tuple[int, ...], ...]:
         """Hosts of each expert given its popularity vector: a tuple of
         per-expert device-id tuples.  A replicated expert's load splits
-        uniformly (1/len(hosts)) across its hosts."""
+        uniformly (1/len(hosts)) across its hosts.
+
+        Policy-derived tables are memoized with a BOUNDED lru (the control
+        plane feeds ever-changing measured/EWMA fraction tuples, so an
+        unbounded class-level cache would grow one entry per rebalance
+        window of a long-lived serving engine); explicit placements bypass
+        it entirely — the drift/partial controllers mint a fresh one per
+        migration."""
+        if self.policy == "explicit":
+            return self._table_impl(fractions, ep)
+        return self._table_cached(fractions, ep)
+
+    @functools.lru_cache(maxsize=512)
+    def _table_cached(self, fractions: Tuple[float, ...],
+                      ep: int) -> Tuple[Tuple[int, ...], ...]:
+        return self._table_impl(fractions, ep)
+
+    def _table_impl(self, fractions: Tuple[float, ...],
+                    ep: int) -> Tuple[Tuple[int, ...], ...]:
         n = len(fractions)
         p = np.asarray(fractions, dtype=np.float64)
-        if self.policy == "greedy_balanced":
+        if self.policy == "explicit":
+            if len(self.table_override) != n:
+                raise ValueError(
+                    f"explicit table covers {len(self.table_override)} "
+                    f"experts, popularity vector has {n}")
+            top = max((d for h in self.table_override for d in h),
+                      default=-1)
+            if top >= ep:
+                raise ValueError(
+                    f"explicit table references device {top} but the pool "
+                    f"has only {ep} devices")
+            hosts = [list(h) for h in self.table_override]
+        elif self.policy == "greedy_balanced":
             hosts: List[List[int]] = [[] for _ in range(n)]
             load = np.zeros(ep)
             for e in (int(e) for e in np.argsort(-p, kind="stable")):
@@ -187,7 +249,7 @@ class Placement:
                             load[d] -= s_old - s_new
                         load[cand] += s_new
                         h.append(cand)
-        if self.dead:
+        if self.dead:  # shared failover: applies to explicit tables too
             deadset = set(self.dead)
             alive = [d for d in range(ep) if d not in deadset]
             if not alive:
@@ -572,9 +634,16 @@ class CostModel:
         return self.async_dispatch_latency(tokens)  # symmetric payload
 
     # -------------------------------------------------------------- summary
-    def stage_utilization(self, token_rate: float, mean_len: float) -> dict:
+    def stage_utilization(self, token_rate: float, mean_len: float,
+                          hot_factor: float = 1.0) -> dict:
         """Steady-state utilization of attention vs MoE pools at `token_rate`
-        tokens/s (napkin DSE — used by optimal_deployment)."""
+        tokens/s (napkin DSE — used by optimal_deployment).
+
+        `hot_factor` (>= 1) is the most-loaded MoE device's traffic share
+        relative to uniform (max device fraction x E).  The MoE pool is gated
+        by its straggler, so under routing skew the effective stage
+        utilization scales by the hot device's excess (ROADMAP item (e):
+        the uniform-load assumption undersizes the MoE pool)."""
         c = self.cfg
         L = c.num_layers
         attn_flops_tok = (2.0 * c.d_model * (2 * c.q_dim + 2 * c.kv_dim)
@@ -585,7 +654,8 @@ class CostModel:
             if c.num_experts else 6.0 * c.d_model * c.d_ff * L
         moe_cap = self.dep.E * self.hw.peak_flops * self.hw.flop_efficiency
         return {"attention": token_rate * attn_flops_tok / attn_cap,
-                "moe": token_rate * moe_flops_tok / moe_cap}
+                "moe": token_rate * moe_flops_tok / moe_cap
+                * max(hot_factor, 1.0)}
 
     def summary(self) -> dict:
         return {
@@ -599,17 +669,46 @@ class CostModel:
 
 
 def optimal_deployment(cfg: ModelConfig, chips: int = 32, tp: int = 4,
-                       mean_len: float = 5000.0, hw: Hardware = V5E) -> Deployment:
+                       mean_len: float = 5000.0, hw: Hardware = V5E,
+                       placement: Optional[Placement] = None,
+                       expert_fractions: Optional[Sequence[float]] = None
+                       ) -> Deployment:
     """Beyond-paper DSE helper (the paper notes D,T,E selection is orthogonal,
     §4.2): pick the attention/MoE chip split that balances steady-state stage
-    utilization for the workload's mean request length."""
+    utilization for the workload's mean request length.
+
+    Placement-aware (ROADMAP item (e)): with a `Placement` and/or a measured
+    expert-popularity vector (e.g. RouterStatsCollector.fractions_tuple()),
+    the MoE side is sized off the MAX-loaded device under that placement —
+    skewed routing concentrates traffic, so the straggler needs a bigger MoE
+    pool (or a placement that splits it) than the uniform closed form
+    suggests.  Defaults (no placement, no popularity) keep the original
+    uniform-load behaviour exactly."""
     best, best_imb = None, float("inf")
+    skewed = placement is not None or expert_fractions is not None
+    pl = placement if placement is not None else Placement()
+    n = max(cfg.num_experts, 1)
+    fr = tuple(float(x) for x in expert_fractions) \
+        if expert_fractions is not None else Placement.uniform_fractions(n)
+    if len(fr) != n:
+        fr = tuple(float(x) for x in resample_fractions(fr, n))
     for d in range(1, chips // tp):
         e = chips - d * tp
         if e <= 0:
             continue
         dep = Deployment(D=d, T=tp, E=e)
-        u = CostModel(cfg, hw, dep).stage_utilization(1.0, mean_len)
+        hot = 1.0
+        if skewed and cfg.num_experts:
+            pl_e = pl
+            if pl.policy == "explicit" and any(
+                    dd >= e for h in pl.table_override for dd in h):
+                # an explicit layout pins absolute device ids and cannot be
+                # re-derived for a smaller candidate pool — keep the skew
+                # via the popularity vector on the default base instead
+                pl_e = Placement()
+            hot = float(pl_e.device_fractions(fr, e).max() * e)
+        u = CostModel(cfg, hw, dep).stage_utilization(1.0, mean_len,
+                                                      hot_factor=hot)
         imb = abs(u["attention"] - u["moe"])
         if imb < best_imb:
             best, best_imb = dep, imb

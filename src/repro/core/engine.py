@@ -54,8 +54,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import Deployment, resample_fractions
+from repro.core.cost_model import Deployment, Placement, resample_fractions
 from repro.core.executor import BatchJob, DisaggregatedExecutor
+from repro.core.placement_control import (PlacementController,
+                                          WindowObservation)
 from repro.core.scheduler import Batch, LengthAwareBatcher
 from repro.core.simulator import AsapSim, SimConfig, SyncSim
 from repro.core.trace import Request, TraceClock
@@ -130,6 +132,10 @@ class EngineStats:
     router_assignments: float  # assignments behind expert_fractions
     moe_device_util: Optional[np.ndarray] = None  # busy fraction per device
     group_util: Optional[np.ndarray] = None  # attention groups (if tracked)
+    # live placement-control accounting (ISSUE 5)
+    placement_policy: Optional[str] = None  # currently installed placement
+    migrations: int = 0  # MigrationPlans executed so far
+    migrated_bytes: float = 0.0  # expert weight bytes shipped by them
 
     def moe_imbalance(self) -> float:
         u = self.moe_device_util
@@ -413,12 +419,17 @@ class SimEngine(ServingEngine):
             util = self._sim.moe_dev_busy_time / elapsed
         else:
             util = self._sim.moe_rank_time / elapsed
+        ctrl = getattr(self._sim, "controller", None)
+        plans = ctrl.plans if ctrl is not None else []
         return EngineStats(
             engine=f"sim:{self.sim_cfg.mode}", elapsed=elapsed,
             submitted=self._sim.total_requests, completed=len(self._sim.done),
             expert_fractions=self.router_stats.fractions(),
             router_assignments=self.router_stats.total,
-            moe_device_util=util)
+            moe_device_util=util,
+            placement_policy=self._sim.load_model.placement.policy,
+            migrations=len(plans),
+            migrated_bytes=float(sum(p.total_bytes for p in plans)))
 
     def close(self):
         self._closed = True
@@ -455,7 +466,14 @@ class ExecutorEngine(ServingEngine):
                  clock: Optional[TraceClock] = None,
                  batcher: Optional[LengthAwareBatcher] = None,
                  sample_first_token: bool = True,
-                 token_seed: int = 0):
+                 token_seed: int = 0,
+                 rebalance_interval: Optional[float] = None,
+                 rebalance_threshold: float = 1.05,
+                 rebalance_policy: str = "one_shot_threshold",
+                 rebalance_target: Optional[Placement] = None,
+                 rebalance_release: Optional[float] = None,
+                 rebalance_cooldown: int = 1,
+                 rebalance_max_bytes: Optional[float] = None):
         self.ex = executor
         self.cfg = executor.cfg
         self.clock = clock if clock is not None else TraceClock()
@@ -465,6 +483,34 @@ class ExecutorEngine(ServingEngine):
         self.router_stats = RouterStatsCollector(max(self.cfg.num_experts, 1))
         self.sample_first_token = sample_first_token
         self._token_seed = token_seed
+        # --- live placement control (ISSUE 5, ROADMAP d3) -----------------
+        # The SAME PlacementController the simulator's rebalancer runs,
+        # observing MEASURED windows here: per-device busy time from the
+        # executor's clock accounting + per-expert fractions from
+        # router_stats.  Plans execute through `apply_placement` between
+        # polls — quiesce, weight-slice copy, atomic table swap.
+        self.controller: Optional[PlacementController] = None
+        self._rebalance_interval = rebalance_interval
+        if rebalance_interval:
+            target = rebalance_target if rebalance_target is not None \
+                else executor.placement
+            per_copy = executor.expert_copy_bytes
+            self.controller = PlacementController(
+                ep=executor.E, num_experts=max(self.cfg.num_experts, 1),
+                layers=max(self.cfg.num_layers, 1), target=target,
+                policy=rebalance_policy, threshold=rebalance_threshold,
+                release_threshold=rebalance_release,
+                cooldown_windows=rebalance_cooldown,
+                max_bytes_per_window=rebalance_max_bytes,
+                bytes_per_copy=per_copy,
+                initial=executor.placement,
+                initial_fractions=executor.expert_fractions)
+            self._next_rebalance = float(rebalance_interval)
+            self._busy_snapshot = executor.moe_busy.copy()
+            self._rebalance_lock = threading.Lock()
+            self._base_inflection = self.batcher.inflection
+            self._base_hot = float(executor.placement.device_fractions(
+                executor.expert_fractions, executor.E).max())
         # wire the engine into the executor
         executor.clock = self.clock.now
         executor.router_stats = self.router_stats
@@ -612,24 +658,80 @@ class ExecutorEngine(ServingEngine):
         if self.ex.errors:
             raise RuntimeError("executor thread failed") from self.ex.errors[0]
 
+    # ------------------------------------------------- placement control --
+    def _maybe_rebalance(self):
+        """Placement-control tick, run between polls (ISSUE 5): every
+        `rebalance_interval` trace seconds, hand the controller the window's
+        MEASURED observations (per-device busy time, per-expert routing
+        fractions) and execute the MigrationPlan it emits — quiesce the
+        affected MoE devices, copy the moved experts' weight slices, swap
+        the dispatch tables, and retarget the batcher's inflection for the
+        new hot fraction."""
+        c = self.controller
+        if c is None or not c.active or self._stop.is_set():
+            return
+        if not self._rebalance_lock.acquire(blocking=False):
+            return  # another caller's tick is mid-migration
+        try:
+            now = self.clock.now()
+            if now < self._next_rebalance:
+                return
+            self._next_rebalance = now + float(self._rebalance_interval)
+            window = self.ex.moe_busy - self._busy_snapshot
+            self._busy_snapshot = self.ex.moe_busy.copy()
+            frac = self.router_stats.fractions() \
+                if self.router_stats.total > 0 else None
+            plan = c.observe(WindowObservation(now=now, busy=window,
+                                               fractions=frac))
+            if plan is None:
+                return
+            try:
+                self.ex.apply_placement(plan.placement,
+                                        expert_fractions=c.fractions)
+            except BaseException:
+                # the controller committed the plan when it emitted it; a
+                # failed swap (quiesce timeout, dying worker) must roll its
+                # view back to what the executor actually serves, so the
+                # migration is retried instead of assumed installed
+                c.sync(placement=self.ex.placement)
+                raise
+            # the hottest device's compute-bound knee moved: scale the
+            # batching target by the hot-fraction ratio (the executor-side
+            # analogue of the sim's moe_inflection_tokens re-derivation)
+            hot = float(plan.placement.device_fractions(
+                c.fractions, self.ex.E).max())
+            with self._lock:
+                self.batcher.retarget(
+                    self._base_inflection * self._base_hot / max(hot, 1e-9))
+        finally:
+            self._rebalance_lock.release()
+
     # ---------------------------------------------------------------- API --
     def poll(self) -> List[RequestResult]:
         self._check_errors()
+        self._maybe_rebalance()
         with self._lock:
             out, self._outbox = self._outbox, []
         return out
 
     def drain(self, timeout: Optional[float] = None) -> List[RequestResult]:
         """Block (wall time) until every submitted request completed —
-        including ones whose trace arrival is still in the future."""
+        including ones whose trace arrival is still in the future.  The
+        placement-control loop keeps ticking while we wait."""
         self.start()
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._lock:
             self._draining = True
         self._wake.set()
-        with self._done_cv:
-            while self._finished < self._submitted:
+        while True:
+            # outside the lock: a migration quiesce must not stall
+            # completion callbacks on _done_cv
+            self._maybe_rebalance()
+            with self._done_cv:
                 self._check_errors()
+                if self._finished >= self._submitted:
+                    out, self._outbox = self._outbox, []
+                    return out
                 wait = 0.1
                 if deadline is not None:
                     wait = min(wait, deadline - time.monotonic())
@@ -638,9 +740,6 @@ class ExecutorEngine(ServingEngine):
                             f"drain: {self._submitted - self._finished} of "
                             f"{self._submitted} requests still in flight")
                 self._done_cv.wait(wait)
-            self._check_errors()
-            out, self._outbox = self._outbox, []
-        return out
 
     def _wait_handle(self, handle: RequestHandle, timeout: Optional[float]):
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -648,6 +747,7 @@ class ExecutorEngine(ServingEngine):
         # error instead of deadlocking a timeout=None caller
         while not handle._event.wait(0.1):
             self._check_errors()
+            self._maybe_rebalance()
             if deadline is not None and time.monotonic() >= deadline:
                 raise TimeoutError(f"request {handle.rid} still in flight")
 
@@ -663,7 +763,10 @@ class ExecutorEngine(ServingEngine):
             expert_fractions=self.router_stats.fractions(),
             router_assignments=self.router_stats.total,
             moe_device_util=self.ex.moe_busy / elapsed,
-            group_util=self.ex.group_busy / elapsed)
+            group_util=self.ex.group_busy / elapsed,
+            placement_policy=self.ex.placement.policy,
+            migrations=len(self.ex.migrations),
+            migrated_bytes=self.ex.migrated_bytes)
 
     def close(self):
         self._stop.set()

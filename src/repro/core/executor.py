@@ -17,9 +17,18 @@ core/async_primitives.py. Every mechanism of the paper is present:
     `shared_on_attention=False`)
   * replica-aware dispatch: expert→device assignment comes from a
     `core.cost_model.Placement` (round_robin / greedy_balanced /
-    replicated(k)), and a replicated hot expert's traffic is routed to its
-    least-loaded replica — the same placement tables that drive the
-    simulator's `ExpertLoadModel` (ROADMAP item d).
+    replicated(k) / explicit), and a replicated hot expert's traffic is
+    routed to its least-loaded replica — the same placement tables that
+    drive the simulator's `ExpertLoadModel` (ROADMAP item d).
+  * LIVE expert re-placement (ISSUE 5, ROADMAP d3): `apply_placement`
+    swaps the resident weight stacks + dispatch tables mid-serve — freeze
+    the dispatch gate, quiesce the affected MoE devices, copy the moved
+    experts' [L, ...] weight slices, swap atomically.  Driven between polls
+    by the `PlacementController` via `core.engine.ExecutorEngine`.
+  * jitted combine (ROADMAP item i): the per-batch-layer weighted
+    accumulation of expert outputs is ONE scatter-add jit
+    (`combine_path="segsum"`); the np.add.at host loop survives as
+    `combine_path="host"`, pinned bit-equal in tests.
 
 Hot path (`moe_path="fused"`, the default — §3.4.2 made real):
 
@@ -106,10 +115,12 @@ class DisaggregatedExecutor:
                  placement: Optional[Placement] = None,
                  expert_fractions: Optional[Sequence[float]] = None,
                  moe_path: str = "fused", moe_kernel: str = "pallas",
+                 combine_path: str = "segsum",
                  idle_backoff: Optional[float] = 0.05):
         assert cfg.family == "moe", "executor drives MoE models"
         assert moe_path in ("fused", "eager"), moe_path
         assert moe_kernel in ("pallas", "ref"), moe_kernel
+        assert combine_path in ("segsum", "host"), combine_path
         (kind, n, opts), = lm_stages(cfg)
         assert kind == "decoder" and opts["moe"]
         self.params, self.cfg = params, cfg
@@ -119,6 +130,7 @@ class DisaggregatedExecutor:
         self.shared_on_attention = shared_on_attention
         self.moe_path = moe_path
         self.moe_kernel = moe_kernel
+        self.combine_path = combine_path
         self.idle_backoff = idle_backoff  # max CV wait in the MoE workers
         self.stage = params["stages"][0]
         # --- replica-aware expert placement (ROADMAP item d) --------------
@@ -134,12 +146,10 @@ class DisaggregatedExecutor:
         self.table = self.placement.table(fr, E)
         self.dev_experts = self.placement.device_experts(fr, E)
         # routing lookups: primary host per expert, replica sets, and the
-        # per-device global→local expert index
-        self._primary = np.array([h[0] for h in self.table], np.int64)
-        self._replicated = [e for e, h in enumerate(self.table) if len(h) > 1]
-        self._g2l = np.full((E, cfg.num_experts), -1, np.int64)
-        for e, held in enumerate(self.dev_experts):
-            self._g2l[e, list(held)] = np.arange(len(held))
+        # per-device global→local expert index (shared with the live
+        # re-placement swap — ONE derivation for both lifecycles)
+        self._primary, self._replicated, self._g2l = \
+            self._dispatch_lookups(self.table, self.dev_experts)
         self._dev_load = np.zeros(E, np.int64)  # dispatched assignments
         self._load_lock = threading.Lock()
         # buffers
@@ -149,13 +159,25 @@ class DisaggregatedExecutor:
         # "resident" expert weights per MoE device: [L, n_e, ...] — the
         # super-kernel layout (all layers resident; layer id indexes at
         # runtime).  n_e follows the placement: replicas are resident on
-        # every host.
+        # every host.  The full host-side stacks stay addressable in
+        # `_experts_np` — they are the migration source a live re-placement
+        # copies moved experts' weight slices from (ISSUE 5).
         ex = self.stage["ffn"]["experts"]
-        ex_np = {k: np.asarray(v) for k, v in ex.items()}
-        self.resident = []
-        for e in range(E):
-            ids = np.asarray(self.dev_experts[e], np.int64)
-            self.resident.append({k: v[:, ids] for k, v in ex_np.items()})
+        self._experts_np = {k: np.asarray(v) for k, v in ex.items()}
+        self.resident = [self._resident_stack(self.dev_experts[e])
+                         for e in range(E)]
+        # --- live re-placement state (ISSUE 5) ----------------------------
+        # dispatch gate: apply_placement freezes new dispatches (readers of
+        # the routing tables) and waits for in-flight ones to drain before
+        # swapping tables + resident stacks; `_moe_active[e]` marks a device
+        # mid-region (set BEFORE dispatch_recv clears the flags, so
+        # "no flags set and not active" really means quiescent)
+        self._gate_cv = threading.Condition()
+        self._gate_frozen = False
+        self._dispatchers = 0
+        self._moe_active = [False] * E
+        self.migrations: List[Dict[str, Any]] = []  # live re-placement log
+        self.migrated_bytes = 0.0
         # jit caches (shape-keyed via jax.jit) + trace-count probes
         self.trace_counts: collections.Counter = collections.Counter()
         self._trace_lock = threading.Lock()  # counters bump from N threads
@@ -167,6 +189,7 @@ class DisaggregatedExecutor:
         if "shared" in self.stage["ffn"] and shared_on_attention:
             self._attn_stage["shared"] = self.stage["ffn"]["shared"]
         self._attn_step = self._make_attn_step()
+        self._combine_step = self._make_combine_step()
         self._moe_step = [self._make_moe_step(e) if len(self.dev_experts[e])
                           else None for e in range(E)]
         self.stop = threading.Event()
@@ -196,6 +219,30 @@ class DisaggregatedExecutor:
     def _logev(self, *ev):
         with self._log_lock:
             self.log.append(ev)
+
+    # ------------------------------------------------- placement derivation
+    def _dispatch_lookups(self, table, dev_experts):
+        """(primary, replicated, g2l) routing lookups for a placement table
+        — used at construction AND by the live re-placement swap, so both
+        lifecycles derive dispatch state identically."""
+        primary = np.array([h[0] for h in table], np.int64)
+        replicated = [e for e, h in enumerate(table) if len(h) > 1]
+        g2l = np.full((self.E, self.cfg.num_experts), -1, np.int64)
+        for e, held in enumerate(dev_experts):
+            g2l[e, list(held)] = np.arange(len(held))
+        return primary, replicated, g2l
+
+    def _resident_stack(self, held) -> Dict[str, np.ndarray]:
+        """One device's resident [L, n_e, ...] weight stack, sliced from the
+        host-side master copies."""
+        ids = np.asarray(held, np.int64)
+        return {k: v[:, ids] for k, v in self._experts_np.items()}
+
+    @property
+    def expert_copy_bytes(self) -> float:
+        """Bytes of ONE expert's weights for ONE layer — the per-copy unit
+        the placement controller prices MigrationPlans in."""
+        return float(sum(v[0, 0].nbytes for v in self._experts_np.values()))
 
     # ------------------------------------------------------------ attention
     def _layer_params(self, l: int):
@@ -250,6 +297,21 @@ class DisaggregatedExecutor:
         return h, xf, np.asarray(weights), np.asarray(idx), shared
 
     # ------------------------------------------------------------- dispatch
+    def _gate_enter(self):
+        """Block while a live re-placement holds the dispatch gate.  Entered
+        for the duration of one batch-layer's E sends, so a placement swap
+        never observes (or splits) a half-dispatched layer.  A stop request
+        falls through — shutdown must not deadlock on a frozen gate."""
+        with self._gate_cv:
+            while self._gate_frozen and not self.stop.is_set():
+                self._gate_cv.wait(0.1)
+            self._dispatchers += 1
+
+    def _gate_exit(self):
+        with self._gate_cv:
+            self._dispatchers -= 1
+            self._gate_cv.notify_all()
+
     def _route(self, flat_e: np.ndarray) -> np.ndarray:
         """Device id per (token, k) assignment under the placement table.
 
@@ -309,49 +371,103 @@ class DisaggregatedExecutor:
                   valid: Optional[np.ndarray] = None):
         """async-dispatch-send: ONE stable argsort over (device, expert)
         keys builds all E payloads — no per-device boolean scans."""
-        xf_np = np.asarray(xf)
-        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx),
-                                                         layer, valid)
-        order = np.argsort(dev * max(self.cfg.num_experts, 1) + flat_e,
-                           kind="stable")
-        dev_s, e_s = dev[order], flat_e[order]
-        t_s, k_s = flat_t[order], flat_k[order]
-        bounds = np.concatenate(
-            ([0], np.cumsum(np.bincount(dev_s, minlength=self.E))))
-        for e in range(self.E):
-            sl = slice(bounds[e], bounds[e + 1])
-            self._send_device(g, slot, layer, e, xf_np, t_s[sl], k_s[sl],
-                              self._g2l[e, e_s[sl]])
+        self._gate_enter()
+        try:
+            xf_np = np.asarray(xf)
+            flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx),
+                                                             layer, valid)
+            order = np.argsort(dev * max(self.cfg.num_experts, 1) + flat_e,
+                               kind="stable")
+            dev_s, e_s = dev[order], flat_e[order]
+            t_s, k_s = flat_t[order], flat_k[order]
+            bounds = np.concatenate(
+                ([0], np.cumsum(np.bincount(dev_s, minlength=self.E))))
+            for e in range(self.E):
+                sl = slice(bounds[e], bounds[e + 1])
+                self._send_device(g, slot, layer, e, xf_np, t_s[sl], k_s[sl],
+                                  self._g2l[e, e_s[sl]])
+        finally:
+            self._gate_exit()
 
     def _dispatch_eager(self, g: int, slot: int, layer: int, xf, idx,
                         valid: Optional[np.ndarray] = None):
         """Pre-fusion dispatch: E boolean scans over the flat assignment
         arrays (kept as the benchmark baseline; still placement-routed so
         the numerical contract holds on every policy)."""
-        xf_np = np.asarray(xf)
-        flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx),
-                                                         layer, valid)
-        for e in range(self.E):
-            m = dev == e
-            self._send_device(g, slot, layer, e, xf_np, flat_t[m], flat_k[m],
-                              self._g2l[e, flat_e[m]])
+        self._gate_enter()
+        try:
+            xf_np = np.asarray(xf)
+            flat_e, flat_t, flat_k, dev = self._flat_routing(np.asarray(idx),
+                                                             layer, valid)
+            for e in range(self.E):
+                m = dev == e
+                self._send_device(g, slot, layer, e, xf_np, flat_t[m],
+                                  flat_k[m], self._g2l[e, flat_e[m]])
+        finally:
+            self._gate_exit()
+
+    def _make_combine_step(self):
+        """Jitted weighted scatter-add for the combine (ROADMAP item (i)):
+        ONE segment-sum over the concatenated expert outputs replaces the
+        per-payload host `np.add.at` loop — the next profiler hotspot once
+        the GEMMs were fused.  The row count is Tn·top_k for every complete
+        batch-layer, so the jit cache stays keyed on the batch buckets
+        already in play (no new retrace churn); scatter rows keep payload
+        order, which keeps the accumulation bit-identical to the host path
+        (pinned in tests/test_executor.py)."""
+
+        def step(acc0, outs, t, w, shared):
+            with self._trace_lock:  # runs at trace time only
+                self.trace_counts["combine"] += 1
+            acc = acc0.at[t].add(outs * w[:, None])
+            if shared is not None:
+                acc = acc + shared.astype(jnp.float32)
+            return acc
+
+        return jax.jit(step)
 
     def _combine(self, g: int, slot: int, h, xf, weights, shared):
-        """async-combine-recv + weighted accumulation (token-order restore)."""
+        """async-combine-recv + weighted accumulation (token-order restore).
+
+        combine_path="segsum" (default) runs the jitted scatter-add;
+        "host" keeps the pre-ISSUE-5 per-payload np.add.at loop as the
+        bit-equality oracle and benchmark baseline."""
         payloads = self.attn_bufs[g][slot].combine_recv()
         Tn, d = xf.shape
-        acc = np.zeros((Tn, d), np.float32)
         layer = None
-        for p in payloads:
-            if p.outputs is None or len(p.token_ids) == 0:
-                continue
-            layer = p.layer
-            t = p.token_ids[:, 0]
-            k = p.token_ids[:, 1]
-            w = weights[t, k][:, None]
-            np.add.at(acc, t, np.asarray(p.outputs, np.float32) * w)
-        if shared is not None:
-            acc = acc + np.asarray(shared, np.float32)
+        if self.combine_path == "host":
+            acc = np.zeros((Tn, d), np.float32)
+            for p in payloads:
+                if p.outputs is None or len(p.token_ids) == 0:
+                    continue
+                layer = p.layer
+                t = p.token_ids[:, 0]
+                k = p.token_ids[:, 1]
+                w = weights[t, k][:, None]
+                np.add.at(acc, t, np.asarray(p.outputs, np.float32) * w)
+            if shared is not None:
+                acc = acc + np.asarray(shared, np.float32)
+        else:
+            outs, ts, ws = [], [], []
+            for p in payloads:
+                if p.outputs is None or len(p.token_ids) == 0:
+                    continue
+                layer = p.layer
+                t = p.token_ids[:, 0]
+                outs.append(np.asarray(p.outputs, np.float32))
+                ts.append(t)
+                ws.append(weights[t, p.token_ids[:, 1]])
+            if outs:
+                acc = np.asarray(self._combine_step(
+                    jnp.zeros((Tn, d), jnp.float32),
+                    jnp.asarray(np.concatenate(outs, 0)),
+                    jnp.asarray(np.concatenate(ts, 0)),
+                    jnp.asarray(np.concatenate(ws, 0).astype(np.float32)),
+                    shared))
+            else:
+                acc = np.zeros((Tn, d), np.float32)
+                if shared is not None:
+                    acc = acc + np.asarray(shared, np.float32)
         B, S, _ = h.shape
         y = jnp.asarray(acc.astype(np.float32)).astype(h.dtype)
         self._logev("combine", g, slot, layer)
@@ -413,6 +529,11 @@ class DisaggregatedExecutor:
                     if self.stop.is_set():
                         return
                     continue
+                # mark in-flight BEFORE dispatch_recv clears the region
+                # flags: the live re-placement quiesce reads "no flags set
+                # and not active" as proof nothing routed under the old
+                # tables is still being served (ISSUE 5)
+                self._moe_active[e] = True
                 rows = buf.dispatch_recv(i)
                 layer = rows[0].layer
                 slot = rows[0].slot
@@ -431,6 +552,7 @@ class DisaggregatedExecutor:
                 self.attn_bufs[i][slot].combine_send(
                     e, CombinePayload(layer=layer, token_ids=token_ids,
                                       expert_ids=eids, outputs=out))
+                self._moe_active[e] = False
         except BaseException as ex:  # surface thread failures to the caller
             self._panic(ex)
 
@@ -550,6 +672,112 @@ class DisaggregatedExecutor:
                     st["phase"] = "attn"
         except BaseException as ex:
             self._panic(ex)
+
+    # ------------------------------------------- live re-placement (ISSUE 5)
+    def apply_placement(self, placement: Placement,
+                        expert_fractions: Optional[Sequence[float]] = None,
+                        timeout: float = 60.0) -> Dict[str, Any]:
+        """Re-place experts LIVE, between polls, without restarting workers
+        (ROADMAP item (d3) — the simulator's online rebalancer finally has a
+        real-runtime counterpart).  Protocol:
+
+          1. freeze the dispatch gate and wait for in-flight dispatches to
+             finish (a placement swap must never split a batch-layer's E
+             sends across two routing tables);
+          2. quiesce the AFFECTED MoE devices: with no new dispatches, each
+             one drains its buffered regions — payloads carry local expert
+             ids of the old tables and must be served by the old resident
+             stacks.  Unaffected devices keep serving throughout (their
+             local id mapping is unchanged), and attention groups keep
+             computing/combining — this is not a global barrier;
+          3. copy the moved experts' [L, ...] weight slices into the
+             receivers' new resident stacks (sourced from the host-side
+             master — the byte count accounted is exactly the new copies),
+             rebuild their jitted super-kernel steps;
+          4. atomically swap `placement`/`table`/`dev_experts` + the dispatch
+             lookups (`_primary`/`_replicated`/`_g2l`) and release the gate.
+
+        Returns the migration record also appended to `self.migrations`
+        (and surfaced through `ExecutorEngine.stats()`)."""
+        fr = tuple(float(x) for x in expert_fractions) \
+            if expert_fractions is not None else self.expert_fractions
+        assert len(fr) == self.cfg.num_experts
+        new_table = placement.table(fr, self.E)
+        new_dev = placement.device_experts(fr, self.E)
+        moved = [(e, d) for e, hosts in enumerate(new_table)
+                 for d in hosts if d not in self.table[e]]
+        affected = [e for e in range(self.E)
+                    if new_dev[e] != self.dev_experts[e]]
+        t0 = self.clock()
+        if new_table == self.table:
+            # same layout (maybe refreshed popularity) — nothing to quiesce,
+            # but the no-op still lands in the log so executed controller
+            # plans and `migrations` stay in one-to-one correspondence
+            self.placement, self.expert_fractions = placement, fr
+            rec = {"t": t0, "seconds": 0.0, "moved_copies": 0, "bytes": 0.0,
+                   "devices": (), "policy": placement.policy}
+            self.migrations.append(rec)
+            return rec
+
+        def _check_alive(deadline: float, phase: str):
+            if self.errors:
+                raise RuntimeError(
+                    f"apply_placement during {phase}: executor thread "
+                    f"failed") from self.errors[0]
+            if self.stop.is_set():
+                raise RuntimeError(f"apply_placement during {phase}: "
+                                   f"executor is stopping")
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"apply_placement: {phase} did not "
+                                   f"quiesce within {timeout}s")
+
+        deadline = time.monotonic() + timeout
+        with self._gate_cv:
+            self._gate_frozen = True
+            try:
+                while self._dispatchers > 0:
+                    _check_alive(deadline, "dispatch drain")
+                    self._gate_cv.wait(0.05)
+            except BaseException:
+                self._gate_frozen = False
+                self._gate_cv.notify_all()
+                raise
+        try:
+            for e in affected:
+                while self.moe_bufs[e].any_pending() or self._moe_active[e]:
+                    _check_alive(deadline, f"moe device {e} drain")
+                    time.sleep(0.001)
+            nbytes = 0.0
+            for e in affected:
+                gained = [x for x in new_dev[e]
+                          if x not in self.dev_experts[e]]
+                nbytes += self.expert_copy_bytes * self.L * len(gained)
+                self.resident[e] = self._resident_stack(new_dev[e])
+            # atomic swap: the gate is frozen and the affected devices are
+            # idle, so no reader observes a mix of old and new tables
+            self.placement, self.expert_fractions = placement, fr
+            self.table, self.dev_experts = new_table, new_dev
+            self._primary, self._replicated, self._g2l = \
+                self._dispatch_lookups(new_table, new_dev)
+            for e in affected:
+                self._moe_step[e] = self._make_moe_step(e) \
+                    if len(new_dev[e]) else None
+        finally:
+            with self._gate_cv:
+                self._gate_frozen = False
+                self._gate_cv.notify_all()
+        dt = self.clock() - t0
+        rec = {"t": self.clock(), "seconds": dt, "moved_copies": len(moved),
+               "bytes": nbytes, "devices": tuple(affected),
+               "policy": placement.policy}
+        self.migrations.append(rec)
+        self.migrated_bytes += nbytes
+        # the re-placement occupies the receiving devices (weight copy +
+        # jit rebuild); split the measured stall across them for stats()
+        if affected:
+            self.moe_busy[list(affected)] += dt / len(affected)
+        self._logev("migrate", tuple(affected), len(moved))
+        return rec
 
     # ------------------------------------------------- engine lifecycle/run
     def ensure_started(self):

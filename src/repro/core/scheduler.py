@@ -82,12 +82,17 @@ class LengthAwareBatcher:
             return None
         return self._pending_t[0] + self.max_wait
 
-    def retarget(self, inflection: int) -> None:
-        """Re-derive the inflection target online (ISSUE 2): the simulator's
-        rebalancer calls this when a placement switch moves the hottest MoE
-        device's compute-bound knee.  Pending requests are kept — they are
-        simply judged against the new target on the next add/poll."""
-        self.inflection = int(inflection)
+    def retarget(self, inflection: float) -> int:
+        """Re-derive the inflection target online: the placement control
+        plane (ISSUE 2 sim rebalancer, ISSUE 5 executor engine) calls this
+        when a placement switch moves the hottest MoE device's compute-bound
+        knee.  Pending requests are kept — they are simply judged against
+        the new target on the next add/poll.  Clamped to >= 1 (a zero target
+        would emit empty-forever batches); returns the previous target so
+        callers can log the change."""
+        old = self.inflection
+        self.inflection = max(int(inflection), 1)
+        return old
 
     def add(self, req: Request, now: float) -> List[Batch]:
         out: List[Batch] = []

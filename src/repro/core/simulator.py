@@ -35,11 +35,15 @@ expert→device Placement policy (core/cost_model.py) — `round_robin` (PR-1
 bit-exact), `greedy_balanced` (LPT on expert popularity) or `replicated`
 (`replicate_hot` hottest experts split across several hosts,
 MegaScale-Infer-style).  With `rebalance_interval` set, AsapSim starts from
-round-robin and an online rebalancer inspects the per-device busy time
-observed in each interval; once the imbalance exceeds `rebalance_threshold`
-it migrates to the target placement — charging expert_bytes/ici_bw per moved
-expert copy to the receiving device, invalidating the per-layer latency
-cache, and re-deriving the batcher inflection from the new hot fraction.
+round-robin and hands each interval's per-device busy-time window to the
+shared `PlacementController` (core/placement_control.py, ISSUE 5 — the same
+control plane that re-places experts LIVE in the real executor); the
+controller's policy (`rebalance_policy`: one_shot_threshold / hysteresis /
+partial / drift) decides when and what to migrate, and this engine executes
+the emitted MigrationPlan — charging expert_bytes/ici_bw per moved expert
+copy to the receiving device, invalidating the per-layer latency cache, and
+re-deriving the batcher inflection from the new hot fraction.  The default
+one_shot_threshold policy reproduces the PR-2 inline rebalancer bit-exactly.
 The async pipeline never drains for this (no global barrier) — the cheap-
 rebalance property of arXiv 2505.08944.
 
@@ -75,6 +79,8 @@ import numpy as np
 
 from repro.core.cost_model import (CostModel, Deployment, ExpertLoadModel,
                                    Hardware, Placement, V5E)
+from repro.core.placement_control import (MigrationPlan, PlacementController,
+                                          WindowObservation)
 from repro.core.scheduler import (Batch, LengthAwareBatcher, balanced_partition,
                                   chunk_requests)
 from repro.core.trace import Request, TraceConfig, generate_requests
@@ -105,6 +111,12 @@ class SimConfig:
     replicate_hot: int = 0  # top-k hottest experts replicated (forces policy)
     rebalance_interval: Optional[float] = None  # s; None = static placement
     rebalance_threshold: float = 1.05  # observed busy max/mean that triggers
+    # placement-control policy family (ISSUE 5; core/placement_control.py).
+    # Defaults reproduce the PR-2 inline rebalancer bit-exactly.
+    rebalance_policy: str = "one_shot_threshold"
+    rebalance_release: Optional[float] = None  # hysteresis revert threshold
+    rebalance_cooldown: int = 1  # min windows between migrations (hysteresis)
+    rebalance_max_bytes: Optional[float] = None  # per-window cap (partial)
     # ChunkedPrefill
     chunk: int = 8192
     # failure injection
@@ -256,6 +268,24 @@ class AsapSim(_Engine):
         if initial != Placement():
             self.cm = dataclasses.replace(
                 self.cm, copies_override=self.load_model.expected_copies())
+        # Placement control plane (ISSUE 5): the measure→decide half of the
+        # online rebalancer lives in the backend-agnostic controller; this
+        # engine only observes busy-time windows and EXECUTES the plans
+        # (charging migration to the receivers' queue clocks).
+        self.controller: Optional[PlacementController] = None
+        if sim.rebalance_interval:
+            self.controller = PlacementController(
+                ep=dep.E, num_experts=max(cfg.num_experts, 1),
+                layers=max(cfg.num_layers, 1),
+                target=self._placement_target,
+                policy=sim.rebalance_policy,
+                threshold=sim.rebalance_threshold,
+                release_threshold=sim.rebalance_release,
+                cooldown_windows=sim.rebalance_cooldown,
+                max_bytes_per_window=sim.rebalance_max_bytes,
+                bytes_per_copy=self.cm.expert_bytes(),
+                initial=initial,
+                table_fn=self._controller_tables)
         self.batcher = LengthAwareBatcher(
             inflection=self.cm.moe_inflection_tokens(
                 self.load_model.hot_fraction()),
@@ -522,21 +552,28 @@ class AsapSim(_Engine):
         return mig
 
     def _switch_placement(self, placement: Placement,
-                          stall_until: Optional[float] = None) -> np.ndarray:
+                          stall_until: Optional[float] = None,
+                          mig: Optional[np.ndarray] = None) -> np.ndarray:
         """Swap the live placement: charge weight migration to the receiving
         devices' queue clocks, invalidate the per-layer latency cache, and
         re-derive the batcher inflection from the new hot fraction.  With
         `stall_until` set (MoE-device failure), receivers of re-placed
         weights additionally cannot serve their region queue before the
-        repair window ends."""
+        repair window ends.  `mig` (per-device migration seconds) comes from
+        a controller MigrationPlan when one drives the switch; the failure
+        path computes it directly."""
         old = self.load_model
         new = dataclasses.replace(old, placement=placement)
-        mig = self._placement_migration(old, new)
+        if mig is None:
+            mig = self._placement_migration(old, new)
         self.load_model = new
         self._moe_lat_cache.clear()
-        if placement != Placement():
-            self.cm = dataclasses.replace(
-                self.cm, copies_override=new.expected_copies())
+        # non-default placements need the measured dispatch fan-out; a revert
+        # to the round-robin default (hysteresis release) must RESTORE the
+        # closed-form copies, not keep the replicated fan-out
+        self.cm = dataclasses.replace(
+            self.cm, copies_override=new.expected_copies()
+            if placement != Placement() else None)
         self.batcher.retarget(
             self.cm.moe_inflection_tokens(new.hot_fraction()))
         free = np.maximum(self.moe_dev_free, self.now)
@@ -546,25 +583,43 @@ class AsapSim(_Engine):
         self.moe_dev_busy_time += mig  # migration occupies the device
         return mig
 
+    def _controller_tables(self, placement: Placement, fractions):
+        """Per-lkey placement tables for the controller's plan diffs, built
+        from the CURRENT load model (zipf mode keeps one table per layer —
+        the PR-2 per-layer migration accounting).  `fractions` is ignored:
+        the sim's popularity is the load model's, not a measured window."""
+        lm = dataclasses.replace(self.load_model, placement=placement)
+        L = max(self.cfg.num_layers, 1)
+        lkeys = range(L) if lm.mode == "zipf" else (0,)
+        return {l: lm.placement_table(l) for l in lkeys}
+
+    def _apply_plan(self, plan: MigrationPlan):
+        """Execute a controller MigrationPlan: charge each moved expert copy
+        (expert_bytes over ICI, receivers pay) to the device queue clocks and
+        install the plan's placement — barrier-free, nothing drains."""
+        per = self.cm.expert_bytes() / self.cm.hw.ici_bw
+        self._switch_placement(plan.placement,
+                               mig=plan.device_cost(per, self.ep))
+
     def _rebalance(self):
-        """Online rebalancer tick (ISSUE 2 tentpole): compare the busy time
-        each device accumulated in the last window; once the observed
-        max/mean imbalance crosses the threshold, migrate to the target
-        placement.  Barrier-free: nothing drains while weights move — only
-        the receiving devices' queue clocks are pushed."""
+        """Online rebalancer tick: hand the window's per-device busy time to
+        the PlacementController (ISSUE 5 — the decision is a pluggable
+        policy, not this engine's one-shot threshold any more) and execute
+        whatever MigrationPlan it emits.  Barrier-free: nothing drains while
+        weights move — only the receiving devices' queue clocks are pushed."""
         window = self.moe_dev_busy_time - self._busy_snapshot
         self._busy_snapshot = self.moe_dev_busy_time.copy()
-        if self.load_model.placement != self._placement_target:
-            mean = float(window.mean())
-            imb = float(window.max() / mean) if mean > 0 else 1.0
-            if imb >= self.sim.rebalance_threshold:
-                self._switch_placement(self._placement_target)
+        plan = self.controller.observe(WindowObservation(
+            now=self.now, busy=window,
+            fractions=self.load_model.expert_fractions(0)))
+        if plan is not None:
+            self._apply_plan(plan)
         # keep ticking through the whole drain tail (the backlog above the
-        # knee is where migrating pays off most) — but stop once converged
-        # or once every request completed, so an idle recurring event never
-        # pins the heap and inflates the utilization denominator
-        if self.load_model.placement != self._placement_target \
-                and len(self.done) < self.total_requests:
+        # knee is where migrating pays off most) — but stop once the policy
+        # has nothing further to say or once every request completed, so an
+        # idle recurring event never pins the heap and inflates the
+        # utilization denominator
+        if self.controller.active and len(self.done) < self.total_requests:
             self.at(self.now + self.sim.rebalance_interval, self._rebalance)
 
     # -------------------------------------------------------------- failure
@@ -605,6 +660,13 @@ class AsapSim(_Engine):
         backlog = float(max(self.moe_dev_free[d] - self.now, 0.0))
         self._switch_placement(self.load_model.placement.fail(d),
                                stall_until=repair_end)
+        if self.controller is not None:
+            # the failure re-placed experts without consulting the control
+            # plane; realign its view of installed/target/boot placement
+            # (the hysteresis release layout must exclude the dead device)
+            self.controller.sync(placement=self.load_model.placement,
+                                 target=self._placement_target,
+                                 base=self.controller.base.fail(d))
         # re-dispatch the dead device's queued regions to its inheritors,
         # pro-rated by the share of its traffic each one absorbs; the busy
         # time charged (at arrival) to the dead device for work it will

@@ -31,10 +31,15 @@ Executor hot-path knobs (ISSUE 3): --moe-path fused|eager selects the fused
 super-kernel pipeline or the pre-fusion per-expert loop; --moe-kernel
 pallas|ref picks the fused backend.
 
-Expert placement / fault-injection knobs (sim engine, ISSUE 2):
+Expert placement / placement-control / fault-injection knobs (ISSUE 2+5 —
+the rebalance flags drive BOTH engines; on the executor they re-place
+experts LIVE between polls):
   --placement {round_robin,greedy_balanced,replicated,replicated(k)}
   --replicate-hot K        split the K hottest experts across hosts
-  --rebalance-interval S   online rebalancer tick
+  --rebalance-interval S   placement-control tick (cold round-robin start)
+  --rebalance-threshold R  busy-time max/mean imbalance trigger
+  --rebalance-policy P     one_shot_threshold | hysteresis | partial | drift
+  --rebalance-release R / --rebalance-cooldown N / --rebalance-max-bytes B
   --failure-at T --failure-duration W
   --fail-moe-device D      kill MoE device D at T
   --measured-from PATH     drive the sim's expert-load model from router
@@ -47,6 +52,7 @@ Expert placement / fault-injection knobs (sim engine, ISSUE 2):
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -58,6 +64,7 @@ from repro.core.cost_model import Deployment, Placement
 from repro.core.engine import (ExecutorEngine, RouterStatsCollector,
                                SimEngine)
 from repro.core.executor import DisaggregatedExecutor
+from repro.core.placement_control import POLICIES
 from repro.core.scheduler import LengthAwareBatcher
 from repro.core.simulator import SimConfig
 from repro.core.trace import Request, TraceClock, TraceConfig, \
@@ -99,14 +106,32 @@ def run_executor(args) -> int:
           f"(last at t={arrivals[-1]:.2f}s), lengths "
           f"{[int(x) for x in lengths]}")
 
-    ex = DisaggregatedExecutor(params, cfg, D=D, E=E, placement=placement,
+    # With a rebalance interval the executor boots on the cold round-robin
+    # placement (same semantics as the sim) and the placement control plane
+    # migrates LIVE toward --placement once it observes imbalance (ISSUE 5).
+    boot = Placement() if args.rebalance_interval else placement
+    ex = DisaggregatedExecutor(params, cfg, D=D, E=E, placement=boot,
                                moe_path=args.moe_path,
                                moe_kernel=args.moe_kernel,
                                idle_backoff=args.idle_backoff)
     engine = ExecutorEngine(
         ex, clock=TraceClock(speed=args.time_scale),
         batcher=LengthAwareBatcher(inflection=64, max_tokens=128,
-                                   exclusive_cutoff=10_000, max_wait=0.05))
+                                   exclusive_cutoff=10_000, max_wait=0.05),
+        rebalance_interval=args.rebalance_interval,
+        rebalance_threshold=args.rebalance_threshold,
+        rebalance_policy=args.rebalance_policy,
+        rebalance_target=placement,
+        rebalance_release=args.rebalance_release,
+        rebalance_cooldown=args.rebalance_cooldown,
+        rebalance_max_bytes=args.rebalance_max_bytes)
+    if args.rebalance_interval:
+        print(f"placement control plane: policy={args.rebalance_policy} "
+              f"interval={args.rebalance_interval}s "
+              f"threshold={args.rebalance_threshold} -> target "
+              f"{placement.policy}"
+              + (f"(hot={placement.replicate_hot})"
+                 if placement.replicate_hot else ""))
     t0 = time.time()
     handles = engine.submit_all(reqs)
     results = []
@@ -135,9 +160,30 @@ def run_executor(args) -> int:
     print(f"measured router stats: {st.router_assignments:.0f} assignments, "
           f"fractions sum {fr.sum():.3f}, hottest experts {hot} "
           f"({', '.join(f'{fr[e]:.3f}' for e in hot)})")
+    if st.migrations:
+        print(f"live re-placement: {st.migrations} migration(s), "
+              f"{st.migrated_bytes / 1e6:.2f} MB of expert weights moved, "
+              f"now serving placement={st.placement_policy}")
     if args.save_router_stats:
         engine.router_stats.save(args.save_router_stats)
         print(f"router stats saved to {args.save_router_stats}")
+    if args.save_stats:
+        with open(args.save_stats, "w") as f:
+            json.dump({
+                "engine": st.engine, "elapsed": st.elapsed,
+                "submitted": st.submitted, "completed": st.completed,
+                "placement_policy": st.placement_policy,
+                "migrations": st.migrations,
+                "migrated_bytes": st.migrated_bytes,
+                "migration_log": ex.migrations,
+                "moe_device_util": [float(x) for x in st.moe_device_util],
+                "group_util": [float(x) for x in st.group_util],
+                "expert_fractions": [float(x) for x in st.expert_fractions],
+                "router_assignments": st.router_assignments,
+                "mean_ttft": float(np.mean([r.ttft for r in results]))
+                if results else None,
+            }, f, indent=2)
+        print(f"engine stats saved to {args.save_stats}")
     engine.close()
 
     missing = [h.rid for h in handles if not h.done()]
@@ -161,6 +207,11 @@ def run_simulation(args) -> int:
                     placement=args.placement,
                     replicate_hot=args.replicate_hot,
                     rebalance_interval=args.rebalance_interval,
+                    rebalance_threshold=args.rebalance_threshold,
+                    rebalance_policy=args.rebalance_policy,
+                    rebalance_release=args.rebalance_release,
+                    rebalance_cooldown=args.rebalance_cooldown,
+                    rebalance_max_bytes=args.rebalance_max_bytes,
                     failure_at=args.failure_at,
                     failure_duration=args.failure_duration,
                     failure_moe_device=args.fail_moe_device,
@@ -184,7 +235,9 @@ def run_simulation(args) -> int:
     if pl.replicate_hot:
         extra += f"(hot={pl.replicate_hot})"
     if args.rebalance_interval:
-        extra += f" rebalance every {args.rebalance_interval}s"
+        extra += (f" rebalance every {args.rebalance_interval}s "
+                  f"({args.rebalance_policy}); {st.migrations} migration(s), "
+                  f"{st.migrated_bytes / 1e6:.1f} MB moved")
     if args.fail_moe_device is not None and args.failure_at is not None:
         extra += (f"  [MoE device {args.fail_moe_device} killed at "
                   f"t={args.failure_at}s]")
@@ -239,9 +292,27 @@ def main():
                     help="replicate the k hottest experts across the least-"
                          "loaded MoE devices (implies --placement replicated)")
     ap.add_argument("--rebalance-interval", type=float, default=None,
-                    help="seconds between online rebalancer ticks (asap "
-                         "engine): start round-robin, migrate to the target "
-                         "placement once imbalance is observed")
+                    help="seconds between placement-control ticks (BOTH "
+                         "engines, ISSUE 5): start round-robin, migrate to "
+                         "the target placement once the policy decides — the "
+                         "executor engine re-places experts LIVE")
+    ap.add_argument("--rebalance-threshold", type=float, default=1.05,
+                    help="observed busy-time max/mean imbalance that "
+                         "triggers a migration")
+    ap.add_argument("--rebalance-policy", default=None, choices=POLICIES,
+                    help="placement-control policy (default "
+                         "one_shot_threshold); requires --rebalance-interval")
+    ap.add_argument("--rebalance-release", type=float, default=None,
+                    help="hysteresis policy: imbalance below which the "
+                         "placement reverts to the boot layout")
+    ap.add_argument("--rebalance-cooldown", type=int, default=1,
+                    help="min windows between migrations (hysteresis/drift)")
+    ap.add_argument("--rebalance-max-bytes", type=float, default=None,
+                    help="partial policy: cap on expert-weight bytes "
+                         "migrated per window")
+    ap.add_argument("--save-stats", default=None, metavar="PATH",
+                    help="executor engine: write EngineStats + the live "
+                         "migration log as JSON after the run")
     ap.add_argument("--failure-at", type=float, default=None,
                     help="inject a failure at this time (seconds)")
     ap.add_argument("--failure-duration", type=float, default=5.0,
@@ -262,6 +333,38 @@ def main():
                          "variable before re-checking the stop flag")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    # flag-combination validation (ISSUE 5 satellite): a policy knob without
+    # the interval that would ever tick it is a configuration mistake the
+    # user should hear about, not a silent no-op
+    if args.rebalance_interval is None:
+        for flag, val, default in (
+                ("--rebalance-policy", args.rebalance_policy, None),
+                ("--rebalance-threshold", args.rebalance_threshold, 1.05),
+                ("--rebalance-release", args.rebalance_release, None),
+                ("--rebalance-cooldown", args.rebalance_cooldown, 1),
+                ("--rebalance-max-bytes", args.rebalance_max_bytes, None)):
+            if val != default:
+                ap.error(f"{flag} requires --rebalance-interval (the "
+                         f"control plane never ticks without an interval)")
+    if args.rebalance_policy == "partial" and not args.rebalance_max_bytes:
+        ap.error("--rebalance-policy partial requires --rebalance-max-bytes "
+                 "(the per-window migration budget)")
+    if args.rebalance_release is not None \
+            and args.rebalance_release > args.rebalance_threshold:
+        ap.error(f"--rebalance-release ({args.rebalance_release}) must not "
+                 f"exceed --rebalance-threshold ({args.rebalance_threshold})")
+    if args.rebalance_policy is None:
+        args.rebalance_policy = "one_shot_threshold"
+    if args.rebalance_interval is not None \
+            and args.rebalance_interval <= 0:
+        ap.error("--rebalance-interval must be positive")
+    if args.rebalance_interval is not None \
+            and Placement.parse(args.placement,
+                                args.replicate_hot) == Placement():
+        print("warning: --rebalance-interval with the default round_robin "
+              "--placement arms a control plane that is already at its "
+              "target — no migration will ever fire; pass --placement/"
+              "--replicate-hot to give it somewhere to go", file=sys.stderr)
     if args.engine == "executor":
         sys.exit(run_executor(args))
     sys.exit(run_simulation(args))

@@ -138,6 +138,48 @@ def test_replica_routing_targets_hosts_and_spreads():
         == {ex.table[solo][0]}
 
 
+@pytest.mark.parametrize("shared", [0, 1])
+def test_combine_segsum_bitwise_equals_host_path(shared):
+    """ROADMAP item (i): the jitted segment-sum combine must be BIT-equal
+    with the np.add.at host path it replaces (same per-row products, same
+    accumulation order), shared-expert add included."""
+    cfg, params = _setup(num_experts=8, shared=shared)
+    jobs = _jobs(cfg, 2, seed=41)
+    fresh = lambda: [[BatchJob(tokens=j.tokens, bid=j.bid) for j in jobs]]
+    ex_h = DisaggregatedExecutor(params, cfg, D=1, E=4, combine_path="host")
+    ex_s = DisaggregatedExecutor(params, cfg, D=1, E=4, combine_path="segsum")
+    done_h, done_s = ex_h.run(fresh()), ex_s.run(fresh())
+    for a, b in zip(done_h, done_s):
+        np.testing.assert_array_equal(np.asarray(a.result),
+                                      np.asarray(b.result))
+    assert ex_s.trace_counts.get("combine", 0) >= 1  # the jit really ran
+    assert ex_h.trace_counts.get("combine", 0) == 0
+    _check(done_s, params, cfg)
+
+
+def test_live_apply_placement_preserves_contract():
+    """ISSUE 5: re-placing experts on a live executor (quiesce, weight-slice
+    copy, dispatch-table swap) must not change the math — and the migration
+    must be accounted."""
+    cfg, params = _setup(num_experts=8)
+    ex = DisaggregatedExecutor(params, cfg, D=2, E=4)
+    jobs1 = _jobs(cfg, 2, seed=51)
+    _check(ex.run([jobs1[:1], jobs1[1:]]), params, cfg)
+    rec = ex.apply_placement(Placement("replicated", replicate_hot=2))
+    assert rec["moved_copies"] > 0 and rec["bytes"] > 0
+    assert ex.migrations == [rec] and ex.migrated_bytes == rec["bytes"]
+    assert ex.table == Placement("replicated", replicate_hot=2).table(
+        ex.expert_fractions, 4)
+    jobs2 = _jobs(cfg, 2, seed=52)
+    _check(ex.run([jobs2[:1], jobs2[1:]]), params, cfg)
+    # a no-op re-placement (same table) moves nothing but is still logged,
+    # so executed plans and the migration log stay one-to-one
+    rec2 = ex.apply_placement(ex.placement)
+    assert rec2["moved_copies"] == 0 and rec2["bytes"] == 0.0
+    assert ex.migrations == [rec, rec2]
+    assert ex.migrated_bytes == rec["bytes"]
+
+
 def test_jit_cache_stable_after_warmup():
     """After one warmup run, a full multi-layer multi-batch run performs ZERO
     new traces — including the interleave=True dual-slot path (dispatch

@@ -1,0 +1,486 @@
+"""Unified placement control plane (ISSUE 5): the PlacementController policy
+family, trace-level parity of the extracted sim rebalancer with PR 2, and the
+executor's LIVE expert re-placement."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import (ExpertLoadModel, Placement,
+                                   optimal_deployment)
+from repro.core.placement_control import (ExpertMove, MigrationPlan,
+                                          PlacementController,
+                                          WindowObservation, diff_tables)
+from repro.core.simulator import AsapSim, SimConfig
+
+CFG = get_config("deepseek_v32")
+EP = 4
+N_EXPERTS = 8
+
+
+def _zipf(n=N_EXPERTS, alpha=1.2):
+    p = np.arange(1, n + 1, dtype=np.float64) ** (-alpha)
+    return p / p.sum()
+
+
+def _ctrl(**kw):
+    args = dict(ep=EP, num_experts=N_EXPERTS, layers=2,
+                target=Placement("replicated", replicate_hot=2),
+                bytes_per_copy=100.0,
+                initial_fractions=_zipf())
+    args.update(kw)
+    return PlacementController(**args)
+
+
+def _obs(imb, n=EP, fractions=None, now=0.0):
+    """A busy window whose max/mean equals `imb` exactly: the other devices
+    sit at 1.0 and the hot one solves max·(n − imb) = imb·(n − 1)."""
+    busy = np.ones(n)
+    busy[0] = imb * (n - 1) / max(n - imb, 1e-9)
+    return WindowObservation(now=now, busy=busy, fractions=fractions)
+
+
+def test_window_imbalance_statistic():
+    for imb in (1.0, 1.05, 1.5, 2.0):
+        assert PlacementController.imbalance(_obs(imb).busy) == \
+            pytest.approx(imb)
+    assert PlacementController.imbalance(np.zeros(4)) == 1.0  # idle window
+
+
+# ---------------------------------------------------------------------------
+# one_shot_threshold
+# ---------------------------------------------------------------------------
+
+
+def test_one_shot_triggers_once_and_converges():
+    c = _ctrl(threshold=1.2)
+    assert c.observe(_obs(1.1)) is None  # below threshold: no plan
+    assert not c.converged and c.active
+    plan = c.observe(_obs(1.3))
+    assert plan is not None and plan.placement == c.target
+    assert c.converged and not c.active  # one-shot: done forever
+    assert c.observe(_obs(5.0)) is None  # never fires again
+    # the plan's moves are exactly the new replica copies, receivers pay
+    assert plan.moves and all(m.copies == 2 for m in plan.moves)  # 2 layers
+    assert plan.total_bytes == pytest.approx(
+        sum(m.nbytes for m in plan.moves))
+    cost = plan.device_cost(1.0, EP)
+    assert cost.sum() == pytest.approx(
+        sum(m.copies for m in plan.moves))
+
+
+def test_one_shot_plan_matches_table_diff():
+    c = _ctrl(threshold=1.0)
+    plan = c.observe(_obs(1.5))
+    fr = tuple(float(x) for x in _zipf())
+    old = Placement().table(fr, EP)
+    new = c.target.table(fr, EP)
+    assert plan.moves == diff_tables(old, new, copies=2,
+                                     bytes_per_copy=100.0)
+    # every move is a copy that exists in the new table but not the old
+    for m in plan.moves:
+        assert m.dst in new[m.expert] and m.dst not in old[m.expert]
+
+
+# ---------------------------------------------------------------------------
+# hysteresis
+# ---------------------------------------------------------------------------
+
+
+def test_hysteresis_no_thrash_under_oscillating_load():
+    """Load oscillating INSIDE the trigger/release band must cause exactly
+    one migration, not a thrash."""
+    c = _ctrl(policy="hysteresis", threshold=1.5, release_threshold=1.05,
+              cooldown_windows=2)
+    plans = [c.observe(_obs(1.6 if i % 2 == 0 else 1.2)) for i in range(20)]
+    emitted = [p for p in plans if p is not None]
+    assert len(emitted) == 1  # trigger once; 1.2 > release never reverts
+    assert c.placement == c.target
+    assert c.active  # hysteresis keeps watching forever
+
+
+def test_hysteresis_reverts_below_release_and_respects_cooldown():
+    c = _ctrl(policy="hysteresis", threshold=1.5, release_threshold=1.05,
+              cooldown_windows=3)
+    assert c.observe(_obs(1.6)) is not None  # window 1: migrate to target
+    # quiet load immediately after: cooldown blocks the revert...
+    assert c.observe(_obs(1.0)) is None
+    assert c.observe(_obs(1.0)) is None
+    # ...until it expires, then the placement returns to the boot layout
+    plan = c.observe(_obs(1.0))
+    assert plan is not None and plan.placement == c.base == Placement()
+    # reverting to the round-robin base drops replicas: zero new copies
+    assert plan.moves == [] and plan.total_bytes == 0.0
+
+
+def test_hysteresis_revert_restores_dispatch_copies_override():
+    """Regression: reverting to the round-robin base must RESTORE the
+    CostModel's closed-form dispatch fan-out, not keep the replicated
+    placement's copies_override for the rest of the run."""
+    sim = AsapSim(CFG, SimConfig(
+        mode="asap", placement="replicated", replicate_hot=2,
+        rebalance_interval=3.0, rebalance_policy="hysteresis",
+        rebalance_release=1.02))
+    assert sim.cm.copies_override is None  # cold round-robin boot
+    sim._switch_placement(sim.controller.target)
+    assert sim.cm.copies_override is not None
+    sim._switch_placement(Placement())
+    assert sim.cm.copies_override is None
+
+
+def test_hysteresis_release_must_not_exceed_trigger():
+    with pytest.raises(ValueError):
+        _ctrl(policy="hysteresis", threshold=1.1, release_threshold=1.2)
+
+
+# ---------------------------------------------------------------------------
+# partial
+# ---------------------------------------------------------------------------
+
+
+def test_partial_respects_byte_cap_and_converges():
+    target = Placement("greedy_balanced")  # full reshuffle: many moves
+    full = _ctrl(target=target, threshold=1.0).observe(_obs(1.5))
+    assert len(full.moves) > 2
+    cap = 2 * 2 * 100.0  # two expert-copies' bytes per window (layers=2)
+    c = _ctrl(policy="partial", target=target, threshold=1.0,
+              max_bytes_per_window=cap)
+    plans = []
+    for i in range(32):
+        p = c.observe(_obs(1.5))
+        if p is not None:
+            plans.append(p)
+        if c.converged:
+            break
+    assert c.converged and not c.active
+    assert len(plans) >= 2  # converged over several windows, not one shot
+    assert all(p.total_bytes <= cap for p in plans)
+    assert all(p.partial for p in plans[:-1]) and not plans[-1].partial
+    # the union of the plans' moves covers the full one-shot diff
+    assert {(m.expert, m.dst) for p in plans for m in p.moves} == \
+        {(m.expert, m.dst) for m in full.moves}
+    # every intermediate layout keeps every expert hosted
+    fr = tuple(float(x) for x in _zipf())
+    for p in plans:
+        table = p.placement.table(fr, EP)
+        assert all(len(h) >= 1 for h in table)
+
+
+def test_partial_requires_cap():
+    with pytest.raises(ValueError):
+        _ctrl(policy="partial")
+
+
+def test_partial_waits_for_trigger_then_runs_to_completion():
+    c = _ctrl(policy="partial", target=Placement("greedy_balanced"),
+              threshold=1.3, max_bytes_per_window=200.0)
+    assert c.observe(_obs(1.1)) is None  # imbalance never tripped: no start
+    assert c.observe(_obs(1.4)) is not None  # tripped: migration starts
+    # once started, later balanced windows still continue the migration
+    # (the imbalance already justified reaching the target)
+    went = [c.observe(_obs(1.0)) for _ in range(32)]
+    assert c.converged and any(p is not None for p in went)
+
+
+# ---------------------------------------------------------------------------
+# drift
+# ---------------------------------------------------------------------------
+
+
+def test_drift_tracks_moving_zipf_head():
+    """A slowly moving hot-expert identity must re-place the replicas onto
+    the new head WITHOUT any busy-time imbalance ever crossing a threshold."""
+    c = _ctrl(policy="drift", drift_alpha=0.6, cooldown_windows=0,
+              threshold=10.0)  # threshold is irrelevant to drift
+    frac0 = _zipf()  # expert 0 hottest
+    plan0 = c.observe(_obs(1.0, fractions=frac0))
+    assert plan0 is not None  # re-derives the table from observed popularity
+    hot_hosts0 = plan0.placement.table(c.fractions, EP)[0]
+    assert len(hot_hosts0) >= 2  # replicated target: the head gets replicas
+    # topic shift: expert 5 becomes the head; EWMA follows over a few windows
+    frac1 = np.roll(frac0, 5)
+    emitted = []
+    for _ in range(8):
+        p = c.observe(_obs(1.0, fractions=frac1))
+        if p is not None:
+            emitted.append(p)
+    assert emitted, "drift must re-place after the popularity moved"
+    final = emitted[-1].placement.table(c.fractions, EP)
+    assert len(final[5]) >= 2, "the new head must hold the replicas"
+    assert np.argmax(c.fractions) == 5  # EWMA converged to the new head
+    assert c.active  # drift never retires
+
+
+def test_drift_quiet_when_popularity_stable():
+    c = _ctrl(policy="drift", drift_alpha=0.5, cooldown_windows=0)
+    fr = _zipf()
+    assert c.observe(_obs(1.0, fractions=fr)) is not None  # initial derive
+    for _ in range(5):
+        assert c.observe(_obs(1.0, fractions=fr)) is None  # stable: silent
+
+
+# ---------------------------------------------------------------------------
+# misc controller contracts
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        _ctrl(policy="nonsense")
+
+
+def test_sync_realigns_after_out_of_band_switch():
+    c = _ctrl(threshold=1.0)
+    failed = c.target.fail(1)
+    c.sync(placement=failed, target=failed, base=c.base.fail(1))
+    assert c.placement == failed and c.converged
+    assert c.base.dead == (1,)
+
+
+def test_moe_failure_marks_controller_base_dead():
+    """Regression: a hysteresis release after a MoE-device failure must
+    re-install a boot layout that EXCLUDES the dead device — _fail_moe has
+    to sync the controller's base, not just placement/target."""
+    sim = AsapSim(CFG, SimConfig(
+        mode="asap", rps=1.0, duration=15.0, ep_skew=1.2,
+        placement="replicated", replicate_hot=2,
+        rebalance_interval=3.0, rebalance_policy="hysteresis",
+        rebalance_release=1.0, failure_at=5.0, failure_moe_device=0))
+    sim.start()
+    sim.run(horizon=200.0)
+    assert sim.controller.base.dead == (0,)
+    # any base re-install after the failure routes nothing to device 0
+    fr = tuple(float(x) for x in sim.load_model.expert_fractions(0))
+    assert all(0 not in h
+               for h in sim.controller.base.table(fr, sim.ep))
+
+
+def test_explicit_placement_roundtrip():
+    fr = tuple(float(x) for x in _zipf())
+    table = Placement("replicated", replicate_hot=2).table(fr, EP)
+    pl = Placement.explicit(table)
+    assert pl.table(fr, EP) == table
+    assert pl.device_experts(fr, EP) == \
+        Placement("replicated", replicate_hot=2).device_experts(fr, EP)
+    # dead-device failover applies to explicit tables too
+    dead = pl.fail(0)
+    t = dead.table(fr, EP)
+    assert all(0 not in h and len(h) >= 1 for h in t)
+    with pytest.raises(ValueError):
+        Placement("explicit")  # explicit requires the table
+    with pytest.raises(ValueError):
+        Placement(table_override=((0,),))  # and the table requires explicit
+
+
+def test_device_fractions_matches_load_model():
+    fr = tuple(float(x) for x in _zipf())
+    for pl in (Placement(), Placement("greedy_balanced"),
+               Placement("replicated", replicate_hot=2)):
+        lm = ExpertLoadModel(num_experts=N_EXPERTS, top_k=2, ep=EP,
+                             mode="measured", measured=fr, placement=pl)
+        np.testing.assert_allclose(pl.device_fractions(fr, EP),
+                                   lm.device_fractions(0), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# trace-level parity: the extracted controller is bit-exact with PR 2
+# ---------------------------------------------------------------------------
+
+# Golden values recorded from the PR-2 inline `AsapSim._rebalance`
+# implementation (commit 007a801) immediately before the extraction, as
+# float hex — any drift in decision timing, migration charging order, or a
+# single float op shows up here.
+PR2_GOLDEN = [
+    (dict(mode="asap", rps=2.0, duration=20.0, ep_skew=1.2,
+          placement="replicated", replicate_hot=2, rebalance_interval=4.0),
+     dict(n_done=30, mean="0x1.a225a6d6419d0p-1", p99="0x1.7b92ad07ce3a7p+1",
+          busy_sum="0x1.f601d3d333ce8p+5", busy_max="0x1.036d8cabf9637p+2",
+          now="0x1.39701a46a530cp+4", inflection=2329)),
+    (dict(mode="asap", rps=1.5, duration=15.0, ep_skew=1.0,
+          ep_skew_mode="layer", placement="greedy_balanced",
+          rebalance_interval=3.0, rebalance_threshold=1.02),
+     dict(n_done=22, mean="0x1.e562ab7ba3dd9p-1", p99="0x1.9cb22d8641ae4p+1",
+          busy_sum="0x1.2a086a92bf92ep+6", busy_max="0x1.64cc1f32aaefcp+2",
+          now="0x1.1b768d151e85bp+4", inflection=1768)),
+]
+
+
+@pytest.mark.parametrize("kw,golden", PR2_GOLDEN)
+def test_rebalancer_trace_bit_exact_with_pr2(kw, golden):
+    """Acceptance criterion: AsapSim with `rebalance_interval` set and the
+    default one_shot_threshold policy reproduces the PR-2 results BIT-exactly
+    through the extracted PlacementController."""
+    sim = AsapSim(CFG, SimConfig(**kw))
+    sim.start()
+    sim.run(horizon=200.0)
+    t = np.array([r.ttft for r in sim.done])
+    assert len(sim.done) == golden["n_done"]
+    assert float(t.mean()).hex() == golden["mean"]
+    assert float(np.percentile(t, 99)).hex() == golden["p99"]
+    assert float(sim.moe_dev_busy_time.sum()).hex() == golden["busy_sum"]
+    assert float(sim.moe_dev_busy_time.max()).hex() == golden["busy_max"]
+    assert float(sim.now).hex() == golden["now"]
+    assert sim.batcher.inflection == golden["inflection"]
+    # and the plan history reads back what happened
+    assert len(sim.controller.plans) == 1
+    assert sim.controller.converged
+    assert sim.load_model.placement == sim.controller.target
+
+
+def test_sim_runs_policy_family_end_to_end():
+    """Every policy drives AsapSim to completion through the shared
+    _apply_plan path (semantics are policy-specific; completion and
+    plan accounting are not)."""
+    base = dict(mode="asap", rps=1.5, duration=15.0, ep_skew=1.2,
+                placement="replicated", replicate_hot=2,
+                rebalance_interval=3.0, rebalance_threshold=1.01)
+    for kw in (dict(rebalance_policy="hysteresis", rebalance_release=0.5,
+                    rebalance_threshold=1.01),
+               dict(rebalance_policy="partial",
+                    rebalance_max_bytes=200e6),
+               dict(rebalance_policy="drift")):
+        sim = AsapSim(CFG, SimConfig(**{**base, **kw}))
+        sim.start()
+        sim.run(horizon=200.0)
+        assert len(sim.done) == sim.total_requests, kw
+        if kw["rebalance_policy"] in ("hysteresis", "partial"):
+            assert sim.controller.plans, kw  # skew tripped a migration
+
+
+def test_partial_byte_cap_holds_under_per_layer_tables():
+    """Regression: in zipf mode (one target table PER LAYER) the partial
+    policy's final step must not re-diff every layer's table against the
+    collapsed explicit layout — each emitted plan stays within the
+    per-window byte budget (soft floor: one expert)."""
+    from repro.core.cost_model import CostModel
+    eb = CostModel(CFG).expert_bytes()
+    cap = 6.0 * eb * CFG.num_layers  # room for the priciest single expert
+    sim = AsapSim(CFG, SimConfig(
+        mode="asap", rps=2.0, duration=20.0, ep_skew=1.2,
+        ep_skew_mode="zipf", placement="replicated", replicate_hot=2,
+        rebalance_interval=2.0, rebalance_policy="partial",
+        rebalance_threshold=1.01, rebalance_max_bytes=cap))
+    sim.start()
+    sim.run(horizon=200.0)
+    plans = sim.controller.plans
+    assert plans and sim.controller.converged
+    assert all(p.total_bytes <= cap for p in plans)
+    assert not plans[-1].partial
+
+
+def test_partial_policy_in_sim_converges_to_target_over_windows():
+    sim = AsapSim(CFG, SimConfig(
+        mode="asap", rps=2.0, duration=20.0, ep_skew=1.2,
+        placement="replicated", replicate_hot=2, rebalance_interval=2.0,
+        rebalance_policy="partial", rebalance_threshold=1.01,
+        rebalance_max_bytes=50e6))
+    sim.start()
+    sim.run(horizon=200.0)
+    assert sim.controller.converged
+    assert len(sim.controller.plans) >= 2  # spread over several windows
+    assert sim.load_model.placement.policy in ("explicit", "replicated")
+    # final table equals the target's (table-level convergence)
+    lm_target = dataclasses.replace(sim.load_model,
+                                    placement=sim.controller.target)
+    assert sim.load_model.placement_table(0) == lm_target.placement_table(0)
+
+
+# ---------------------------------------------------------------------------
+# executor LIVE re-placement (ROADMAP item (d3)) — slow: threaded + jit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_executor_live_swap_parity_mid_run():
+    """Acceptance criterion: after a mid-run migration, real dispatch
+    assignments match ExpertLoadModel under the updated placement, and no
+    request is lost or double-processed across the swap."""
+    import jax
+
+    from repro.core.engine import ExecutorEngine
+    from repro.core.executor import DisaggregatedExecutor
+    from repro.core.scheduler import LengthAwareBatcher
+    from repro.core.trace import Request, TraceClock
+    from repro.models.lm import init_lm_params
+
+    cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_layers=3, num_experts=8, top_k=2)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    ex = DisaggregatedExecutor(params, cfg, D=2, E=4)  # boots round robin
+    target = Placement("replicated", replicate_hot=2)
+    eng = ExecutorEngine(
+        ex, clock=TraceClock(speed=50.0),
+        batcher=LengthAwareBatcher(inflection=48, max_tokens=128,
+                                   exclusive_cutoff=1 << 30, max_wait=0.05),
+        rebalance_interval=1.0, rebalance_threshold=1.0,
+        rebalance_target=target)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i, arrival=i * 0.4,
+                    length=int(rng.choice([8, 16, 24, 32])))
+            for i in range(10)]
+    handles = eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    st = eng.stats()
+    # a migration happened LIVE, while requests were in flight
+    assert st.migrations >= 1
+    assert st.migrated_bytes > 0
+    assert st.placement_policy == "replicated"
+    assert ex.migrations[0]["moved_copies"] > 0
+    # no lost or double-processed regions: every request completed exactly
+    # once, with a real sampled first token
+    assert sorted(r.rid for r in results) == list(range(10))
+    assert all(h.done() for h in handles)
+    assert all(r.first_token is not None for r in results)
+    # post-migration executor assignments == ExpertLoadModel under the new
+    # placement (the sim/executor shared-routing-layer contract survives
+    # the live swap)
+    lm = ExpertLoadModel(num_experts=cfg.num_experts, top_k=cfg.top_k, ep=4,
+                         mode="measured", measured=ex.expert_fractions,
+                         placement=target)
+    assert ex.table == lm.placement_table(0)
+    assert ex.dev_experts == target.device_experts(ex.expert_fractions, 4)
+    for e, hosts in enumerate(ex.table):
+        for d in hosts:
+            assert e in ex.dev_experts[d]
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# placement-aware optimal_deployment (ROADMAP item (e))
+# ---------------------------------------------------------------------------
+
+
+def test_optimal_deployment_uniform_matches_legacy():
+    legacy = optimal_deployment(CFG)
+    aware = optimal_deployment(CFG, placement=Placement())
+    # uniform popularity + round robin == the legacy uniform closed form
+    assert aware == legacy
+
+
+def test_optimal_deployment_sizes_moe_pool_off_max_loaded_device():
+    skew = tuple(float(x) for x in _zipf(CFG.num_experts, alpha=1.2))
+    uni = optimal_deployment(CFG)
+    hot = optimal_deployment(CFG, expert_fractions=skew)
+    # a skewed popularity concentrates load: the straggler-aware split
+    # gives the MoE pool MORE chips (or at minimum never fewer)
+    assert hot.E >= uni.E
+    # replicating the hot experts flattens the straggler back down
+    rep = optimal_deployment(CFG, expert_fractions=skew,
+                             placement=Placement("replicated",
+                                                 replicate_hot=8))
+    assert rep.E <= hot.E
+
+
+def test_optimal_deployment_handles_explicit_placement():
+    """Regression: an explicit table pins absolute device ids; sweeping a
+    smaller candidate pool must fall back to the popularity-only view, not
+    crash with an IndexError."""
+    fr = tuple(float(x) for x in _zipf(CFG.num_experts, alpha=1.2))
+    table = Placement("replicated", replicate_hot=2).table(fr, 16)
+    dep = optimal_deployment(CFG, placement=Placement.explicit(table),
+                             expert_fractions=fr)
+    assert dep.E >= optimal_deployment(CFG).E
+    # and the table() contract itself rejects an undersized pool loudly
+    with pytest.raises(ValueError):
+        Placement.explicit(table).table(fr, 4)
