@@ -1,0 +1,42 @@
+"""asaplint — project-native concurrency & trace-safety analysis (ISSUE 6).
+
+Three coordinated passes over the threaded MPMD runtime:
+
+  lockcheck  — static lock discipline: `# guarded_by:` annotations on shared
+               attributes are enforced against `with <lock>:` scopes, plus
+               predicate-free `Condition.wait`, `.acquire()` without a
+               finally-release, cross-method lock-order cycle detection, and
+               guarded private state reached from outside its owning class.
+               Deliberately lock-free protocol accesses carry an explicit
+               `# race-ok: <reason>` suppression so intent lives in-tree.
+  tracelint  — JAX retrace/trace-safety lint for jitted functions: Python
+               branches on traced values, host materialization (`float()`/
+               `.item()`/`np.*`), static_argnums problems, and jit calls
+               issued while holding a lock.
+  lockdep    — RUNTIME sanitizer: wraps `threading.Lock`/`Condition` (only
+               for locks created inside this repo) to record per-thread
+               acquisition stacks, assert a consistent global lock order
+               (first witness becomes law; the reverse edge is a violation),
+               and report blocking condition waits issued while holding an
+               unrelated lock.  Enabled under pytest with `ASAP_LOCKDEP=1`.
+
+CLI: `python -m repro.analysis [paths...] [--json out.json] [--order]` —
+exits non-zero on any unsuppressed static finding.  See
+docs/static_analysis.md for the annotation grammar and triage workflow.
+"""
+from repro.analysis.report import Finding, AnalysisResult  # noqa: F401
+from repro.analysis.model import build_models  # noqa: F401
+from repro.analysis.lockcheck import check_locks, lock_order_edges  # noqa: F401
+from repro.analysis.tracelint import check_trace_safety  # noqa: F401
+
+
+def run_static(paths, follow_imports: bool = False) -> "AnalysisResult":
+    """Run both static passes over `paths` (files or directories)."""
+    from repro.analysis.model import collect_files
+    files = collect_files(paths)
+    models = build_models(files)
+    findings = check_locks(models) + check_trace_safety(models)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return AnalysisResult(findings=findings,
+                          lock_edges=lock_order_edges(models),
+                          files=[m.path for m in models.values()])

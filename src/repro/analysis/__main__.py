@@ -1,0 +1,55 @@
+"""CLI: `python -m repro.analysis [paths...] [--json out.json] [--order]`.
+
+Runs the lock-discipline and trace-safety passes over the given files or
+directories (default: src/repro/core) and exits 1 if any unsuppressed
+finding remains.  Suppressed findings (race-ok / retrace-ok) are listed so
+their justifications stay auditable; `--order` also prints the static
+lock-order graph the cycle detector ran on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import run_static
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="asaplint: concurrency & JAX trace-safety analysis")
+    ap.add_argument("paths", nargs="*", default=["src/repro/core"],
+                    help="files or directories to analyze "
+                         "(default: src/repro/core)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full findings report (incl. suppressed "
+                         "findings and the lock-order graph) as JSON")
+    ap.add_argument("--order", action="store_true",
+                    help="print the static lock-order graph")
+    args = ap.parse_args(argv)
+
+    res = run_static(args.paths)
+
+    for f in res.unsuppressed:
+        print(f.format())
+    if res.suppressed:
+        print(f"-- {len(res.suppressed)} suppressed finding(s):")
+        for f in res.suppressed:
+            print("   " + f.format())
+    if args.order:
+        print("-- static lock-order graph:")
+        for (a, b), wit in sorted(res.lock_edges.items()):
+            print(f"   {a} -> {b}   ({wit[0]})")
+
+    if args.json:
+        res.save_json(args.json)
+        print(f"-- report written to {args.json}")
+
+    n = len(res.unsuppressed)
+    print(f"asaplint: {len(res.files)} file(s), "
+          f"{len(res.findings)} finding(s), {n} unsuppressed")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

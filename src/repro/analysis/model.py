@@ -1,0 +1,372 @@
+"""Source model for the asaplint static passes.
+
+Parses each file once and extracts, per class:
+
+  * declared synchronization primitives: ``self.X = threading.Lock() /
+    RLock() / Condition(...)`` anywhere in the class's methods.  A
+    ``Condition(self.Y)`` built on another declared lock is recorded as an
+    ALIAS of ``Y`` — holding either means holding the same underlying lock
+    (the engine's ``_done_cv = threading.Condition(self._lock)`` pattern).
+  * ``# guarded_by: <name>`` annotations on attribute-initializing
+    assignments.  ``<name>`` is usually a declared lock/CV attribute of the
+    same object; the pseudo-guard ``protocol`` marks state protected by a
+    lock-free protocol instead of a lock — no ``with`` can discharge it, so
+    EVERY access must carry a ``# race-ok: <reason>`` justification.
+  * attribute -> class bindings, so the lock-order pass can follow
+    one level of cross-object calls (``self.ex.apply_placement(...)``,
+    ``self.moe_bufs[e].dispatch_send(...)``).  Bound from constructor
+    parameter annotations and from ``self.X = SomeKnownClass(...)`` /
+    comprehensions instantiating exactly one known class.
+
+Suppression comments (``race-ok`` / ``retrace-ok``) are matched against the
+flagged node's own line and its enclosing statement's first line.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+GUARDED_RE = re.compile(r"guarded_by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+RACE_OK_RE = re.compile(r"race-ok:\s*(.*)")
+RETRACE_OK_RE = re.compile(r"retrace-ok:\s*(.*)")
+
+#: the pseudo-guard name for protocol-protected (deliberately lock-free)
+#: shared state — see docs/static_analysis.md
+PROTOCOL_GUARD = "protocol"
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+
+
+@dataclasses.dataclass
+class LockDecl:
+    attr: str
+    kind: str  # "Lock" | "RLock" | "Condition"
+    line: int
+    alias_of: Optional[str] = None  # Condition(self.Y) -> "Y"
+
+
+@dataclasses.dataclass
+class GuardDecl:
+    attr: str
+    lock: str  # lock attr name on the same object, or PROTOCOL_GUARD
+    line: int
+
+
+@dataclasses.dataclass
+class ClassModel:
+    name: str
+    path: str
+    node: ast.ClassDef
+    locks: Dict[str, LockDecl] = dataclasses.field(default_factory=dict)
+    guards: Dict[str, GuardDecl] = dataclasses.field(default_factory=dict)
+    attr_classes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    methods: Dict[str, ast.FunctionDef] = dataclasses.field(
+        default_factory=dict)
+    # attributes assigned from jax.jit(...) (directly or via a helper
+    # method that returns a jitted callable) — trace-lint's T4 targets
+    jitted_attrs: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def canonical_lock(self, attr: str) -> str:
+        """Resolve alias chains: holding `_done_cv` == holding `_lock`."""
+        seen = set()
+        while attr in self.locks and self.locks[attr].alias_of \
+                and attr not in seen:
+            seen.add(attr)
+            attr = self.locks[attr].alias_of
+        return attr
+
+
+@dataclasses.dataclass
+class FileModel:
+    path: str
+    tree: ast.Module
+    source: str
+    comments: Dict[int, str]  # line -> comment text (sans leading '#')
+    classes: Dict[str, ClassModel] = dataclasses.field(default_factory=dict)
+    # names bound by `from x import Y` / `import x` at module level
+    imports: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------- suppressions --
+    def _comment_match(self, rx: re.Pattern, *lines: int):
+        """Match a suppression on any of `lines`, or on a STANDALONE comment
+        line block immediately above the earliest of them (inline comments on
+        a preceding statement never leak downward)."""
+        for ln in lines:
+            c = self.comments.get(ln)
+            if c:
+                m = rx.search(c)
+                if m:
+                    return m
+        src = self.source.splitlines()
+        ln = min(lines) - 1
+        while ln >= 1 and ln <= len(src) and src[ln - 1].lstrip().startswith("#"):
+            c = self.comments.get(ln)
+            if c:
+                m = rx.search(c)
+                if m:
+                    return m
+            ln -= 1
+        return None
+
+    def race_ok(self, *lines: int) -> Optional[str]:
+        m = self._comment_match(RACE_OK_RE, *lines)
+        return m.group(1).strip() if m else None
+
+    def retrace_ok(self, *lines: int) -> Optional[str]:
+        m = self._comment_match(RETRACE_OK_RE, *lines)
+        return m.group(1).strip() if m else None
+
+
+def extract_comments(source: str) -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string.lstrip("#").strip()
+    except tokenize.TokenizeError:
+        pass
+    return out
+
+
+def collect_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                for n in sorted(names):
+                    if n.endswith(".py"):
+                        files.append(os.path.join(root, n))
+        elif p.endswith(".py"):
+            files.append(p)
+    # stable, deduped
+    seen, out = set(), []
+    for f in files:
+        if f not in seen:
+            seen.add(f)
+            out.append(f)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+
+def is_self_attr(node: ast.AST, self_name: str = "self") -> Optional[str]:
+    """`self.X` -> "X" (else None)."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == self_name:
+        return node.attr
+    return None
+
+
+def _threading_call(node: ast.AST) -> Optional[Tuple[str, ast.Call]]:
+    """Match `threading.<Ctor>(...)` / bare `<Ctor>(...)` for lock ctors."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id == "threading" and f.attr in _LOCK_CTORS:
+        return f.attr, node
+    if isinstance(f, ast.Name) and f.id in _LOCK_CTORS:
+        return f.id, node
+    return None
+
+
+def _find_lock_ctor(expr: ast.AST) -> Optional[Tuple[str, ast.Call]]:
+    """First threading lock constructor anywhere in `expr` (handles the
+    `cv if cv is not None else threading.Condition()` pattern)."""
+    for sub in ast.walk(expr):
+        hit = _threading_call(sub)
+        if hit:
+            return hit
+    return None
+
+
+def _first_line_with_comment(fm: FileModel, node: ast.AST,
+                             rx: re.Pattern) -> Optional[re.Match]:
+    """Match `rx` against comments on the node's own lines, or on a
+    standalone comment block immediately above it."""
+    end = getattr(node, "end_lineno", node.lineno)
+    for ln in range(node.lineno, end + 1):
+        c = fm.comments.get(ln)
+        if c:
+            m = rx.search(c)
+            if m:
+                return m, ln  # type: ignore[return-value]
+    src = fm.source.splitlines()
+    ln = node.lineno - 1
+    while ln >= 1 and ln <= len(src) and src[ln - 1].lstrip().startswith("#"):
+        c = fm.comments.get(ln)
+        if c:
+            m = rx.search(c)
+            if m:
+                return m, ln  # type: ignore[return-value]
+        ln -= 1
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Model construction
+# ---------------------------------------------------------------------------
+
+
+def _scan_class(fm: FileModel, cnode: ast.ClassDef,
+                known_classes: Iterable[str]) -> ClassModel:
+    cm = ClassModel(name=cnode.name, path=fm.path, node=cnode)
+    known = set(known_classes)
+    for item in cnode.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            cm.methods[item.name] = item  # type: ignore[assignment]
+
+    # constructor parameter annotations: `executor: DisaggregatedExecutor`
+    init = cm.methods.get("__init__")
+    param_types: Dict[str, str] = {}
+    if init is not None:
+        for a in init.args.args + init.args.kwonlyargs:
+            if a.annotation is not None:
+                ann = a.annotation
+                if isinstance(ann, ast.Name) and ann.id in known:
+                    param_types[a.arg] = ann.id
+                elif isinstance(ann, ast.Constant) and \
+                        isinstance(ann.value, str) and ann.value in known:
+                    param_types[a.arg] = ann.value
+
+    helper_returns_jit: Dict[str, bool] = {}
+    for name, fn in cm.methods.items():
+        helper_returns_jit[name] = any(
+            isinstance(n, ast.Return) and n.value is not None
+            and _is_jax_jit_call(n.value, fm)
+            for n in ast.walk(fn))
+
+    for fn in cm.methods.values():
+        for stmt in ast.walk(fn):
+            targets: List[ast.expr] = []
+            value: Optional[ast.expr] = None
+            if isinstance(stmt, ast.Assign):
+                targets, value = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets, value = [stmt.target], stmt.value
+            if value is None:
+                continue
+            for tgt in targets:
+                attr = is_self_attr(tgt)
+                if attr is None:
+                    continue
+                # --- lock declarations --------------------------------
+                hit = _find_lock_ctor(value)
+                if hit and attr not in cm.locks:
+                    kind, call = hit
+                    alias = None
+                    if kind == "Condition" and call.args:
+                        alias = is_self_attr(call.args[0])
+                    cm.locks[attr] = LockDecl(attr=attr, kind=kind,
+                                              line=stmt.lineno,
+                                              alias_of=alias)
+                # --- guarded_by annotations ---------------------------
+                got = _first_line_with_comment(fm, stmt, GUARDED_RE)
+                if got and attr not in cm.guards:
+                    m, ln = got
+                    cm.guards[attr] = GuardDecl(attr=attr,
+                                                lock=m.group(1), line=ln)
+                # --- attr -> class bindings ---------------------------
+                if attr not in cm.attr_classes:
+                    bound = _bind_attr_class(value, known, param_types)
+                    if bound:
+                        cm.attr_classes[attr] = bound
+                # --- jitted-callable attrs (trace lint T4) ------------
+                if _is_jax_jit_call(value, fm):
+                    cm.jitted_attrs[attr] = stmt.lineno
+                elif isinstance(value, ast.Call):
+                    callee = is_self_attr(value.func)
+                    if callee and helper_returns_jit.get(callee):
+                        cm.jitted_attrs[attr] = stmt.lineno
+                elif isinstance(value, (ast.ListComp, ast.List)):
+                    for sub in ast.walk(value):
+                        if isinstance(sub, ast.Call):
+                            callee = is_self_attr(sub.func)
+                            if callee and helper_returns_jit.get(callee):
+                                cm.jitted_attrs[attr] = stmt.lineno
+                                break
+    return cm
+
+
+def _bind_attr_class(value: ast.expr, known: set,
+                     param_types: Dict[str, str]) -> Optional[str]:
+    """Infer the class of `self.X = <value>`: a direct known-class ctor, a
+    (possibly nested) comprehension/list instantiating exactly one known
+    class, or a parameter whose annotation named a known class."""
+    if isinstance(value, ast.Name) and value.id in param_types:
+        return param_types[value.id]
+    ctors = set()
+    for sub in ast.walk(value):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id in known:
+            ctors.add(sub.func.id)
+    if len(ctors) == 1:
+        return ctors.pop()
+    return None
+
+
+def _is_jax_jit_call(node: ast.AST, fm: FileModel) -> bool:
+    """`jax.jit(...)` / `jit(...)` (imported from jax) /
+    `partial(jax.jit, ...)` used as a value."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id == "jax" and f.attr == "jit":
+        return True
+    if isinstance(f, ast.Name) and f.id == "jit" \
+            and fm.imports.get("jit") == "jax":
+        return True
+    return False
+
+
+def _scan_imports(tree: ast.Module) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = node.module
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = alias.name
+    return out
+
+
+def build_models(files: Sequence[str]) -> Dict[str, FileModel]:
+    """Parse `files` into FileModels with a shared cross-file class registry
+    (class names are assumed unique across the analyzed set)."""
+    fms: Dict[str, FileModel] = {}
+    class_names: List[str] = []
+    trees: Dict[str, ast.Module] = {}
+    for path in files:
+        with open(path) as f:
+            source = f.read()
+        tree = ast.parse(source, filename=path)
+        trees[path] = tree
+        fms[path] = FileModel(path=path, tree=tree, source=source,
+                              comments=extract_comments(source),
+                              imports=_scan_imports(tree))
+        for node in tree.body:
+            if isinstance(node, ast.ClassDef):
+                class_names.append(node.name)
+    for path, fm in fms.items():
+        for node in fm.tree.body:
+            if isinstance(node, ast.ClassDef):
+                fm.classes[node.name] = _scan_class(fm, node, class_names)
+    return fms
+
+
+def class_registry(models: Dict[str, FileModel]) -> Dict[str, ClassModel]:
+    reg: Dict[str, ClassModel] = {}
+    for fm in models.values():
+        for name, cm in fm.classes.items():
+            reg.setdefault(name, cm)
+    return reg

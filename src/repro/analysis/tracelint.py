@@ -1,0 +1,322 @@
+"""JAX trace-safety lint (asaplint pass 2) — the retrace-churn bug class.
+
+PRs 3 and 5 each re-debugged "zero steady-state retraces" by hand; this
+pass flags the patterns that break it, inside every function the analyzed
+files hand to `jax.jit` (decorator form, `jax.jit(f)` value form, and
+`functools.partial(jax.jit, ...)` decorators):
+
+  traced-branch     (T1) — Python `if`/`while` on a traced value.  Control
+                    flow on tracers raises ConcretizationTypeError, or —
+                    when callers feed Python scalars — silently retraces
+                    per distinct value.  `x is None` / `x is not None`
+                    tests are exempt (pytree structure, resolved at trace
+                    time).  Fix: static_argnums or `lax.cond`/`lax.select`.
+  host-materialize  (T2) — `float()`/`int()`/`bool()`/`.item()`/
+                    `.tolist()`/`np.asarray()` (or any `np.*` call) applied
+                    to a traced value inside jit: forces a device sync at
+                    trace time or fails outright.
+  np-in-jit         (T3) — a `np.*` call inside a jitted function even on
+                    un-traced operands: the result is baked into the trace
+                    as a constant; recomputed per retrace and a common
+                    source of silent value-freezing bugs.  Use `jnp.*` or
+                    hoist it out of the jitted body.
+  jit-under-lock    (T4) — invoking `jax.jit` (or a known jitted callable
+                    attribute such as `self._attn_step`) inside a
+                    `with <lock>:` block: first-call compilation runs under
+                    the lock and can stall every other thread for seconds.
+  static-argnums    (T5) — `static_argnums` that is not an int/tuple
+                    literal, indexes past the positional parameters, or
+                    names a parameter annotated with an unhashable type
+                    (list/dict/set/np.ndarray) — each call then fails
+                    hashing or retraces.
+
+Suppression: `# retrace-ok: <reason>` on the flagged line.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.model import FileModel, is_self_attr
+from repro.analysis.report import Finding
+
+_MATERIALIZERS = {"float", "int", "bool", "complex"}
+_MATERIALIZE_METHODS = {"item", "tolist", "block_until_ready", "__array__"}
+_UNHASHABLE_ANNOTATIONS = {"list", "List", "dict", "Dict", "set", "Set",
+                           "ndarray", "Array"}
+
+
+@dataclasses.dataclass
+class JittedFn:
+    fn: ast.FunctionDef
+    jit_line: int
+    static_params: Set[str]
+    static_issue: Optional[str] = None  # T5 message, if any
+
+
+class TraceSafetyPass:
+    def __init__(self, models: Dict[str, FileModel]):
+        self.models = models
+        self.findings: List[Finding] = []
+
+    def run(self):
+        for fm in self.models.values():
+            jitted = self._collect_jitted(fm)
+            for jf in jitted:
+                if jf.static_issue:
+                    self._finding(fm, "static-argnums", jf.jit_line,
+                                  jf.static_issue)
+                self._check_jitted_body(fm, jf)
+            self._check_jit_under_lock(fm)
+
+    def _finding(self, fm: FileModel, rule: str, line: int, msg: str,
+                 stmt_line: Optional[int] = None):
+        lines = [line] + ([stmt_line] if stmt_line else [])
+        reason = fm.retrace_ok(*lines)
+        self.findings.append(Finding(
+            rule=rule, path=fm.path, line=line, message=msg,
+            suppressed=reason is not None, reason=reason or None))
+
+    # ------------------------------------------------ jitted-fn discovery --
+    def _collect_jitted(self, fm: FileModel) -> List[JittedFn]:
+        out: List[JittedFn] = []
+        # name -> FunctionDef for every def at any nesting level
+        defs: Dict[int, ast.FunctionDef] = {}
+        by_name: Dict[str, List[ast.FunctionDef]] = {}
+        for node in ast.walk(fm.tree):
+            if isinstance(node, ast.FunctionDef):
+                defs[id(node)] = node
+                by_name.setdefault(node.name, []).append(node)
+                for dec in node.decorator_list:
+                    got = self._jit_decorator(fm, dec)
+                    if got is not None:
+                        out.append(self._make_jitted(node, dec.lineno, got))
+        for node in ast.walk(fm.tree):
+            if isinstance(node, ast.Call) and self._is_jit_name(fm, node.func):
+                if node.args and isinstance(node.args[0], ast.Name):
+                    cands = by_name.get(node.args[0].id, [])
+                    if len(cands) >= 1:
+                        # closest preceding def with that name
+                        fn = min(cands,
+                                 key=lambda f: abs(f.lineno - node.lineno))
+                        out.append(self._make_jitted(
+                            fn, node.lineno, self._static_kwargs(node)))
+        return out
+
+    def _is_jit_name(self, fm: FileModel, f: ast.expr) -> bool:
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "jax" and f.attr == "jit":
+            return True
+        return isinstance(f, ast.Name) and f.id == "jit" \
+            and fm.imports.get("jit") == "jax"
+
+    def _jit_decorator(self, fm: FileModel, dec: ast.expr):
+        """@jax.jit / @jit / @partial(jax.jit, static_argnums=...)"""
+        if self._is_jit_name(fm, dec):
+            return {}
+        if isinstance(dec, ast.Call):
+            if self._is_jit_name(fm, dec.func):
+                return self._static_kwargs(dec)
+            if isinstance(dec.func, ast.Name) and dec.func.id == "partial" \
+                    and dec.args and self._is_jit_name(fm, dec.args[0]):
+                return self._static_kwargs(dec)
+        return None
+
+    def _static_kwargs(self, call: ast.Call) -> dict:
+        out = {}
+        for kw in call.keywords:
+            if kw.arg in ("static_argnums", "static_argnames"):
+                out[kw.arg] = kw.value
+        return out
+
+    def _make_jitted(self, fn: ast.FunctionDef, line: int,
+                     static_kw: dict) -> JittedFn:
+        params = [a.arg for a in fn.args.args]
+        static: Set[str] = set()
+        issue = None
+        for key, val in static_kw.items():
+            lits = self._int_or_str_literals(val)
+            if lits is None:
+                issue = (f"{key} for {fn.name}() is not an int/str/tuple "
+                         f"literal — the analysis (and readers) cannot tell "
+                         f"which arguments are static")
+                continue
+            for v in lits:
+                if isinstance(v, int):
+                    if v >= len(params):
+                        issue = (f"static_argnums={v} is out of range for "
+                                 f"{fn.name}() with {len(params)} positional "
+                                 f"parameters")
+                    else:
+                        static.add(params[v])
+                else:
+                    if v not in params:
+                        issue = (f"static_argnames='{v}' does not name a "
+                                 f"parameter of {fn.name}()")
+                    else:
+                        static.add(v)
+        # unhashable static params (T5): jit hashes static args per call
+        ann_by_name = {a.arg: a.annotation for a in fn.args.args}
+        for name in sorted(static):
+            ann = ann_by_name.get(name)
+            base = None
+            if isinstance(ann, ast.Name):
+                base = ann.id
+            elif isinstance(ann, ast.Subscript) and \
+                    isinstance(ann.value, ast.Name):
+                base = ann.value.id
+            elif isinstance(ann, ast.Attribute):
+                base = ann.attr
+            if base in _UNHASHABLE_ANNOTATIONS:
+                issue = (f"static parameter '{name}' of {fn.name}() is "
+                         f"annotated {base} — unhashable static arguments "
+                         f"raise TypeError at call time")
+        return JittedFn(fn=fn, jit_line=line, static_params=static,
+                        static_issue=issue)
+
+    def _int_or_str_literals(self, node: ast.expr):
+        if isinstance(node, ast.Constant) and \
+                isinstance(node.value, (int, str)):
+            return [node.value]
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out = []
+            for el in node.elts:
+                if isinstance(el, ast.Constant) and \
+                        isinstance(el.value, (int, str)):
+                    out.append(el.value)
+                else:
+                    return None
+            return out
+        return None
+
+    # ------------------------------------------------- jitted-body checks --
+    def _check_jitted_body(self, fm: FileModel, jf: JittedFn):
+        fn = jf.fn
+        tainted: Set[str] = {a.arg for a in fn.args.args
+                             if a.arg not in jf.static_params
+                             and a.arg != "self"}
+        # simple forward taint propagation over the straight-line body
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if self._uses_tainted(node.value, tainted):
+                    for tgt in node.targets:
+                        for n in ast.walk(tgt):
+                            if isinstance(n, ast.Name):
+                                tainted.add(n.id)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+                if self._is_none_test(test):
+                    continue
+                if self._uses_tainted(test, tainted):
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    self._finding(
+                        fm, "traced-branch", test.lineno,
+                        f"Python `{kind}` on traced value(s) "
+                        f"{sorted(self._tainted_names(test, tainted))} inside "
+                        f"jitted {fn.name}() — concretization error or "
+                        f"per-value retrace; use static_argnums or lax.cond")
+            elif isinstance(node, ast.Call):
+                self._check_jit_call(fm, jf, node, tainted)
+
+    def _check_jit_call(self, fm: FileModel, jf: JittedFn, node: ast.Call,
+                        tainted: Set[str]):
+        f = node.func
+        fn = jf.fn
+        if isinstance(f, ast.Name) and f.id in _MATERIALIZERS:
+            if any(self._uses_tainted(a, tainted) for a in node.args):
+                self._finding(
+                    fm, "host-materialize", node.lineno,
+                    f"{f.id}() on a traced value inside jitted {fn.name}() "
+                    f"— host materialization fails/syncs at trace time")
+        elif isinstance(f, ast.Attribute) and \
+                f.attr in _MATERIALIZE_METHODS and \
+                self._uses_tainted(f.value, tainted):
+            self._finding(
+                fm, "host-materialize", node.lineno,
+                f".{f.attr}() on a traced value inside jitted {fn.name}() "
+                f"— host materialization fails/syncs at trace time")
+        elif isinstance(f, ast.Attribute) and \
+                isinstance(f.value, ast.Name) and \
+                f.value.id in ("np", "numpy"):
+            if any(self._uses_tainted(a, tainted) for a in node.args):
+                self._finding(
+                    fm, "host-materialize", node.lineno,
+                    f"np.{f.attr}() on a traced value inside jitted "
+                    f"{fn.name}() — numpy materializes tracers")
+            else:
+                self._finding(
+                    fm, "np-in-jit", node.lineno,
+                    f"np.{f.attr}() inside jitted {fn.name}() bakes a host "
+                    f"constant into the trace — use jnp or hoist it out")
+
+    def _is_none_test(self, test: ast.expr) -> bool:
+        return isinstance(test, ast.Compare) and \
+            all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+
+    def _uses_tainted(self, node: ast.expr, tainted: Set[str]) -> bool:
+        return bool(self._tainted_names(node, tainted))
+
+    def _tainted_names(self, node: ast.expr, tainted: Set[str]) -> Set[str]:
+        return {n.id for n in ast.walk(node)
+                if isinstance(n, ast.Name) and n.id in tainted}
+
+    # ------------------------------------------------------- T4: jit+lock --
+    def _check_jit_under_lock(self, fm: FileModel):
+        for cm in fm.classes.values():
+            for fn in cm.methods.values():
+                self._walk_lockscope(fm, cm, fn.body, in_lock=None)
+
+    def _walk_lockscope(self, fm: FileModel, cm, stmts: Sequence[ast.stmt],
+                        in_lock: Optional[str]):
+        for stmt in stmts:
+            lock_here = in_lock
+            if isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    attr = is_self_attr(item.context_expr)
+                    if attr and attr in cm.locks:
+                        lock_here = attr
+                self._walk_lockscope(fm, cm, stmt.body, lock_here)
+                continue
+            if in_lock is not None:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    if self._is_jit_name(fm, node.func):
+                        self._finding(
+                            fm, "jit-under-lock", node.lineno,
+                            f"jax.jit(...) under `with self.{in_lock}:` in "
+                            f"{cm.name} — compilation can run while the "
+                            f"lock is held", stmt_line=stmt.lineno)
+                    else:
+                        jattr = self._jitted_attr_call(cm, node.func)
+                        if jattr:
+                            self._finding(
+                                fm, "jit-under-lock", node.lineno,
+                                f"jitted callable self.{jattr} invoked under "
+                                f"`with self.{in_lock}:` in {cm.name} — a "
+                                f"cold call compiles while the lock is held",
+                                stmt_line=stmt.lineno)
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.stmt):
+                    self._walk_lockscope(fm, cm, [child], lock_here)
+                elif hasattr(child, "body") and \
+                        isinstance(getattr(child, "body", None), list):
+                    self._walk_lockscope(fm, cm, child.body, lock_here)
+
+    def _jitted_attr_call(self, cm, f: ast.expr) -> Optional[str]:
+        attr = is_self_attr(f)
+        if attr and attr in cm.jitted_attrs:
+            return attr
+        if isinstance(f, ast.Subscript):
+            attr = is_self_attr(f.value)
+            if attr and attr in cm.jitted_attrs:
+                return attr
+        return None
+
+
+def check_trace_safety(models: Dict[str, FileModel]) -> List[Finding]:
+    p = TraceSafetyPass(models)
+    p.run()
+    return p.findings

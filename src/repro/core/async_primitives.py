@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 
 class Bitmap:
@@ -42,13 +42,13 @@ class Bitmap:
 
     def __init__(self, n: int, cv: Optional[threading.Condition] = None):
         self.n = n
-        self._bits = 0
+        self._bits = 0  # guarded_by: _cv
         self._cv = cv if cv is not None else threading.Condition()
 
     @property
     def full(self) -> bool:
         """All n bits set. Caller must hold the (shared) cv lock."""
-        return self._bits == (1 << self.n) - 1
+        return self._bits == (1 << self.n) - 1  # race-ok: documented caller-holds-cv contract; every in-repo caller is inside `with cv`
 
     def set_bit(self, i: int):
         with self._cv:
@@ -67,6 +67,13 @@ class Bitmap:
     def all_set(self) -> bool:
         with self._cv:
             return self.full
+
+    def any_set(self) -> bool:
+        """Any bit set, under the cv lock.  The shared-cv case is safe to
+        call with the cv already held (Condition's default lock is an RLock,
+        and an explicit shared cv is re-entered by the same thread)."""
+        with self._cv:
+            return self._bits != 0
 
     def wait_all(self, timeout: Optional[float] = None) -> bool:
         with self._cv:
@@ -100,7 +107,7 @@ class MoEDeviceBuffer:
         # drain clears slots instead of reallocating the row list, mirroring
         # a fixed shared-memory region on the real device
         self.rows: List[List[Optional[DispatchPayload]]] = \
-            [[None] * T for _ in range(D)]
+            [[None] * T for _ in range(D)]  # guarded_by: protocol
         # all regions share one condition variable so `wait_any` can block on
         # "any region complete" and wake on the completing sender's set_bit
         self._cv = threading.Condition()
@@ -112,6 +119,8 @@ class MoEDeviceBuffer:
         """async-dispatch-send: backpressure-wait, write, set flag, return."""
         if not self.flags[dp_i].wait_clear(tp_j, timeout):
             raise TimeoutError("dispatch backpressure timeout")
+        # race-ok: bitmap handshake — flag clear ⇒ receiver drained this row,
+        # and the write happens-before the flag set that publishes it
         self.rows[dp_i][tp_j] = payload
         self.flags[dp_i].set_bit(tp_j)
 
@@ -157,12 +166,14 @@ class MoEDeviceBuffer:
         frozen: once it reads False and the device reports no in-flight
         region, every payload routed under the OLD dispatch tables has been
         served and the resident weight stacks may be swapped."""
-        with self._cv:
-            return any(f._bits for f in self.flags)
+        with self._cv:  # hold once for a consistent snapshot across regions
+            return any(f.any_set() for f in self.flags)
 
     def dispatch_recv(self, dp_i: int) -> List[DispatchPayload]:
         """async-dispatch-recv: migrate payload to private memory, clear flags."""
         assert self.flags[dp_i].all_set(), "recv before region complete"
+        # race-ok: region complete — every sender's set_bit happened-before
+        # all_set() observed true, and no sender rewrites until the clear below
         row = self.rows[dp_i]
         out = list(row)  # "migrate to private memory"
         for j in range(self.T):  # clear the preallocated row in place
@@ -185,7 +196,7 @@ class AttnDeviceBuffer:
 
     def __init__(self, E: int):
         self.E = E
-        self.segments: List[Optional[CombinePayload]] = [None] * E
+        self.segments: List[Optional[CombinePayload]] = [None] * E  # guarded_by: protocol
         self.flags = Bitmap(E)
 
     # ---- sender side (MoE device e) ----
@@ -193,6 +204,7 @@ class AttnDeviceBuffer:
                      timeout: Optional[float] = 240.0):
         if not self.flags.wait_clear(e, timeout):
             raise TimeoutError("combine backpressure timeout")
+        # race-ok: bitmap handshake — bit e clear ⇒ receiver drained segment e
         self.segments[e] = payload
         self.flags.set_bit(e)
 
@@ -202,8 +214,10 @@ class AttnDeviceBuffer:
         bitmap completes — 'all activated expert results received')."""
         if not self.flags.wait_all(timeout):
             raise TimeoutError("combine recv timeout")
+        # race-ok: all E set_bits happened-before wait_all returned true;
+        # senders stay blocked on backpressure until the clear below
         out = list(self.segments)
-        self.segments = [None] * self.E
+        self.segments = [None] * self.E  # race-ok: same window — flags still set
         self.flags.clear()
         return out  # type: ignore
 
@@ -220,8 +234,8 @@ class SyncP2P:
 
     def __init__(self):
         self._lock = threading.Condition()
-        self._mailbox: Optional[Tuple[Any, Any]] = None
-        self._ready = False  # receiver parked in recv()
+        self._mailbox: Optional[Tuple[Any, Any]] = None  # guarded_by: _lock
+        self._ready = False  # receiver parked in recv()  guarded_by: _lock
 
     def send(self, tag: Any, payload: Any, timeout: Optional[float] = 240.0):
         with self._lock:

@@ -49,7 +49,7 @@ import itertools
 import json
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -166,8 +166,8 @@ class RouterStatsCollector:
     def __init__(self, num_experts: int):
         self.num_experts = max(int(num_experts), 1)
         self._lock = threading.Lock()
-        self._counts = np.zeros(self.num_experts, dtype=np.float64)
-        self._layer_counts: Dict[int, np.ndarray] = {}
+        self._counts = np.zeros(self.num_experts, dtype=np.float64)  # guarded_by: _lock
+        self._layer_counts: Dict[int, np.ndarray] = {}  # guarded_by: _lock
 
     def record(self, layer: int, expert_ids: Optional[np.ndarray] = None,
                *, counts: Optional[np.ndarray] = None):
@@ -505,8 +505,8 @@ class ExecutorEngine(ServingEngine):
                 bytes_per_copy=per_copy,
                 initial=executor.placement,
                 initial_fractions=executor.expert_fractions)
-            self._next_rebalance = float(rebalance_interval)
-            self._busy_snapshot = executor.moe_busy.copy()
+            self._next_rebalance = float(rebalance_interval)  # guarded_by: _rebalance_lock
+            self._busy_snapshot = executor.moe_busy.copy()  # guarded_by: _rebalance_lock
             self._rebalance_lock = threading.Lock()
             self._base_inflection = self.batcher.inflection
             self._base_hot = float(executor.placement.device_fractions(
@@ -517,15 +517,16 @@ class ExecutorEngine(ServingEngine):
         executor.on_complete = self._on_job_done
         # admission state
         self._lock = threading.Lock()
+        # _done_cv shares _lock: holding either means holding the same lock
         self._done_cv = threading.Condition(self._lock)
-        self._arrivals: List[Tuple[float, int, Request]] = []  # heap
+        self._arrivals: List[Tuple[float, int, Request]] = []  # heap  guarded_by: _lock
         self._seq = itertools.count()
-        self._tokens: Dict[int, np.ndarray] = {}
-        self._handles: Dict[int, RequestHandle] = {}
-        self._outbox: List[RequestResult] = []
-        self._submitted = 0
-        self._finished = 0
-        self._draining = False
+        self._tokens: Dict[int, np.ndarray] = {}  # guarded_by: _lock
+        self._handles: Dict[int, RequestHandle] = {}  # guarded_by: _lock
+        self._outbox: List[RequestResult] = []  # guarded_by: _lock
+        self._submitted = 0  # guarded_by: _lock
+        self._finished = 0  # guarded_by: _lock
+        self._draining = False  # guarded_by: _lock
         self._stop = threading.Event()
         self._wake = threading.Event()
         self._admit_thread: Optional[threading.Thread] = None
@@ -600,7 +601,10 @@ class ExecutorEngine(ServingEngine):
 
     def _launch(self, batch: Batch):
         reqs = batch.requests
-        toks = [self._tokens.pop(r.rid) for r in reqs]
+        # _tokens is written by submit() on caller threads; the admission
+        # loop must not read it unlocked (found by asaplint, ISSUE 6)
+        with self._lock:
+            toks = [self._tokens.pop(r.rid) for r in reqs]
         S = _pad_bucket(max(len(t) for t in toks))
         arr = np.zeros((len(reqs), S), np.int32)
         for i, t in enumerate(toks):

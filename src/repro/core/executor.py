@@ -150,7 +150,7 @@ class DisaggregatedExecutor:
         # re-placement swap — ONE derivation for both lifecycles)
         self._primary, self._replicated, self._g2l = \
             self._dispatch_lookups(self.table, self.dev_experts)
-        self._dev_load = np.zeros(E, np.int64)  # dispatched assignments
+        self._dev_load = np.zeros(E, np.int64)  # dispatched assignments  guarded_by: _load_lock
         self._load_lock = threading.Lock()
         # buffers
         self.moe_bufs = [MoEDeviceBuffer(D, T) for _ in range(E)]
@@ -173,13 +173,16 @@ class DisaggregatedExecutor:
         # mid-region (set BEFORE dispatch_recv clears the flags, so
         # "no flags set and not active" really means quiescent)
         self._gate_cv = threading.Condition()
-        self._gate_frozen = False
-        self._dispatchers = 0
+        self._gate_frozen = False  # guarded_by: _gate_cv
+        self._dispatchers = 0  # guarded_by: _gate_cv
+        # guarded_by: protocol
+        # (single-writer per element: only MoE worker e flips _moe_active[e];
+        # the quiesce loop tolerates a stale read — it just polls again)
         self._moe_active = [False] * E
         self.migrations: List[Dict[str, Any]] = []  # live re-placement log
         self.migrated_bytes = 0.0
         # jit caches (shape-keyed via jax.jit) + trace-count probes
-        self.trace_counts: collections.Counter = collections.Counter()
+        self.trace_counts: collections.Counter = collections.Counter()  # guarded_by: _trace_lock
         self._trace_lock = threading.Lock()  # counters bump from N threads
         self._hung: List[threading.Thread] = []  # left over by a timed-out run
         self._attn_stage = {"attn": self.stage["attn"],
@@ -195,7 +198,7 @@ class DisaggregatedExecutor:
         self.stop = threading.Event()
         self.errors: List[BaseException] = []
         # event log for protocol assertions in tests
-        self.log: List[tuple] = []
+        self.log: List[tuple] = []  # guarded_by: _log_lock
         self._log_lock = threading.Lock()
         # --- long-lived engine state (ISSUE 4) ----------------------------
         # `clock` is assignable: the ExecutorEngine points it at a replayable
@@ -205,7 +208,7 @@ class DisaggregatedExecutor:
         # .record(layer, expert_ids) — see core.engine.RouterStatsCollector.
         self.router_stats: Optional[Any] = None
         self.on_complete: Optional[Any] = None  # callable(BatchJob)
-        self._jobq: List[BatchJob] = []  # shared admission queue
+        self._jobq: List[BatchJob] = []  # shared admission queue  guarded_by: _jobq_cv
         self._jobq_cv = threading.Condition()
         self._done_cv = threading.Condition()
         self._started = False
@@ -213,8 +216,12 @@ class DisaggregatedExecutor:
         self._moe_threads: List[threading.Thread] = []
         self._t_serving_start: Optional[float] = None
         # measured busy time per device (clock units) for EngineStats
+        # guarded_by: protocol
+        # (single-writer: only worker e / group g accumulates its own cell;
+        # EngineStats reads after join() or tolerates a slightly stale sum)
         self.moe_busy = np.zeros(E)
-        self.group_busy = np.zeros(D)
+        self.group_busy = np.zeros(D)  # guarded_by: protocol
+
 
     def _logev(self, *ev):
         with self._log_lock:
@@ -533,7 +540,7 @@ class DisaggregatedExecutor:
                 # flags: the live re-placement quiesce reads "no flags set
                 # and not active" as proof nothing routed under the old
                 # tables is still being served (ISSUE 5)
-                self._moe_active[e] = True
+                self._moe_active[e] = True  # race-ok: single-writer (worker e); set before flags clear so the quiesce poll never sees a gap
                 rows = buf.dispatch_recv(i)
                 layer = rows[0].layer
                 slot = rows[0].slot
@@ -545,14 +552,14 @@ class DisaggregatedExecutor:
                     # resident all-layer weight stack (super-kernel semantics)
                     t0 = self.clock()
                     out = ffn(e, layer, tokens, eids)
-                    self.moe_busy[e] += self.clock() - t0
+                    self.moe_busy[e] += self.clock() - t0  # race-ok: single-writer (worker e accumulates its own cell)
                 else:
                     out = None
                 self._logev("moe", e, i, slot, layer, len(tokens))
                 self.attn_bufs[i][slot].combine_send(
                     e, CombinePayload(layer=layer, token_ids=token_ids,
                                       expert_ids=eids, outputs=out))
-                self._moe_active[e] = False
+                self._moe_active[e] = False  # race-ok: single-writer (worker e); combine_send above happened-before
         except BaseException as ex:  # surface thread failures to the caller
             self._panic(ex)
 
@@ -637,7 +644,7 @@ class DisaggregatedExecutor:
                             self._layer_params(st["layer"]), st["h"])
                     dt = self.clock() - t0
                     st["job"].kernel_time += dt
-                    self.group_busy[g] += dt
+                    self.group_busy[g] += dt  # race-ok: single-writer (group worker g accumulates its own cell)
                     st["h"] = h
                     st["ctx"] = (xf, w, shared)
                     dispatch(g, st["slot"], st["layer"], xf, idx, st["valid"])
@@ -660,7 +667,7 @@ class DisaggregatedExecutor:
                         apply_norm(st["h"], self.params["final_norm"], self.cfg))
                     dt = self.clock() - t0
                     job.kernel_time += dt
-                    self.group_busy[g] += dt
+                    self.group_busy[g] += dt  # race-ok: single-writer (group worker g accumulates its own cell)
                     job.t_finished = self.clock()
                     free_slots.append(st["slot"])
                     active.remove(st)
@@ -744,6 +751,8 @@ class DisaggregatedExecutor:
                 raise
         try:
             for e in affected:
+                # race-ok: quiesce poll — a stale read just polls again; the
+                # gate freeze guarantees no NEW dispatch can re-set either
                 while self.moe_bufs[e].any_pending() or self._moe_active[e]:
                     _check_alive(deadline, f"moe device {e} drain")
                     time.sleep(0.001)
@@ -775,7 +784,7 @@ class DisaggregatedExecutor:
         # the re-placement occupies the receiving devices (weight copy +
         # jit rebuild); split the measured stall across them for stats()
         if affected:
-            self.moe_busy[list(affected)] += dt / len(affected)
+            self.moe_busy[list(affected)] += dt / len(affected)  # race-ok: workers for `affected` are parked behind the frozen gate here
         self._logev("migrate", tuple(affected), len(moved))
         return rec
 

@@ -81,8 +81,7 @@ from repro.core.cost_model import (CostModel, Deployment, ExpertLoadModel,
                                    Hardware, Placement, V5E)
 from repro.core.placement_control import (MigrationPlan, PlacementController,
                                           WindowObservation)
-from repro.core.scheduler import (Batch, LengthAwareBatcher, balanced_partition,
-                                  chunk_requests)
+from repro.core.scheduler import Batch, LengthAwareBatcher, balanced_partition
 from repro.core.trace import Request, TraceConfig, generate_requests
 from repro.models.common import ModelConfig
 

@@ -11,7 +11,7 @@ import dataclasses
 import math
 import threading
 import time
-from typing import Iterator, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.models.attention import _expand_kv

@@ -14,22 +14,19 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--out results.jsonl]
 """
 import argparse
-import dataclasses
 import json
-import re
 import time
 import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, cells, cell_supported, get_config
 from repro.launch.mesh import (jit_shardings, make_production_mesh,
                                mesh_context)
 from repro.launch import sharding as SH
 from repro.launch.hlo_analysis import analyze
-from repro.launch.steps import TrainState, build_train_step, init_train_state
+from repro.launch.steps import TrainState, build_train_step
 from repro.models.api import build_api
 from repro.models.common import ModelConfig
 from repro.optim.adamw import AdamW

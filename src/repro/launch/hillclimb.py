@@ -11,7 +11,6 @@ results/perf_iterations.jsonl. Used by the EXPERIMENTS.md §Perf loop.
 """
 import argparse
 import json
-import time
 
 import jax
 

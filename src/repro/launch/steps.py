@@ -5,7 +5,6 @@ These are the functions the dry-run lowers and the launchers execute.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -16,10 +16,9 @@ Batch dicts:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import encdec as ED
 from repro.models import frontends

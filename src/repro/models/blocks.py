@@ -13,9 +13,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import (attention_decode, attention_forward,
-                                    cross_attention_forward,
-                                    init_attention_params, init_kv_cache)
+from repro.models.attention import (attention_decode, attention_forward, cross_attention_forward, init_attention_params)
 from repro.models.common import (ModelConfig, act_fn, apply_norm, dense_init,
                                  make_norm_params, split_keys)
 from repro.models.mamba2 import init_mamba_params, mamba_decode, mamba_forward

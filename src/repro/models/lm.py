@@ -22,12 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import blocks as B
-from repro.models.attention import KVCache, init_kv_cache
-from repro.models.common import (ModelConfig, apply_norm, cross_entropy_loss,
-                                 embed_init, make_norm_params, split_keys)
-from repro.models.mamba2 import MambaState, init_mamba_state
+from repro.models.attention import KVCache
+from repro.models.common import (ModelConfig, apply_norm, embed_init, make_norm_params, split_keys)
+from repro.models.mamba2 import init_mamba_state
 from repro.models.moe import MoEAux
-from repro.models.rwkv6 import RWKVState, init_rwkv_state
+from repro.models.rwkv6 import init_rwkv_state
 
 REMAT_POLICIES = {
     "none": "none",

@@ -9,3 +9,25 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# --- runtime lockdep sanitizer (ISSUE 6) -----------------------------------
+# `ASAP_LOCKDEP=1 pytest ...` runs the whole suite with repo-created locks
+# instrumented: lock-order inversions and held-lock condition waits raise at
+# the offending call, and anything recorded in a worker thread (surfaced via
+# the executor's panic path) is re-checked after each test.
+if os.environ.get("ASAP_LOCKDEP") == "1":
+    import pytest  # noqa: E402
+
+    from repro.analysis import lockdep  # noqa: E402
+
+    @pytest.fixture(autouse=True)
+    def _asap_lockdep():
+        lockdep.reset()
+        lockdep.install()
+        try:
+            yield
+            vs = lockdep.violations()
+            assert not vs, "lockdep violations:\n" + "\n".join(
+                f"[{v.kind}] ({v.thread}) {v.message}" for v in vs)
+        finally:
+            lockdep.uninstall()

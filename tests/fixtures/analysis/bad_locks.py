@@ -1,0 +1,58 @@
+"""Seeded lock-discipline violations — each rule of asaplint pass 1 must
+CATCH something in here (tests/test_analysis.py asserts rule-by-rule).
+Never imported; only parsed."""
+import threading
+
+
+class Account:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._balance = 0  # guarded_by: _lock
+        self._audit = []  # guarded_by: protocol
+
+    def deposit(self, x):
+        self._balance += x  # R1: unguarded write
+
+    def naked_wait(self):
+        with self._cv:
+            self._cv.wait()  # R3: no predicate loop
+
+    def unheld_wait(self):
+        self._cv.wait()  # R3: cv lock not held
+
+    def leak(self):
+        self._lock.acquire()  # R4: release not in finally
+        self._balance = 0
+        self._lock.release()
+
+    def proto(self):
+        return self._audit  # R1: protocol access without race-ok
+
+    def proto_empty_reason(self):
+        return self._audit  # race-ok:
+
+    def ok(self, x):
+        with self._lock:
+            self._balance += x
+
+
+class Snoop:
+    def peek(self, acct: Account):
+        return acct._balance  # R2: foreign guarded private access
+
+
+class AB:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def f(self):
+        with self._a:
+            with self._b:  # R5: cycle with g()
+                pass
+
+    def g(self):
+        with self._b:
+            with self._a:
+                pass

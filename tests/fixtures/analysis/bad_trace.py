@@ -1,0 +1,51 @@
+"""Seeded JAX trace-safety violations — each rule of asaplint pass 2 must
+CATCH something in here.  Never imported; only parsed."""
+import threading
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def branchy(x):
+    if x > 0:  # T1: Python branch on a traced value
+        return x
+    return -x
+
+
+@jax.jit
+def loopy(x):
+    while x.sum() > 0:  # T1: Python while on a traced value
+        x = x - 1
+    return x
+
+
+@jax.jit
+def mat(x):
+    v = float(x)  # T2: host materialization
+    s = x.item()  # T2: host materialization
+    y = np.sum(x)  # T2: numpy on a traced value
+    z = np.arange(4)  # T3: host constant baked into the trace
+    return v + s + y + z
+
+
+@partial(jax.jit, static_argnums=(5,))
+def oob(x, y):  # T5: static_argnums out of range
+    return x + y
+
+
+@partial(jax.jit, static_argnums=(1,))
+def unhash(x, cfg: dict):  # T5: unhashable static annotation
+    return x
+
+
+class Holder:
+    def __init__(self):
+        self._lk = threading.Lock()
+        self._step = jax.jit(lambda x: x)
+
+    def run(self, x):
+        with self._lk:
+            f = jax.jit(lambda y: y * 2)  # T4: jit built under a lock
+            return self._step(x) + f(x)  # T4: jitted call under a lock

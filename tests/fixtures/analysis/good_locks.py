@@ -1,0 +1,58 @@
+"""Discipline done right — asaplint pass 1 must report NOTHING unsuppressed
+here (tests/test_analysis.py asserts the clean bill).  Never imported."""
+import threading
+
+
+class Account:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._balance = 0  # guarded_by: _lock
+        self._audit = []  # guarded_by: protocol
+
+    def deposit(self, x):
+        with self._lock:
+            self._balance += x
+
+    def balance(self):
+        # holding the cv == holding its underlying _lock (alias)
+        with self._cv:
+            return self._balance
+
+    def wait_nonzero(self):
+        with self._cv:
+            while self._balance == 0:
+                self._cv.wait()
+            return self._balance
+
+    def wait_for_nonzero(self):
+        with self._cv:
+            self._cv.wait_for(lambda: self._balance != 0)
+
+    def try_tick(self):
+        if not self._lock.acquire(blocking=False):
+            return False
+        try:
+            self._balance += 1
+        finally:
+            self._lock.release()
+        return True
+
+    def snapshot(self):
+        return list(self._audit)  # race-ok: tear-tolerant statistics read
+
+
+class Ordered:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def f(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def g(self):
+        with self._a:
+            with self._b:
+                pass

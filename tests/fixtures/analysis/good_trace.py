@@ -1,0 +1,45 @@
+"""Trace-safe jit usage — asaplint pass 2 must report NOTHING unsuppressed
+here.  Never imported; only parsed."""
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnums=(1,))
+def branch_on_static(x, n: int):
+    if n > 0:  # static argument: resolved at trace time, no retrace churn
+        return x
+    return -x
+
+
+@jax.jit
+def branch_on_none(x, bias):
+    if bias is None:  # pytree-structural test, fine under trace
+        return x
+    return x + bias
+
+
+@jax.jit
+def pure_jnp(x):
+    return jnp.sum(x) * jnp.arange(4)
+
+
+@jax.jit
+def suppressed(x):
+    k = float(x.shape[0])  # retrace-ok: shape is static under trace
+    return x * k
+
+
+class Holder:
+    def __init__(self):
+        self._lk = threading.Lock()
+        self._step = jax.jit(lambda x: x)
+        self._n = 0  # guarded_by: _lk
+
+    def run(self, x):
+        y = self._step(x)  # compile OUTSIDE the lock
+        with self._lk:
+            self._n += 1
+        return y

@@ -2,7 +2,6 @@
 arch instantiates a REDUCED same-family config and runs one train step +
 prefill + decode on CPU, asserting output shapes and finiteness."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -4,10 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.attention import (attention_decode, attention_forward,
-                                    attention_prefill, chunked_causal_attention,
-                                    dense_causal_attention, init_attention_params,
-                                    init_kv_cache, _project_qkv)
+from repro.models.attention import (attention_decode, attention_forward, attention_prefill, chunked_causal_attention, dense_causal_attention, init_attention_params, init_kv_cache)
 from repro.models.common import ModelConfig
 
 CFG = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,

@@ -9,8 +9,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.cost_model import ExpertLoadModel, resample_fractions
-from repro.core.engine import (EngineStats, RequestResult,
-                               RouterStatsCollector, SimEngine)
+from repro.core.engine import EngineStats, RouterStatsCollector, SimEngine
 from repro.core.simulator import SimConfig, run_sim
 from repro.core.trace import Request, TraceClock, generate_requests
 

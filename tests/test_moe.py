@@ -2,12 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.common import ModelConfig
-from repro.models.moe import (expert_capacity, init_moe_params, moe_combine,
-                              moe_dispatch, moe_forward, moe_forward_capacity,
-                              moe_forward_dense, router_topk)
+from repro.models.moe import (expert_capacity, init_moe_params, moe_combine, moe_dispatch, moe_forward_capacity, moe_forward_dense, router_topk)
 
 CFG = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
                   num_heads=4, num_kv_heads=4, head_dim=8, d_ff=64,

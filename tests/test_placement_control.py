@@ -9,9 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.cost_model import (ExpertLoadModel, Placement,
                                    optimal_deployment)
-from repro.core.placement_control import (ExpertMove, MigrationPlan,
-                                          PlacementController,
-                                          WindowObservation, diff_tables)
+from repro.core.placement_control import (PlacementController, WindowObservation, diff_tables)
 from repro.core.simulator import AsapSim, SimConfig
 
 CFG = get_config("deepseek_v32")

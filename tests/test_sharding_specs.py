@@ -1,7 +1,6 @@
 """Sharding-rule structural validity: specs match trees, dims are divisible,
 and a sharded train step lowers on a host mesh."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P

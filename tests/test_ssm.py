@@ -10,8 +10,7 @@ from repro.models import blocks as B
 from repro.models.mamba2 import (init_mamba_params, init_mamba_state,
                                  mamba_decode, mamba_forward, ssd_chunked,
                                  ssd_sequential)
-from repro.models.rwkv6 import (init_rwkv_params, init_rwkv_state,
-                                time_mix_forward, wkv_chunked, wkv_sequential)
+from repro.models.rwkv6 import init_rwkv_state, wkv_chunked, wkv_sequential
 
 MCFG = ModelConfig(name="m", family="hybrid", num_layers=1, d_model=32,
                    num_heads=4, num_kv_heads=4, head_dim=8, d_ff=64,

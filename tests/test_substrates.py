@@ -9,7 +9,7 @@ import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, TokenPipeline
-from repro.optim.adamw import AdamW, global_norm
+from repro.optim.adamw import AdamW
 from repro.optim.compress import (compress_with_feedback, dequantize_int8,
                                   quantize_int8)
 

@@ -3,7 +3,6 @@ scale (simulator) + the full serving/training CLI paths."""
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from repro.configs import get_config
