@@ -1,6 +1,6 @@
-"""asaplint — project-native concurrency & trace-safety analysis (ISSUE 6).
+"""asaplint — project-native static analysis (ISSUEs 6 + 7).
 
-Three coordinated passes over the threaded MPMD runtime:
+Five coordinated passes over the threaded MPMD runtime and its kernels:
 
   lockcheck  — static lock discipline: `# guarded_by:` annotations on shared
                attributes are enforced against `with <lock>:` scopes, plus
@@ -13,6 +13,16 @@ Three coordinated passes over the threaded MPMD runtime:
                branches on traced values, host materialization (`float()`/
                `.item()`/`np.*`), static_argnums problems, and jit calls
                issued while holding a lock.
+  kernelcheck — Pallas kernel contracts at `pl.pallas_call` sites:
+               index_map arity vs grid rank, block-shape rank, bare
+               `min(block, dim)` clamps, accumulator zero-init discipline,
+               f32 dot accumulation, unused scalar-prefetch operands.
+               Suppression: `# kernel-ok: <reason>`.
+  shardcheck — PartitionSpec / mesh-axis / dtype-policy contracts: unknown
+               or duplicated mesh axes, spec rank vs derivable array ndim,
+               FSDP_ARCHS entries naming no config, unknown logical axes,
+               f64 in device code, bf16 accumulators.
+               Suppression: `# shard-ok: <reason>`.
   lockdep    — RUNTIME sanitizer: wraps `threading.Lock`/`Condition` (only
                for locks created inside this repo) to record per-thread
                acquisition stacks, assert a consistent global lock order
@@ -20,22 +30,55 @@ Three coordinated passes over the threaded MPMD runtime:
                and report blocking condition waits issued while holding an
                unrelated lock.  Enabled under pytest with `ASAP_LOCKDEP=1`.
 
-CLI: `python -m repro.analysis [paths...] [--json out.json] [--order]` —
-exits non-zero on any unsuppressed static finding.  See
-docs/static_analysis.md for the annotation grammar and triage workflow.
+A sixth layer, `contracts` (HLO cost contracts), compiles pinned step
+configs on a forced-host mesh and diffs hlo_analysis metrics against golden
+JSON — `python -m repro.analysis --contracts` (see contracts.py).
+
+CLI: `python -m repro.analysis [paths...] [--json out.json] [--order]
+[--strict-suppressions] [--contracts | --update-contracts]` — exits
+non-zero on any unsuppressed static finding.  `--strict-suppressions` also
+fails on suppression comments that no longer match any finding, so
+annotations can't rot.  See docs/static_analysis.md for the annotation
+grammar and triage workflow.
 """
-from repro.analysis.report import Finding, AnalysisResult  # noqa: F401
-from repro.analysis.model import build_models  # noqa: F401
-from repro.analysis.lockcheck import check_locks, lock_order_edges  # noqa: F401
-from repro.analysis.tracelint import check_trace_safety  # noqa: F401
+from repro.analysis.report import Finding, AnalysisResult
+from repro.analysis.model import build_models
+from repro.analysis.lockcheck import check_locks, lock_order_edges
+from repro.analysis.tracelint import check_trace_safety
+from repro.analysis.kernelcheck import check_kernels
+from repro.analysis.shardcheck import check_sharding
+
+__all__ = ["Finding", "AnalysisResult", "build_models", "check_locks",
+           "lock_order_edges", "check_trace_safety", "check_kernels",
+           "check_sharding", "run_static"]
 
 
-def run_static(paths, follow_imports: bool = False) -> "AnalysisResult":
-    """Run both static passes over `paths` (files or directories)."""
+def _stale_suppressions(models, findings):
+    """Suppression comments no findings consumed — dead annotations."""
+    used = {(f.path, f.suppress_line) for f in findings
+            if f.suppress_line is not None}
+    out = []
+    for fm in models.values():
+        for line, kind, reason in fm.all_suppressions():
+            if (fm.path, line) not in used:
+                out.append(Finding(
+                    rule="stale-suppression", path=fm.path, line=line,
+                    message=f"`# {kind}: {reason}` no longer matches any "
+                            f"finding — the hazard it justified is gone; "
+                            f"delete the annotation"))
+    return out
+
+
+def run_static(paths, follow_imports: bool = False,
+               strict_suppressions: bool = False) -> "AnalysisResult":
+    """Run all static passes over `paths` (files or directories)."""
     from repro.analysis.model import collect_files
     files = collect_files(paths)
     models = build_models(files)
-    findings = check_locks(models) + check_trace_safety(models)
+    findings = check_locks(models) + check_trace_safety(models) \
+        + check_kernels(models) + check_sharding(models)
+    if strict_suppressions:
+        findings += _stale_suppressions(models, findings)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return AnalysisResult(findings=findings,
                           lock_edges=lock_order_edges(models),

@@ -1,23 +1,57 @@
-"""CLI: `python -m repro.analysis [paths...] [--json out.json] [--order]`.
+"""CLI: `python -m repro.analysis [paths...] [--json out.json] [--order]
+[--strict-suppressions] [--contracts | --update-contracts]`.
 
-Runs the lock-discipline and trace-safety passes over the given files or
-directories (default: src/repro/core) and exits 1 if any unsuppressed
-finding remains.  Suppressed findings (race-ok / retrace-ok) are listed so
-their justifications stay auditable; `--order` also prints the static
-lock-order graph the cycle detector ran on.
+Static mode (default) runs the lock-discipline, trace-safety, kernel, and
+sharding passes over the given files or directories (default:
+src/repro/core) and exits 1 if any unsuppressed finding remains.
+Suppressed findings (race-ok / retrace-ok / kernel-ok / shard-ok) are
+listed so their justifications stay auditable; `--order` also prints the
+static lock-order graph; `--strict-suppressions` additionally fails on
+suppression comments that no longer match any finding.
+
+Contract mode (`--contracts` / `--update-contracts`) compiles the pinned
+HLO cost-contract cells and diffs (or re-baselines) their dot-FLOPs /
+collective-bytes / memory-bytes against the golden JSON under
+analysis/contracts_golden/ — see docs/static_analysis.md.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
-from repro.analysis import run_static
+
+def _run_contracts(args) -> int:
+    # the forced-device flag must land before ANY jax import in this
+    # process — contracts.py defers its jax imports for exactly this reason
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    from repro.analysis.contracts import run_contracts
+    ok, report = run_contracts(update=args.update_contracts)
+    for entry in report["contracts"]:
+        line = f"contract {entry['name']} ({entry['arch']}/{entry['kind']}):" \
+               f" {entry['status']}"
+        for v in entry.get("violations", []):
+            line += (f"\n    {v['metric']} {v['why']}: golden={v['golden']:.6g}"
+                     f" measured={v['measured']:.6g} rel={v['rel']:+.2%}")
+        if entry["status"] == "missing-golden":
+            line += f"\n    {entry['why']}"
+        print(line)
+    if args.contracts_json:
+        with open(args.contracts_json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"-- contract report written to {args.contracts_json}")
+    print(f"hlo-contracts: {len(report['contracts'])} cell(s), "
+          f"{'ok' if ok else 'FAIL'}")
+    return 0 if ok else 1
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="asaplint: concurrency & JAX trace-safety analysis")
+        description="asaplint: concurrency, trace-safety, kernel, and "
+                    "sharding contract analysis")
     ap.add_argument("paths", nargs="*", default=["src/repro/core"],
                     help="files or directories to analyze "
                          "(default: src/repro/core)")
@@ -26,9 +60,24 @@ def main(argv=None) -> int:
                          "findings and the lock-order graph) as JSON")
     ap.add_argument("--order", action="store_true",
                     help="print the static lock-order graph")
+    ap.add_argument("--strict-suppressions", action="store_true",
+                    help="also fail on suppression comments that no longer "
+                         "match any finding")
+    ap.add_argument("--contracts", action="store_true",
+                    help="verify the HLO cost contracts instead of running "
+                         "the static passes")
+    ap.add_argument("--update-contracts", action="store_true",
+                    help="re-baseline the HLO cost-contract goldens")
+    ap.add_argument("--contracts-json", metavar="PATH", default=None,
+                    help="write the contract diff report as JSON")
     args = ap.parse_args(argv)
 
-    res = run_static(args.paths)
+    if args.contracts or args.update_contracts:
+        return _run_contracts(args)
+
+    from repro.analysis import run_static
+    res = run_static(args.paths,
+                     strict_suppressions=args.strict_suppressions)
 
     for f in res.unsuppressed:
         print(f.format())

@@ -1,0 +1,426 @@
+"""kernelcheck — static contracts for `pl.pallas_call` sites (ISSUE 7).
+
+The super-kernel's correctness hangs on invariants Pallas never checks for
+you: an `index_map` whose arity silently disagrees with the grid rank, a
+`min(block, dim)` clamp that stops dividing the dim, an accumulator that is
+never zero-initialized on the minor grid axis, an MXU dot accumulating in
+bf16.  Each of those is a corrupt-numerics-or-perf-cliff bug with no
+exception.  This pass checks them at the AST level:
+
+  kc-index-map-arity        index_map lambda arity != grid rank +
+                            num_scalar_prefetch
+  kc-block-rank             index_map return-tuple length != BlockSpec
+                            block-shape rank (also out_specs vs out_shape)
+  kc-min-clamp              a `min(...)` result feeds the grid/block shapes
+                            with no divisibility guard — use
+                            kernels.blocking.floor_to_divisor
+  kc-accum-init             `ref[...] += ...` in a kernel with no
+                            `pl.when(... == 0)`-guarded zero-init of that ref
+  kc-dot-preferred-type     in-kernel dot without
+                            `preferred_element_type=jnp.float32` (bf16 MXU
+                            accumulation — the dtype-policy half of
+                            shardcheck, enforced where it bites)
+  kc-unused-scalar-prefetch a scalar-prefetch operand used by neither the
+                            kernel body nor any index_map
+
+Suppression: `# kernel-ok: <reason>` on the flagged line (or a standalone
+comment block above it).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.model import FileModel
+from repro.analysis.report import Finding
+
+_DOT_NAMES = {"dot", "dot_general"}
+_ZERO_CTORS = {"zeros", "zeros_like", "full", "full_like"}
+
+
+# ---------------------------------------------------------------------------
+# site model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpecSite:
+    """One BlockSpec inside a pallas_call."""
+    node: ast.Call
+    role: str  # "in" | "out"
+    index: int
+    block_shape: Optional[ast.expr]
+    index_map: Optional[ast.Lambda]
+
+
+@dataclasses.dataclass
+class CallSite:
+    """One pl.pallas_call, with grid/spec/kernel structure resolved."""
+    node: ast.Call
+    fn: Optional[ast.FunctionDef]  # enclosing function
+    kernel: Optional[ast.FunctionDef]
+    grid_rank: Optional[int]
+    num_scalar_prefetch: int
+    specs: List[SpecSite]
+    out_shape_rank: Optional[int]
+    grid_expr: Optional[ast.expr]
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "pallas_call":
+        return True
+    return isinstance(f, ast.Name) and f.id == "pallas_call"
+
+
+def _call_name(node: ast.expr) -> Optional[str]:
+    """Last attribute segment of a call target: `pltpu.X(...)` -> "X"."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _locals_map(fn: ast.FunctionDef) -> Dict[str, ast.expr]:
+    """name -> value for simple single-target assignments and annotated
+    parameter DEFAULTS (last literal wins; one level, no flow analysis)."""
+    out: Dict[str, ast.expr] = {}
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        out[a.arg] = d
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            out[a.arg] = d
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+def _resolve(env: Dict[str, ast.expr], expr: Optional[ast.expr],
+             depth: int = 2) -> Optional[ast.expr]:
+    while depth and isinstance(expr, ast.Name) and expr.id in env:
+        expr = env[expr.id]
+        depth -= 1
+    return expr
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _int_const(expr: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int):
+        return expr.value
+    return None
+
+
+def _tuple_rank(expr: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(expr, (ast.Tuple, ast.List)) and \
+            not any(isinstance(e, ast.Starred) for e in expr.elts):
+        return len(expr.elts)
+    return None
+
+
+def _spec_list(expr: Optional[ast.expr]) -> List[ast.Call]:
+    """BlockSpec calls inside an in_specs/out_specs expression."""
+    out: List[ast.Call] = []
+    if expr is None:
+        return out
+    nodes = expr.elts if isinstance(expr, (ast.Tuple, ast.List)) else [expr]
+    for n in nodes:
+        if isinstance(n, ast.Call) and _call_name(n) == "BlockSpec":
+            out.append(n)
+    return out
+
+
+def _parse_spec(call: ast.Call, env: Dict[str, ast.expr], role: str,
+                index: int) -> SpecSite:
+    shape = call.args[0] if call.args else _kw(call, "block_shape")
+    imap = call.args[1] if len(call.args) > 1 else _kw(call, "index_map")
+    imap = _resolve(env, imap)
+    return SpecSite(node=call, role=role, index=index,
+                    block_shape=_resolve(env, shape),
+                    index_map=imap if isinstance(imap, ast.Lambda) else None)
+
+
+def _resolve_kernel(expr: Optional[ast.expr], env: Dict[str, ast.expr],
+                    fm: FileModel) -> Optional[ast.FunctionDef]:
+    """kernel arg -> FunctionDef, through `kern = functools.partial(_k, ...)`."""
+    expr = _resolve(env, expr)
+    if isinstance(expr, ast.Call) and _call_name(expr) == "partial" \
+            and expr.args:
+        expr = _resolve(env, expr.args[0])
+    if isinstance(expr, ast.Name):
+        for node in ast.walk(fm.tree):
+            if isinstance(node, ast.FunctionDef) and node.name == expr.id:
+                return node
+    return None
+
+
+def _parse_site(call: ast.Call, fn: Optional[ast.FunctionDef],
+                fm: FileModel) -> CallSite:
+    env = _locals_map(fn) if fn is not None else {}
+    grid_expr = _kw(call, "grid")
+    nsp = 0
+    in_specs, out_specs = _kw(call, "in_specs"), _kw(call, "out_specs")
+    gs = _kw(call, "grid_spec")
+    if isinstance(gs, ast.Call):
+        nsp = _int_const(_kw(gs, "num_scalar_prefetch")) or 0
+        grid_expr = _kw(gs, "grid") or grid_expr
+        in_specs = _kw(gs, "in_specs") or in_specs
+        out_specs = _kw(gs, "out_specs") or out_specs
+    grid_expr = _resolve(env, grid_expr)
+    specs = [_parse_spec(s, env, "in", i)
+             for i, s in enumerate(_spec_list(_resolve(env, in_specs)))]
+    specs += [_parse_spec(s, env, "out", i)
+              for i, s in enumerate(_spec_list(_resolve(env, out_specs)))]
+    out_shape = _resolve(env, _kw(call, "out_shape"))
+    out_rank = None
+    if isinstance(out_shape, ast.Call) and \
+            _call_name(out_shape) == "ShapeDtypeStruct" and out_shape.args:
+        out_rank = _tuple_rank(_resolve(env, out_shape.args[0]))
+    kernel_expr = call.args[0] if call.args else _kw(call, "kernel")
+    return CallSite(node=call, fn=fn,
+                    kernel=_resolve_kernel(kernel_expr, env, fm),
+                    grid_rank=_tuple_rank(grid_expr),
+                    num_scalar_prefetch=nsp, specs=specs,
+                    out_shape_rank=out_rank, grid_expr=grid_expr)
+
+
+def _collect_sites(fm: FileModel) -> List[CallSite]:
+    sites: List[CallSite] = []
+    # enclosing function of each pallas_call (innermost def wins)
+    def visit(node: ast.AST, fn: Optional[ast.FunctionDef]):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = node  # type: ignore[assignment]
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Call) and _is_pallas_call(child):
+                sites.append(_parse_site(child, fn, fm))
+            visit(child, fn)
+    visit(fm.tree, None)
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+
+class KernelCheck:
+    def __init__(self, models: Dict[str, FileModel]):
+        self.models = models
+        self.findings: List[Finding] = []
+
+    def run(self):
+        for fm in self.models.values():
+            for site in _collect_sites(fm):
+                self._check_index_maps(fm, site)
+                self._check_min_clamp(fm, site)
+                self._check_kernel_body(fm, site)
+                self._check_scalar_prefetch(fm, site)
+
+    def _finding(self, fm: FileModel, rule: str, line: int, msg: str):
+        got = fm.suppression("kernel-ok", line)
+        reason, sline = got if got else (None, None)
+        if reason == "":
+            self.findings.append(Finding(
+                rule="kernel-ok-no-reason", path=fm.path, line=line,
+                message="kernel-ok suppression without a reason — record "
+                        "why this kernel contract is safe to break"))
+            reason, sline = None, None
+        self.findings.append(Finding(
+            rule=rule, path=fm.path, line=line, message=msg,
+            suppressed=reason is not None, reason=reason,
+            suppress_line=sline))
+
+    # ------------------------------------------------ index maps / blocks --
+    def _check_index_maps(self, fm: FileModel, site: CallSite):
+        for spec in site.specs:
+            lam = spec.index_map
+            block_rank = _tuple_rank(spec.block_shape)
+            if lam is not None and site.grid_rank is not None:
+                arity = len(lam.args.posonlyargs) + len(lam.args.args)
+                want = site.grid_rank + site.num_scalar_prefetch
+                if arity != want:
+                    self._finding(
+                        fm, "kc-index-map-arity", lam.lineno,
+                        f"index_map takes {arity} arg(s) but grid rank "
+                        f"{site.grid_rank} + {site.num_scalar_prefetch} "
+                        f"scalar-prefetch operand(s) requires {want} — "
+                        f"Pallas will mis-bind grid indices")
+            if lam is not None and block_rank is not None:
+                ret_rank = _tuple_rank(lam.body)
+                if ret_rank is not None and ret_rank != block_rank:
+                    self._finding(
+                        fm, "kc-block-rank", lam.lineno,
+                        f"index_map returns {ret_rank} coordinate(s) for a "
+                        f"rank-{block_rank} block shape — block offsets will "
+                        f"misalign with the operand")
+            if spec.role == "out" and block_rank is not None and \
+                    site.out_shape_rank is not None and \
+                    block_rank != site.out_shape_rank:
+                self._finding(
+                    fm, "kc-block-rank", spec.node.lineno,
+                    f"out_specs block shape is rank {block_rank} but "
+                    f"out_shape is rank {site.out_shape_rank}")
+
+    # --------------------------------------------------------- min clamps --
+    def _check_min_clamp(self, fm: FileModel, site: CallSite):
+        if site.fn is None:
+            return
+        mins: Dict[str, int] = {}
+        for node in ast.walk(site.fn):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                    and isinstance(node.value.func, ast.Name) \
+                    and node.value.func.id == "min":
+                for tgt in node.targets:
+                    tgts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+                    for t in tgts:
+                        if isinstance(t, ast.Name):
+                            mins[t.id] = node.lineno
+            # a = min(...), b = min(...) in one tuple assignment
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Tuple) and \
+                    isinstance(node.targets[0], ast.Tuple):
+                for t, v in zip(node.targets[0].elts, node.value.elts):
+                    if isinstance(t, ast.Name) and isinstance(v, ast.Call) \
+                            and isinstance(v.func, ast.Name) \
+                            and v.func.id == "min":
+                        mins[t.id] = node.lineno
+        if not mins:
+            return
+        used: set = set()
+        for expr in [site.grid_expr, *[s.block_shape for s in site.specs]]:
+            if expr is None:
+                continue
+            for sub in ast.walk(expr):
+                if isinstance(sub, ast.Name):
+                    used.add(sub.id)
+        for name in sorted(set(mins) & used):
+            self._finding(
+                fm, "kc-min-clamp", mins[name],
+                f"block size `{name}` is a bare min() clamp feeding the "
+                f"grid/block shapes — a clamped block need not divide the "
+                f"dim (silent misindexing); use "
+                f"kernels.blocking.floor_to_divisor")
+
+    # ------------------------------------------------------- kernel body ---
+    def _check_kernel_body(self, fm: FileModel, site: CallSite):
+        kern = site.kernel
+        if kern is None:
+            return
+        # pl.when(... == 0)-guarded zero-inits: ref names initialized
+        inited: set = set()
+        for node in ast.walk(kern):
+            if isinstance(node, ast.FunctionDef) and node is not kern:
+                if not any(self._is_when_zero(d) for d in node.decorator_list):
+                    continue
+                for stmt in ast.walk(node):
+                    if isinstance(stmt, ast.Assign):
+                        for tgt in stmt.targets:
+                            if isinstance(tgt, ast.Subscript) and \
+                                    isinstance(tgt.value, ast.Name):
+                                inited.add(tgt.value.id)
+        for node in ast.walk(kern):
+            if isinstance(node, ast.AugAssign) and \
+                    isinstance(node.op, ast.Add) and \
+                    isinstance(node.target, ast.Subscript) and \
+                    isinstance(node.target.value, ast.Name):
+                ref = node.target.value.id
+                if ref not in inited:
+                    self._finding(
+                        fm, "kc-accum-init", node.lineno,
+                        f"`{ref}[...] += ...` accumulates across grid steps "
+                        f"but no `pl.when(... == 0)`-guarded zero-init of "
+                        f"`{ref}` exists — first-step output is garbage "
+                        f"(VMEM revisits are not zeroed)")
+            if isinstance(node, ast.Call) and _call_name(node) in _DOT_NAMES:
+                pet = _kw(node, "preferred_element_type")
+                if pet is None:
+                    self._finding(
+                        fm, "kc-dot-preferred-type", node.lineno,
+                        "in-kernel dot without preferred_element_type="
+                        "jnp.float32 — MXU accumulates in the input dtype "
+                        "(bf16 partials lose ~8 mantissa bits)")
+                elif not (isinstance(pet, ast.Attribute)
+                          and pet.attr == "float32"):
+                    self._finding(
+                        fm, "kc-dot-preferred-type", node.lineno,
+                        "in-kernel dot must accumulate in f32 "
+                        "(preferred_element_type=jnp.float32) per the dtype "
+                        "policy — see docs/static_analysis.md")
+
+    def _is_when_zero(self, dec: ast.expr) -> bool:
+        """`@pl.when(<...> == 0)` (either comparison side)."""
+        if not (isinstance(dec, ast.Call) and _call_name(dec) == "when"
+                and dec.args):
+            return False
+        cond = dec.args[0]
+        if not isinstance(cond, ast.Compare) or \
+                not any(isinstance(op, ast.Eq) for op in cond.ops):
+            return False
+        sides = [cond.left, *cond.comparators]
+        return any(isinstance(s, ast.Constant) and s.value == 0
+                   for s in sides)
+
+    # -------------------------------------------------- scalar prefetch ----
+    def _check_scalar_prefetch(self, fm: FileModel, site: CallSite):
+        nsp = site.num_scalar_prefetch
+        kern = site.kernel
+        if nsp <= 0 or kern is None:
+            return
+        params = [a.arg for a in kern.args.posonlyargs + kern.args.args]
+        if len(params) < nsp:
+            return
+        for i in range(nsp):
+            if self._operand_used(site, kern, params[i], i):
+                continue
+            self._finding(
+                fm, "kc-unused-scalar-prefetch", site.node.lineno,
+                f"scalar-prefetch operand {i} (`{params[i]}`) is used by "
+                f"neither the kernel body nor any index_map — dead SMEM "
+                f"traffic; drop it or wire it into an index_map")
+
+    def _operand_used(self, site: CallSite, kern: ast.FunctionDef,
+                      pname: str, i: int) -> bool:
+        # kernel body: any Name load (a bare `del x` does not count as use)
+        deleted = {t.id for node in ast.walk(kern)
+                   if isinstance(node, ast.Delete)
+                   for t in node.targets if isinstance(t, ast.Name)}
+        for node in ast.walk(kern):
+            if isinstance(node, ast.Name) and node.id == pname and \
+                    isinstance(node.ctx, ast.Load) and pname not in deleted:
+                return True
+        # index maps: the lambda param at position grid_rank + i
+        for spec in site.specs:
+            lam = spec.index_map
+            if lam is None:
+                continue
+            largs = lam.args.posonlyargs + lam.args.args
+            grid_rank = site.grid_rank if site.grid_rank is not None \
+                else len(largs) - site.num_scalar_prefetch
+            pos = grid_rank + i
+            if pos < 0 or pos >= len(largs):
+                continue
+            lname = largs[pos].arg
+            if any(isinstance(n, ast.Name) and n.id == lname
+                   and isinstance(n.ctx, ast.Load)
+                   for n in ast.walk(lam.body)):
+                return True
+        return False
+
+
+def check_kernels(models: Dict[str, FileModel]) -> List[Finding]:
+    kc = KernelCheck(models)
+    kc.run()
+    return kc.findings

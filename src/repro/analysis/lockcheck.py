@@ -75,17 +75,19 @@ class LockDisciplinePass:
         if not ctx.checking:
             return
         line = node.lineno
-        lines = [line] + ([ctx.stmt_line] if ctx.stmt_line else [])
-        reason = ctx.fm.race_ok(*lines)
+        lines = [line, *([ctx.stmt_line] if ctx.stmt_line else [])]
+        got = ctx.fm.suppression("race-ok", *lines)
+        reason, sline = got if got else (None, None)
         if reason == "":
             self.findings.append(Finding(
                 rule="race-ok-no-reason", path=ctx.fm.path, line=line,
                 message="race-ok suppression without a reason — record why "
                         "this access is protocol-safe"))
-            reason = None
+            reason, sline = None, None
         self.findings.append(Finding(
             rule=rule, path=ctx.fm.path, line=line, message=msg,
-            suppressed=reason is not None, reason=reason))
+            suppressed=reason is not None, reason=reason,
+            suppress_line=sline))
 
     def _lock_key(self, cm: ClassModel, attr: str) -> str:
         return f"{cm.name}.{cm.canonical_lock(attr)}"
@@ -167,14 +169,16 @@ class LockDisciplinePass:
                 attr = is_self_attr(node.func.value, self_name)
                 if attr and attr in cm.locks and \
                         attr not in released_in_finally:
-                    reason = fm.race_ok(node.lineno)
+                    got = fm.suppression("race-ok", node.lineno)
+                    reason, sline = got if got else (None, None)
                     self.findings.append(Finding(
                         rule="acquire-no-release", path=fm.path,
                         line=node.lineno,
                         message=f"{cm.name}.{attr}.acquire() without a "
                                 f"matching release() in a finally: block — "
                                 f"an exception leaks the lock",
-                        suppressed=reason is not None, reason=reason))
+                        suppressed=reason is not None, reason=reason,
+                        suppress_line=sline))
 
     # ------------------------------------------------------- the walker ----
     def _walk_body(self, stmts: Sequence[ast.stmt], ctx: _Ctx):
@@ -416,11 +420,11 @@ class LockDisciplinePass:
                     dfs(v)
                 elif color.get(v) == 1:
                     i = stack.index(v)
-                    cyc = tuple(stack[i:]) + (v,)
+                    cyc = (*stack[i:], v)
                     # canonical rotation so each cycle reports once
                     base = cyc[:-1]
                     k = base.index(min(base))
-                    canon = base[k:] + base[:k] + (base[k],)
+                    canon = (*base[k:], *base[:k], base[k])
                     if canon not in cycles:
                         cycles.append(canon)
             stack.pop()

@@ -34,6 +34,17 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 GUARDED_RE = re.compile(r"guarded_by:\s*([A-Za-z_][A-Za-z0-9_]*)")
 RACE_OK_RE = re.compile(r"race-ok:\s*(.*)")
 RETRACE_OK_RE = re.compile(r"retrace-ok:\s*(.*)")
+KERNEL_OK_RE = re.compile(r"kernel-ok:\s*(.*)")
+SHARD_OK_RE = re.compile(r"shard-ok:\s*(.*)")
+
+#: suppression kind -> regex, used by the generic accessor and the
+#: stale-suppression scan (`--strict-suppressions`)
+SUPPRESSION_RES: Dict[str, re.Pattern] = {
+    "race-ok": RACE_OK_RE,
+    "retrace-ok": RETRACE_OK_RE,
+    "kernel-ok": KERNEL_OK_RE,
+    "shard-ok": SHARD_OK_RE,
+}
 
 #: the pseudo-guard name for protocol-protected (deliberately lock-free)
 #: shared state — see docs/static_analysis.md
@@ -95,13 +106,15 @@ class FileModel:
     def _comment_match(self, rx: re.Pattern, *lines: int):
         """Match a suppression on any of `lines`, or on a STANDALONE comment
         line block immediately above the earliest of them (inline comments on
-        a preceding statement never leak downward)."""
+        a preceding statement never leak downward).  Returns (match, line)
+        so callers can record WHICH comment discharged the finding — the
+        stale-suppression scan needs it."""
         for ln in lines:
             c = self.comments.get(ln)
             if c:
                 m = rx.search(c)
                 if m:
-                    return m
+                    return m, ln
         src = self.source.splitlines()
         ln = min(lines) - 1
         while ln >= 1 and ln <= len(src) and src[ln - 1].lstrip().startswith("#"):
@@ -109,17 +122,37 @@ class FileModel:
             if c:
                 m = rx.search(c)
                 if m:
-                    return m
+                    return m, ln
             ln -= 1
         return None
 
+    def suppression(self, kind: str, *lines: int) -> Optional[Tuple[str, int]]:
+        """(reason, comment_line) for a `# <kind>: reason` suppression
+        covering any of `lines`, else None."""
+        got = self._comment_match(SUPPRESSION_RES[kind], *lines)
+        if got is None:
+            return None
+        m, ln = got
+        return m.group(1).strip(), ln
+
     def race_ok(self, *lines: int) -> Optional[str]:
-        m = self._comment_match(RACE_OK_RE, *lines)
-        return m.group(1).strip() if m else None
+        got = self.suppression("race-ok", *lines)
+        return got[0] if got else None
 
     def retrace_ok(self, *lines: int) -> Optional[str]:
-        m = self._comment_match(RETRACE_OK_RE, *lines)
-        return m.group(1).strip() if m else None
+        got = self.suppression("retrace-ok", *lines)
+        return got[0] if got else None
+
+    def all_suppressions(self) -> List[Tuple[int, str, str]]:
+        """Every suppression comment in the file as (line, kind, reason) —
+        the universe the stale-suppression scan subtracts used ones from."""
+        out: List[Tuple[int, str, str]] = []
+        for ln in sorted(self.comments):
+            for kind, rx in SUPPRESSION_RES.items():
+                m = rx.search(self.comments[ln])
+                if m:
+                    out.append((ln, kind, m.group(1).strip()))
+        return out
 
 
 def extract_comments(source: str) -> Dict[int, str]:

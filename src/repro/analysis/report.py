@@ -22,6 +22,9 @@ class Finding:
     message: str
     suppressed: bool = False
     reason: Optional[str] = None  # the race-ok/retrace-ok justification
+    # comment line that discharged a suppressed finding — lets the
+    # stale-suppression scan tell used annotations from rotted ones
+    suppress_line: Optional[int] = None
 
     def format(self) -> str:
         tag = " [suppressed: {}]".format(self.reason) if self.suppressed \

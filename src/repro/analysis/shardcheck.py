@@ -1,0 +1,386 @@
+"""shardcheck — PartitionSpec / mesh-axis / dtype-policy contracts (ISSUE 7).
+
+A PartitionSpec naming a mesh axis that doesn't exist, an FSDP_ARCHS entry
+that matches no config, or a logical-axis hint that no rule will ever map is
+a silent no-op in JAX: the array simply stays replicated and the perf cliff
+shows up three layers away.  This pass harvests the declared universes from
+the analyzed files themselves and cross-checks every use:
+
+  sc-unknown-mesh-axis    a string in a PartitionSpec literal that is not a
+                          declared mesh axis (harvested from make_mesh /
+                          Mesh(...) axis-name tuples)
+  sc-duplicate-mesh-axis  the same mesh axis named twice in one spec
+  sc-spec-rank            spec rank > array ndim where the array's shape is
+                          statically derivable (jnp.zeros/ShapeDtypeStruct
+                          literals)
+  sc-fsdp-unknown-arch    an FSDP_ARCHS entry naming no known config
+                          (harvested from ARCHS / EXTRA_ARCHS / _ALIASES)
+  sc-unknown-logical-axis a pshard.constrain(...) name outside
+                          KNOWN_LOGICAL_AXES — set_rules would silently
+                          never map it
+  sc-f64-literal          float64 in jitted/kernel code (x64 is disabled;
+                          the literal silently downcasts or retraces)
+  sc-bf16-accum           an accumulator created in bf16 and then `+=`-ed —
+                          accumulate in f32, cast once at the end
+
+Suppression: `# shard-ok: <reason>` on the flagged line (or a standalone
+comment block above it).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.model import FileModel
+from repro.analysis.report import Finding
+
+_MESH_CTORS = {"make_mesh", "Mesh", "make_host_mesh"}
+_ARRAY_CTORS = {"zeros", "ones", "empty", "full", "ShapeDtypeStruct"}
+_ARCH_LIST_NAMES = {"ARCHS", "EXTRA_ARCHS"}
+
+
+def _call_name(node: ast.expr) -> Optional[str]:
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _strings_in(expr: Optional[ast.expr]) -> List[str]:
+    if expr is None:
+        return []
+    return [n.value for n in ast.walk(expr)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)]
+
+
+def _fn_locals(fn: ast.AST) -> Dict[str, ast.expr]:
+    out: Dict[str, ast.expr] = {}
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        args = fn.args
+        pos = args.posonlyargs + args.args
+        for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+            out[a.arg] = d
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None:
+                out[a.arg] = d
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _pspec_names(fm: FileModel) -> Set[str]:
+    """Local names bound to PartitionSpec (`import ... as P` included)."""
+    names = {"PartitionSpec"}
+    for node in ast.walk(fm.tree):
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name == "PartitionSpec":
+                    names.add(alias.asname or alias.name)
+    return names
+
+
+def _is_pspec_call(node: ast.Call, fm: FileModel,
+                   names: Set[str]) -> bool:
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "PartitionSpec":
+        return True
+    return isinstance(f, ast.Name) and f.id in names
+
+
+def _is_jitted(fn: ast.FunctionDef, fm: FileModel) -> bool:
+    """Decorated with jax.jit / jit / functools.partial(jax.jit, ...)."""
+    for dec in fn.decorator_list:
+        for sub in ast.walk(dec):
+            if isinstance(sub, ast.Attribute) and sub.attr == "jit":
+                return True
+            if isinstance(sub, ast.Name) and sub.id == "jit" \
+                    and fm.imports.get("jit", "").startswith("jax"):
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# universe harvesting (per analysis run, across all analyzed files)
+# ---------------------------------------------------------------------------
+
+
+def harvest_mesh_axes(models: Dict[str, FileModel]) -> Set[str]:
+    """Axis names from make_mesh/Mesh call sites (axis_names arg resolved
+    through one level of local assignment; conditional tuples contribute
+    every branch's names)."""
+    axes: Set[str] = set()
+    for fm in models.values():
+        for fn in [fm.tree, *[n for n in ast.walk(fm.tree)
+                              if isinstance(n, ast.FunctionDef)]]:
+            env = _fn_locals(fn)
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Call)
+                        and _call_name(node) in _MESH_CTORS):
+                    continue
+                arg = node.args[1] if len(node.args) > 1 \
+                    else next((k.value for k in node.keywords
+                               if k.arg == "axis_names"), None)
+                if isinstance(arg, ast.Name) and arg.id in env:
+                    arg = env[arg.id]
+                axes.update(_strings_in(arg))
+    return axes
+
+
+def harvest_arch_names(models: Dict[str, FileModel]) -> Set[str]:
+    names: Set[str] = set()
+    for fm in models.values():
+        for node in fm.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            tgt = node.targets[0].id
+            if tgt in _ARCH_LIST_NAMES or tgt == "_ALIASES":
+                names.update(_strings_in(node.value))
+    return names
+
+
+def harvest_set_literal(models: Dict[str, FileModel], var: str) \
+        -> List[Tuple[FileModel, int, Set[str]]]:
+    """(file, line, strings) for each module-level `var = {...}` literal."""
+    out = []
+    for fm in models.values():
+        for node in fm.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and node.targets[0].id == var:
+                out.append((fm, node.lineno, set(_strings_in(node.value))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+
+class ShardCheck:
+    def __init__(self, models: Dict[str, FileModel]):
+        self.models = models
+        self.findings: List[Finding] = []
+        self.mesh_axes = harvest_mesh_axes(models)
+        self.arch_names = harvest_arch_names(models)
+        self.logical_axes: Set[str] = set()
+        for _fm, _ln, strs in harvest_set_literal(models,
+                                                  "KNOWN_LOGICAL_AXES"):
+            self.logical_axes |= strs
+
+    def _finding(self, fm: FileModel, rule: str, line: int, msg: str):
+        got = fm.suppression("shard-ok", line)
+        reason, sline = got if got else (None, None)
+        if reason == "":
+            self.findings.append(Finding(
+                rule="shard-ok-no-reason", path=fm.path, line=line,
+                message="shard-ok suppression without a reason — record "
+                        "why this sharding contract is safe to break"))
+            reason, sline = None, None
+        self.findings.append(Finding(
+            rule=rule, path=fm.path, line=line, message=msg,
+            suppressed=reason is not None, reason=reason,
+            suppress_line=sline))
+
+    def run(self):
+        self._check_fsdp_archs()
+        for fm in self.models.values():
+            self._check_pspecs(fm)
+            self._check_constrain(fm)
+            self._check_dtype_policy(fm)
+        return self.findings
+
+    # ---------------------------------------------------- PartitionSpecs ---
+    def _spec_literal_axes(self, call: ast.Call) -> List[Tuple[str, int]]:
+        """(axis, line) for every literal string entry of the spec,
+        flattening tuple entries ((\"pod\", \"data\") counts both)."""
+        out: List[Tuple[str, int]] = []
+        for a in call.args:
+            if isinstance(a, ast.Starred):
+                continue
+            elts = a.elts if isinstance(a, (ast.Tuple, ast.List)) else [a]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    out.append((e.value, e.lineno))
+        return out
+
+    def _check_pspecs(self, fm: FileModel):
+        pnames = _pspec_names(fm)
+        for node in ast.walk(fm.tree):
+            if not (isinstance(node, ast.Call)
+                    and _is_pspec_call(node, fm, pnames)):
+                continue
+            entries = self._spec_literal_axes(node)
+            if self.mesh_axes:
+                for ax, ln in entries:
+                    if ax not in self.mesh_axes:
+                        self._finding(
+                            fm, "sc-unknown-mesh-axis", ln,
+                            f"PartitionSpec names mesh axis '{ax}' but the "
+                            f"declared meshes only have "
+                            f"{sorted(self.mesh_axes)} — this spec can "
+                            f"never apply")
+            seen: Set[str] = set()
+            for ax, ln in entries:
+                if ax in seen:
+                    self._finding(
+                        fm, "sc-duplicate-mesh-axis", ln,
+                        f"mesh axis '{ax}' appears twice in one "
+                        f"PartitionSpec — an axis can shard only one dim")
+                seen.add(ax)
+        self._check_spec_ranks(fm)
+
+    def _spec_rank(self, call: ast.Call) -> Optional[int]:
+        if any(isinstance(a, ast.Starred) for a in call.args):
+            return None
+        return len(call.args)
+
+    def _array_rank(self, expr: Optional[ast.expr],
+                    env: Dict[str, ast.expr]) -> Optional[int]:
+        if isinstance(expr, ast.Name) and expr.id in env:
+            expr = env[expr.id]
+        if isinstance(expr, ast.Call) and _call_name(expr) in _ARRAY_CTORS \
+                and expr.args:
+            shape = expr.args[0]
+            if isinstance(shape, (ast.Tuple, ast.List)) and \
+                    not any(isinstance(e, ast.Starred) for e in shape.elts):
+                return len(shape.elts)
+        return None
+
+    def _check_spec_ranks(self, fm: FileModel):
+        """spec rank vs array ndim where both are derivable: a call that
+        takes an array (or known-shape ctor) alongside a literal
+        PartitionSpec (with_sharding_constraint/device_put/NamedSharding
+        pairings)."""
+        pnames = _pspec_names(fm)
+        for fn in [fm.tree, *[n for n in ast.walk(fm.tree)
+                              if isinstance(n, ast.FunctionDef)]]:
+            env = _fn_locals(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call) or not node.args:
+                    continue
+                specs = [sub for a in node.args for sub in ast.walk(a)
+                         if isinstance(sub, ast.Call)
+                         and _is_pspec_call(sub, fm, pnames)]
+                if not specs:
+                    continue
+                rank = self._array_rank(node.args[0], env)
+                if rank is None:
+                    continue
+                for spec in specs:
+                    srank = self._spec_rank(spec)
+                    if srank is not None and srank > rank:
+                        self._finding(
+                            fm, "sc-spec-rank", spec.lineno,
+                            f"PartitionSpec has {srank} entries for a "
+                            f"rank-{rank} array — jit/with_sharding_"
+                            f"constraint rejects specs longer than ndim")
+
+    # --------------------------------------------------------- FSDP archs --
+    def _check_fsdp_archs(self):
+        if not self.arch_names:
+            return
+        for fm, line, entries in harvest_set_literal(self.models,
+                                                     "FSDP_ARCHS"):
+            for e in sorted(entries - self.arch_names):
+                self._finding(
+                    fm, "sc-fsdp-unknown-arch", line,
+                    f"FSDP_ARCHS entry '{e}' matches no known config "
+                    f"(ARCHS/EXTRA_ARCHS/_ALIASES) — the ZeRO-3 rule is "
+                    f"dead for it")
+
+    # ------------------------------------------------------ logical axes ---
+    def _check_constrain(self, fm: FileModel):
+        if not self.logical_axes:
+            return
+        for node in ast.walk(fm.tree):
+            if not (isinstance(node, ast.Call)
+                    and _call_name(node) == "constrain"):
+                continue
+            for a in node.args[1:]:
+                if isinstance(a, ast.Constant) and isinstance(a.value, str) \
+                        and a.value not in self.logical_axes:
+                    self._finding(
+                        fm, "sc-unknown-logical-axis", a.lineno,
+                        f"constrain() names logical axis '{a.value}' which "
+                        f"is not in pshard.KNOWN_LOGICAL_AXES — no rule "
+                        f"will ever map it (silent no-op)")
+
+    # ------------------------------------------------------ dtype policy ---
+    def _check_dtype_policy(self, fm: FileModel):
+        in_kernels_dir = "/kernels/" in fm.path.replace("\\", "/")
+        for node in ast.walk(fm.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if not (in_kernels_dir or _is_jitted(node, fm)):
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Attribute) and \
+                        sub.attr == "float64":
+                    self._finding(
+                        fm, "sc-f64-literal", sub.lineno,
+                        "float64 in jitted/kernel code — x64 is disabled, "
+                        "so this silently downcasts (or retraces under "
+                        "jax_enable_x64); keep device code f32/bf16")
+                elif isinstance(sub, ast.Constant) and \
+                        sub.value == "float64":
+                    self._finding(
+                        fm, "sc-f64-literal", sub.lineno,
+                        "dtype='float64' in jitted/kernel code — x64 is "
+                        "disabled; keep device code f32/bf16")
+        self._check_bf16_accum(fm)
+
+    def _is_bf16_dtype(self, expr: Optional[ast.expr]) -> bool:
+        if isinstance(expr, ast.Attribute) and expr.attr == "bfloat16":
+            return True
+        return isinstance(expr, ast.Constant) and expr.value == "bfloat16"
+
+    def _check_bf16_accum(self, fm: FileModel):
+        for fn in [n for n in ast.walk(fm.tree)
+                   if isinstance(n, ast.FunctionDef)]:
+            bf16_accs: Dict[str, int] = {}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and isinstance(node.value, ast.Call) \
+                        and _call_name(node.value) in ("zeros", "empty",
+                                                       "full"):
+                    dtype = next((k.value for k in node.value.keywords
+                                  if k.arg == "dtype"), None)
+                    if dtype is None and len(node.value.args) > 1:
+                        dtype = node.value.args[-1]
+                    if self._is_bf16_dtype(dtype):
+                        bf16_accs[node.targets[0].id] = node.lineno
+            if not bf16_accs:
+                continue
+            for node in ast.walk(fn):
+                name = None
+                if isinstance(node, ast.AugAssign) and \
+                        isinstance(node.op, ast.Add) and \
+                        isinstance(node.target, ast.Name):
+                    name = node.target.id
+                elif isinstance(node, ast.Assign) and \
+                        len(node.targets) == 1 and \
+                        isinstance(node.targets[0], ast.Name) and \
+                        isinstance(node.value, ast.BinOp) and \
+                        isinstance(node.value.op, ast.Add):
+                    t = node.targets[0].id
+                    if any(isinstance(s, ast.Name) and s.id == t
+                           for s in ast.walk(node.value)):
+                        name = t
+                if name in bf16_accs:
+                    self._finding(
+                        fm, "sc-bf16-accum", bf16_accs.pop(name),
+                        f"accumulator `{name}` is created in bf16 and "
+                        f"accumulated into — bf16 has ~8 mantissa bits; "
+                        f"accumulate in f32 and cast once at the end")
+
+
+def check_sharding(models: Dict[str, FileModel]) -> List[Finding]:
+    return ShardCheck(models).run()

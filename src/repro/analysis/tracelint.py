@@ -72,11 +72,13 @@ class TraceSafetyPass:
 
     def _finding(self, fm: FileModel, rule: str, line: int, msg: str,
                  stmt_line: Optional[int] = None):
-        lines = [line] + ([stmt_line] if stmt_line else [])
-        reason = fm.retrace_ok(*lines)
+        lines = [line, *([stmt_line] if stmt_line else [])]
+        got = fm.suppression("retrace-ok", *lines)
+        reason, sline = got if got else (None, None)
         self.findings.append(Finding(
             rule=rule, path=fm.path, line=line, message=msg,
-            suppressed=reason is not None, reason=reason or None))
+            suppressed=reason is not None, reason=reason or None,
+            suppress_line=sline))
 
     # ------------------------------------------------ jitted-fn discovery --
     def _collect_jitted(self, fm: FileModel) -> List[JittedFn]:

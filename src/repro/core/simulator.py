@@ -805,7 +805,8 @@ class SyncSim(_Engine):
         return np.atleast_2d(self.cm.moe_device_latency(loads, hits, tokens))
 
     def _sync_comm_latency(self, tokens: int,
-                           hot_factor: np.ndarray = None) -> np.ndarray:
+                           hot_factor: Optional[np.ndarray] = None
+                           ) -> np.ndarray:
         """Blocking all-to-all dispatch+combine over all chips: rendezvous
         (log-depth handshake) + transfer at derated effective bandwidth
         (no compute overlap inside a blocking collective). The transfer term

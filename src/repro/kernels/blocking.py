@@ -1,0 +1,30 @@
+"""Block-size selection shared by the Pallas kernels.
+
+A plain ``min(block, dim)`` clamp is the classic silent-misindexing hazard:
+for non-power-of-two dims (dim=192, block=128 -> 128) the clamped block does
+NOT divide the dim, and a grid of ``dim // block`` either drops the tail rows
+or trips an opaque assert deep in the launch path.  Every kernel here rounds
+its block sizes through `floor_to_divisor` instead — the largest block
+``<= requested`` that divides the dim exactly — so any dim launches correctly
+and the kernelcheck static pass (`python -m repro.analysis`) can verify the
+discipline (`kc-min-clamp`).
+"""
+from __future__ import annotations
+
+
+def floor_to_divisor(dim: int, block: int, *, what: str = "dim") -> int:
+    """Largest block size ``<= block`` that divides ``dim`` exactly.
+
+    Prefers MXU-friendly sizes: walks down from ``min(block, dim)`` and the
+    result is always >= 1 (1 divides everything), so callers never need a
+    fallback path.  Raises with a clear message on degenerate inputs instead
+    of letting a 0-size block misindex the grid.
+    """
+    if dim <= 0 or block <= 0:
+        raise ValueError(
+            f"floor_to_divisor({what}): dim={dim} and block={block} must be "
+            f"positive — a zero/negative block would misindex the grid")
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocking import floor_to_divisor
 from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
 
 NEG_INF = -1e30
@@ -84,8 +85,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_k: int = 128, interpret: bool = True) -> jax.Array:
     """q, k, v: [BH, S, dh] (kv already head-expanded). Returns [BH, S, dh]."""
     BH, S, dh = q.shape
-    bq, bk = min(block_q, S), min(block_k, S)
-    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    # round DOWN to a divisor (never min-clamp): S=192 with block 128 must
+    # pick 96, not a non-dividing 128 that misindexes the (nq, nk) grid
+    bq = floor_to_divisor(S, block_q, what="flash_attention S/bq")
+    bk = floor_to_divisor(S, block_k, what="flash_attention S/bk")
     nq, nk = S // bq, S // bk
     sm_scale = 1.0 / math.sqrt(dh)
     kern = functools.partial(_kernel, sm_scale=sm_scale, block_q=bq,

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocking import floor_to_divisor
 from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
 
 
@@ -57,9 +58,12 @@ def super_gmm(layer_id: jax.Array, w: jax.Array, x: jax.Array, *,
     L, E, K, N = w.shape
     Ex, C, Kx = x.shape
     assert Ex == E and Kx == K, (x.shape, w.shape)
-    bc, bn, bk = min(block_c, C), min(block_n, N), min(block_k, K)
-    assert C % bc == 0 and N % bn == 0 and K % bk == 0, \
-        f"dims {(C, N, K)} not divisible by blocks {(bc, bn, bk)}"
+    # round DOWN to a divisor (never min-clamp): a clamped block that does
+    # not divide the dim silently misindexes the (C//bc, N//bn, K//bk) grid
+    # for non-power-of-two dims
+    bc = floor_to_divisor(C, block_c, what="super_gmm C")
+    bn = floor_to_divisor(N, block_n, what="super_gmm N")
+    bk = floor_to_divisor(K, block_k, what="super_gmm K")
     grid = (E, C // bc, N // bn, K // bk)
     return pl.pallas_call(
         _kernel,

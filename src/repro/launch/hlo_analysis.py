@@ -29,7 +29,13 @@ from typing import Dict, List, Optional, Tuple
 
 DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
                "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8,
-               "pred": 1, "c64": 8, "c128": 16, "u4": 1, "s4": 1}
+               "pred": 1, "c64": 8, "c128": 16, "u4": 1, "s4": 1,
+               "u2": 1, "s2": 1, "f4e2m1fn": 1,
+               # fp8 families (XLA spells both the OCP and the fnuz variants)
+               "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnz": 1,
+               "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+               # zero-size sentinel types that carry no payload bytes
+               "token": 0, "opaque": 0}
 
 # bytes moved per device relative to result bytes (ring algorithms)
 COLLECTIVE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0,
@@ -59,7 +65,12 @@ def _shape_bytes(type_str: str) -> int:
     for m in _SHAPE.finditer(type_str):
         dt, dims = m.group(1), m.group(2)
         if dt not in DTYPE_BYTES:
-            continue
+            # a silent skip here used to zero out every op of an unlisted
+            # dtype — the analyzer would quietly under-count instead of
+            # telling us the table needs a new entry
+            raise ValueError(
+                f"hlo_analysis: unknown HLO dtype '{dt}' in shape "
+                f"'{type_str}' — add it to DTYPE_BYTES (bytes per element)")
         n = 1
         for d in dims.split(","):
             if d:

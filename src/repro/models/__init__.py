@@ -1,1 +1,1 @@
-from repro.models.common import ModelConfig  # noqa: F401
+from repro.models.common import ModelConfig

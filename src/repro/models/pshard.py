@@ -20,9 +20,23 @@ from jax.sharding import PartitionSpec as P
 
 _RULES: Dict[str, Any] = {}
 
+#: every logical axis name the model code may pass to `constrain` — the
+#: universe shardcheck (sc-unknown-logical-axis) validates call sites
+#: against, and set_rules validates rule keys against.  A name outside this
+#: set would be a silent no-op: no constrain site could ever consume it.
+KNOWN_LOGICAL_AXES = frozenset({
+    "batch", "heads", "experts", "moe_group", "moe_rows", "moe_tokens",
+})
+
 
 def set_rules(**rules):
     global _RULES
+    unknown = sorted(set(rules) - KNOWN_LOGICAL_AXES)
+    if unknown:
+        raise ValueError(
+            f"pshard.set_rules: unknown logical axis name(s) {unknown} — "
+            f"known axes are {sorted(KNOWN_LOGICAL_AXES)}; a rule for an "
+            f"unknown name would silently never apply")
     _RULES = dict(rules)
 
 

@@ -6,7 +6,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
+import jax
 
 jax.config.update("jax_enable_x64", False)
 
@@ -16,9 +16,9 @@ jax.config.update("jax_enable_x64", False)
 # the offending call, and anything recorded in a worker thread (surfaced via
 # the executor's panic path) is re-checked after each test.
 if os.environ.get("ASAP_LOCKDEP") == "1":
-    import pytest  # noqa: E402
+    import pytest
 
-    from repro.analysis import lockdep  # noqa: E402
+    from repro.analysis import lockdep
 
     @pytest.fixture(autouse=True)
     def _asap_lockdep():

@@ -1,0 +1,112 @@
+"""Seeded kernelcheck violations — every kc-* rule fires at least once.
+
+NOT importable as real jax code; the static pass only parses it.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bad_kernel(layer_ref, x_ref, w_ref, o_ref):
+    # kc-accum-init: += with no pl.when(... == 0) zero-init of o_ref
+    # kc-dot-preferred-type: dot without preferred_element_type
+    acc = jnp.dot(x_ref[0], w_ref[0])
+    o_ref[0] += acc
+
+
+def bad_gmm(layer_id, w, x):
+    E, C, K, N = 4, 192, 256, 256
+    # kc-min-clamp: bare min() clamps feeding the grid/block shapes
+    bc = min(128, C)
+    bn, bk = min(128, N), min(128, K)
+    grid = (E, C // bc, N // bn, K // bk)
+    return pl.pallas_call(
+        _bad_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # kc-index-map-arity: 4 args for grid rank 4 + 1 prefetch
+                pl.BlockSpec((1, bc, bk), lambda e, ci, ni, ki: (e, ci, ki)),
+                # kc-block-rank: rank-4 block, 3-coordinate index_map
+                pl.BlockSpec((1, 1, bk, bn),
+                             lambda e, ci, ni, ki, layer: (e, ki, ni)),
+            ],
+            out_specs=pl.BlockSpec((1, bc, bn),
+                                   lambda e, ci, ni, ki, layer: (e, ci, ni)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), jnp.float32),
+    )(layer_id, x, w)
+
+
+def _dead_prefetch_kernel(slot_ref, y_ref, o_ref):
+    del slot_ref
+    o_ref[...] = y_ref[...]
+
+
+def bad_gather(slot, yb):
+    N, d = 64, 128
+    return pl.pallas_call(
+        _dead_prefetch_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            # kc-unused-scalar-prefetch: slot is deleted by the kernel and
+            # no index_map consumes its lambda parameter either
+            num_scalar_prefetch=1,
+            grid=(N,),
+            in_specs=[pl.BlockSpec((1, d), lambda i, slot: (i, 0))],
+            out_specs=pl.BlockSpec((1, d), lambda i, slot: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, d), yb.dtype),
+    )(slot, yb)
+
+
+def _bf16_dot_kernel(x_ref, w_ref, o_ref):
+    # kc-dot-preferred-type (wrong value): accumulating in bf16
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.bfloat16)
+
+
+def bad_rank(x, w):
+    M, N = 128, 128
+    return pl.pallas_call(
+        _bf16_dot_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((M, N), lambda i: (0, 0)),
+                  pl.BlockSpec((M, N), lambda i: (0, 0))],
+        # kc-block-rank: rank-2 out block for a rank-3 out_shape
+        out_specs=pl.BlockSpec((M, N), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, M, N), jnp.float32),
+    )(x, w)
+
+
+def _suppressed_kernel(x_ref, o_ref):
+    # kernel-ok: gauge kernel — first-step garbage is overwritten below
+    o_ref[...] += x_ref[...]
+
+
+def suppressed_accum(x):
+    return pl.pallas_call(
+        _suppressed_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+    )(x)
+
+
+def _noreason_kernel(x_ref, o_ref):
+    # kernel-ok:
+    o_ref[...] += x_ref[...]
+
+
+def noreason_accum(x):
+    return pl.pallas_call(
+        _noreason_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+    )(x)

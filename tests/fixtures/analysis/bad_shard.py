@@ -1,0 +1,60 @@
+"""Seeded shardcheck violations — every sc-* rule fires at least once.
+
+NOT importable as real jax code; the static pass only parses it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# the declared universes this file is checked against
+ARCHS = ["toy_arch"]
+FSDP_ARCHS = {"toy_arch", "ghost-arch-9000"}  # sc-fsdp-unknown-arch
+
+KNOWN_LOGICAL_AXES = frozenset({"batch", "heads"})
+
+
+def make_toy_mesh():
+    return jax.make_mesh((2, 2), ("data", "model"))
+
+
+def bad_specs(x):
+    # sc-unknown-mesh-axis: "modle" is a typo for "model"
+    a = jax.lax.with_sharding_constraint(x, P("data", "modle"))
+    # sc-duplicate-mesh-axis
+    b = jax.lax.with_sharding_constraint(x, P("data", "data"))
+    return a, b
+
+
+def bad_rank():
+    # sc-spec-rank: 3 spec entries for a rank-2 array
+    return jax.device_put(jnp.zeros((4, 8)),
+                          P("data", "model", None))
+
+
+def bad_logical(x):
+    # sc-unknown-logical-axis: "heds" is a typo for "heads"
+    return constrain(x, "heds", None)
+
+
+def constrain(x, *names):
+    return x
+
+
+@jax.jit
+def bad_f64(x):
+    # sc-f64-literal: f64 inside jitted code
+    return x.astype(jnp.float64)
+
+
+def bad_accum(parts):
+    # sc-bf16-accum: bf16 accumulator fed by +=
+    acc = jnp.zeros((128,), dtype=jnp.bfloat16)
+    for p in parts:
+        acc += p
+    return acc
+
+
+def suppressed_spec(x):
+    # shard-ok: deliberate host-only spec exercised by the mesh-compat test
+    return jax.lax.with_sharding_constraint(x, P("rows"))

@@ -1,0 +1,79 @@
+"""Clean pallas_call idiom — kernelcheck must report nothing here."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.blocking import floor_to_divisor
+
+
+def _kernel(layer_ref, x_ref, w_ref, o_ref):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] += jnp.dot(x_ref[0], w_ref[0, 0],
+                        preferred_element_type=jnp.float32)
+
+
+def good_gmm(layer_id, w, x):
+    E, C, K, N = 4, 192, 256, 256
+    bc = floor_to_divisor(C, 128, what="C")
+    bn = floor_to_divisor(N, 128, what="N")
+    bk = floor_to_divisor(K, 128, what="K")
+    grid = (E, C // bc, N // bn, K // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bc, bk),
+                             lambda e, ci, ni, ki, layer: (e, ci, ki)),
+                pl.BlockSpec((1, 1, bk, bn),
+                             lambda e, ci, ni, ki, layer:
+                             (layer[0], e, ki, ni)),
+            ],
+            out_specs=pl.BlockSpec((1, bc, bn),
+                                   lambda e, ci, ni, ki, layer: (e, ci, ni)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), jnp.float32),
+    )(layer_id, x, w)
+
+
+def _copy_kernel(slot_ref, y_ref, o_ref):
+    del slot_ref  # consumed by the index_map, not the body
+    o_ref[...] = y_ref[...]
+
+
+def good_gather(slot, yb):
+    N, d = 64, 128
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(N,),
+            in_specs=[pl.BlockSpec((1, d), lambda i, slot: (slot[i], 0))],
+            out_specs=pl.BlockSpec((1, d), lambda i, slot: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, d), yb.dtype),
+    )(slot, yb)
+
+
+def _partial_kernel(x_ref, o_ref, *, scale):
+    o_ref[...] = x_ref[...] * scale
+
+
+def good_partial(x):
+    kern = functools.partial(_partial_kernel, scale=2.0)
+    return pl.pallas_call(
+        kern,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+    )(x)

@@ -1,0 +1,45 @@
+"""Clean sharding idiom — shardcheck must report nothing here."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+ARCHS = ["toy_arch"]
+FSDP_ARCHS = {"toy_arch"}
+
+KNOWN_LOGICAL_AXES = frozenset({"batch", "heads"})
+
+
+def make_toy_mesh(multi_pod: bool = False):
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    return jax.make_mesh(shape, axes)
+
+
+def good_specs(x):
+    a = jax.lax.with_sharding_constraint(x, P("data", "model"))
+    b = jax.lax.with_sharding_constraint(x, P(("pod", "data"), None))
+    return a, b
+
+
+def good_rank():
+    return jax.device_put(jnp.zeros((4, 8)), P("data", "model"))
+
+
+def good_logical(x):
+    return constrain(x, "batch", None, "heads", None)
+
+
+def constrain(x, *names):
+    return x
+
+
+@jax.jit
+def good_f32(x):
+    return x.astype(jnp.float32)
+
+
+def good_accum(parts):
+    acc = jnp.zeros((128,), dtype=jnp.float32)
+    for p in parts:
+        acc += p
+    return acc.astype(jnp.bfloat16)

@@ -1,0 +1,7 @@
+"""A suppression comment with nothing left to suppress — only
+`--strict-suppressions` flags it (rule: stale-suppression)."""
+
+
+def tidy_function(x):
+    # race-ok: this hazard was fixed long ago; the comment rotted in place
+    return x + 1

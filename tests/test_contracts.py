@@ -1,0 +1,114 @@
+"""HLO cost contracts (ISSUE 7): the tolerance-band diff catches synthetic
+FLOP/byte inflation against a perturbed golden, the checked-in goldens are
+well-formed, and a fresh compile of every pinned cell still matches them
+(subprocess: the forced-device XLA flag must precede the jax import, and
+conftest deliberately keeps this process single-device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis.contracts import (CONTRACTS, METRICS, RTOL, diff_metrics,
+                                      load_golden)
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# diff_metrics — the gate logic, pure
+# ---------------------------------------------------------------------------
+
+
+GOLD = {"dot_flops": 1e9, "collective_bytes": 2e7, "memory_bytes": 5e9}
+
+
+def test_within_band_passes():
+    measured = {k: v * 1.01 for k, v in GOLD.items()}
+    assert diff_metrics(GOLD, measured) == []
+
+
+def test_inflation_fails():
+    measured = dict(GOLD, collective_bytes=GOLD["collective_bytes"] * 1.5)
+    v = diff_metrics(GOLD, measured)
+    assert len(v) == 1 and v[0]["metric"] == "collective_bytes"
+    assert v[0]["why"] == "inflated" and v[0]["rel"] > 0.4
+
+
+def test_deflation_fails_too():
+    # a drop means the golden is stale — re-baseline deliberately
+    measured = dict(GOLD, dot_flops=GOLD["dot_flops"] * 0.5)
+    v = diff_metrics(GOLD, measured)
+    assert len(v) == 1 and v[0]["why"] == "deflated"
+
+
+def test_missing_metric_fails():
+    measured = {k: v for k, v in GOLD.items() if k != "memory_bytes"}
+    v = diff_metrics(GOLD, measured)
+    assert len(v) == 1 and v[0]["why"] == "metric missing"
+
+
+def test_perturbed_checked_in_golden_fails():
+    """The pinned synthetic-inflation case: take a REAL golden, inflate each
+    metric past the band, and assert the gate trips on exactly that metric."""
+    golden = load_golden("moe_train")
+    assert golden is not None, "run `python -m repro.analysis --update-contracts`"
+    for metric in METRICS:
+        bad = dict(golden["metrics"])
+        bad[metric] = bad[metric] * (1 + 2 * RTOL)
+        v = diff_metrics(golden["metrics"], bad)
+        assert [x["metric"] for x in v] == [metric]
+
+
+# ---------------------------------------------------------------------------
+# goldens — well-formed and complete
+# ---------------------------------------------------------------------------
+
+
+def test_goldens_checked_in_and_wellformed():
+    for spec in CONTRACTS:
+        golden = load_golden(spec.name)
+        assert golden is not None, spec.name
+        assert golden["arch"] == spec.arch and golden["kind"] == spec.kind
+        for metric in METRICS:
+            assert golden["metrics"][metric] > 0, (spec.name, metric)
+    # the MoE cells must actually exercise the network, or the contract
+    # could never catch a communication-volume regression
+    moe = load_golden("moe_train")
+    assert moe["metrics"]["collective_bytes"] > 1e6
+
+
+# ---------------------------------------------------------------------------
+# fresh dryrun matches the goldens (one compile pass, own process)
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_compile_matches_goldens():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        from repro.analysis import contracts as C
+
+        mesh = C._make_mesh()
+        for spec in C.CONTRACTS:
+            golden = C.load_golden(spec.name)
+            assert golden is not None, spec.name
+            measured = C.measure(spec, mesh)
+            v = C.diff_metrics(golden["metrics"], measured,
+                               rtol=golden.get("rtol", C.RTOL))
+            assert not v, (spec.name, v)
+            # and a synthetically inflated golden must trip on the SAME
+            # fresh measurement (end-to-end pin of the CI failure mode)
+            bad = {k: x * 1.5 for k, x in golden["metrics"].items()}
+            v = C.diff_metrics(bad, measured)
+            assert len(v) == len(C.METRICS), (spec.name, v)
+            print(spec.name, "ok")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    for spec in CONTRACTS:
+        assert f"{spec.name} ok" in proc.stdout

@@ -66,3 +66,37 @@ def test_breakdown_lists_top_dots():
     txt = jax.jit(_scan_fn(4)).lower(X, W).compile().as_text()
     c = analyze(txt, breakdown=True)
     assert c.top_dots and c.top_dots[0][0] == 4 * MM_FLOPS
+
+
+# ---------------------------------------------------------------------------
+# dtype table (ISSUE 7): f8 variants priced, unknown dtypes loud
+# ---------------------------------------------------------------------------
+
+
+def _toy_hlo(dtype):
+    return "\n".join([
+        f"ENTRY %main (p0: {dtype}[16,8]) -> {dtype}[16,8] {{",
+        f"  %p0 = {dtype}[16,8] parameter(0)",
+        f"  ROOT %ag = {dtype}[16,8] all-gather(%p0), dimensions={{0}}",
+        "}",
+    ])
+
+
+def test_f8_collectives_priced_at_one_byte():
+    from repro.launch.hlo_analysis import DTYPE_BYTES, _shape_bytes
+    for dt in ("f8e4m3", "f8e5m2", "f8e4m3fn", "f8e5m2fnuz"):
+        assert DTYPE_BYTES[dt] == 1
+        assert _shape_bytes(f"{dt}[16,8]") == 128
+        assert analyze(_toy_hlo(dt)).collective_bytes == 128.0
+    # zero-payload sentinel types must not trip the unknown-dtype error
+    assert _shape_bytes("token[]") == 0
+
+
+def test_unknown_dtype_is_a_loud_error():
+    import pytest
+
+    from repro.launch.hlo_analysis import _shape_bytes
+    with pytest.raises(ValueError, match="unknown HLO dtype 'q7'"):
+        _shape_bytes("q7[16,8]")
+    with pytest.raises(ValueError, match="DTYPE_BYTES"):
+        analyze(_toy_hlo("q7"))

@@ -1,0 +1,166 @@
+"""kernelcheck + shardcheck (ISSUE 7): every rule catches its seeded fixture
+violation, the good fixtures and the repo's own src/ stay clean, and
+stale-suppression detection only fires under --strict-suppressions."""
+import os
+
+import pytest
+
+from repro.analysis import run_static
+
+HERE = os.path.dirname(__file__)
+FIX = os.path.join(HERE, "fixtures", "analysis")
+SRC = os.path.join(HERE, "..", "src", "repro")
+
+
+def rule_set(result):
+    return {f.rule for f in result.unsuppressed}
+
+
+# ---------------------------------------------------------------------------
+# kernelcheck — each rule catches a seeded violation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bad_kernels():
+    return run_static([os.path.join(FIX, "bad_kernels.py")])
+
+
+def test_catches_index_map_arity(bad_kernels):
+    hits = bad_kernels.by_rule("kc-index-map-arity")
+    assert hits and any("grid rank 4" in f.message for f in hits)
+
+
+def test_catches_block_rank(bad_kernels):
+    hits = bad_kernels.by_rule("kc-block-rank")
+    # both flavors: index_map return vs block shape, out_specs vs out_shape
+    assert any("coordinate" in f.message for f in hits)
+    assert any("out_shape" in f.message for f in hits)
+
+
+def test_catches_min_clamp(bad_kernels):
+    hits = bad_kernels.by_rule("kc-min-clamp")
+    # bc, bn, bk: the plain and the tuple-assignment form
+    assert {m for f in hits for m in ("bc", "bn", "bk") if f"`{m}`"
+            in f.message} == {"bc", "bn", "bk"}
+    assert all("floor_to_divisor" in f.message for f in hits)
+
+
+def test_catches_missing_accum_init(bad_kernels):
+    hits = [f for f in bad_kernels.unsuppressed
+            if f.rule == "kc-accum-init"]
+    assert hits and any("o_ref" in f.message for f in hits)
+
+
+def test_catches_dot_without_preferred_type(bad_kernels):
+    hits = bad_kernels.by_rule("kc-dot-preferred-type")
+    # both flavors: kwarg missing entirely, and set to a non-f32 dtype
+    assert any("without preferred_element_type" in f.message for f in hits)
+    assert any("must accumulate in f32" in f.message for f in hits)
+
+
+def test_catches_unused_scalar_prefetch(bad_kernels):
+    hits = bad_kernels.by_rule("kc-unused-scalar-prefetch")
+    assert hits and any("slot_ref" in f.message for f in hits)
+
+
+def test_kernel_ok_suppression_and_empty_reason(bad_kernels):
+    sup = [f for f in bad_kernels.suppressed if f.rule == "kc-accum-init"]
+    assert sup and sup[0].reason.startswith("gauge kernel")
+    assert sup[0].suppress_line is not None
+    assert bad_kernels.by_rule("kernel-ok-no-reason")
+
+
+def test_good_kernels_clean():
+    res = run_static([os.path.join(FIX, "good_kernels.py")])
+    assert res.unsuppressed == []
+
+
+# ---------------------------------------------------------------------------
+# shardcheck — each rule catches a seeded violation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bad_shard():
+    return run_static([os.path.join(FIX, "bad_shard.py")])
+
+
+def test_catches_unknown_mesh_axis(bad_shard):
+    hits = bad_shard.by_rule("sc-unknown-mesh-axis")
+    assert any("'modle'" in f.message for f in hits if not f.suppressed)
+
+
+def test_catches_duplicate_mesh_axis(bad_shard):
+    hits = bad_shard.by_rule("sc-duplicate-mesh-axis")
+    assert hits and "'data'" in hits[0].message
+
+
+def test_catches_spec_rank(bad_shard):
+    hits = bad_shard.by_rule("sc-spec-rank")
+    assert hits and "3 entries for a rank-2 array" in hits[0].message
+
+
+def test_catches_fsdp_unknown_arch(bad_shard):
+    hits = bad_shard.by_rule("sc-fsdp-unknown-arch")
+    assert hits and "'ghost-arch-9000'" in hits[0].message
+
+
+def test_catches_unknown_logical_axis(bad_shard):
+    hits = bad_shard.by_rule("sc-unknown-logical-axis")
+    assert hits and "'heds'" in hits[0].message
+
+
+def test_catches_f64_in_jitted_code(bad_shard):
+    assert bad_shard.by_rule("sc-f64-literal")
+
+
+def test_catches_bf16_accumulator(bad_shard):
+    hits = bad_shard.by_rule("sc-bf16-accum")
+    assert hits and "`acc`" in hits[0].message
+
+
+def test_shard_ok_suppression(bad_shard):
+    sup = [f for f in bad_shard.suppressed
+           if f.rule == "sc-unknown-mesh-axis"]
+    assert sup and "'rows'" in sup[0].message
+    assert sup[0].reason.startswith("deliberate host-only spec")
+
+
+def test_good_shard_clean():
+    res = run_static([os.path.join(FIX, "good_shard.py")])
+    assert res.unsuppressed == []
+
+
+# ---------------------------------------------------------------------------
+# stale-suppression detection (--strict-suppressions)
+# ---------------------------------------------------------------------------
+
+
+def test_stale_suppression_flagged_only_in_strict_mode():
+    path = os.path.join(FIX, "stale_suppress.py")
+    assert run_static([path]).unsuppressed == []
+    strict = run_static([path], strict_suppressions=True)
+    hits = strict.by_rule("stale-suppression")
+    assert len(hits) == 1 and "race-ok" in hits[0].message
+
+
+def test_used_suppressions_not_stale():
+    """bad_kernels' kernel-ok suppression IS consumed — strict mode must
+    not flag it (only the empty-reason one is dead by construction)."""
+    strict = run_static([os.path.join(FIX, "bad_kernels.py")],
+                        strict_suppressions=True)
+    stale = strict.by_rule("stale-suppression")
+    assert all("gauge kernel" not in f.message for f in stale)
+
+
+# ---------------------------------------------------------------------------
+# the repo itself stays clean (with suppressions justified)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_src_clean_strict():
+    res = run_static([SRC], strict_suppressions=True)
+    assert res.unsuppressed == [], \
+        "\n".join(f.format() for f in res.unsuppressed)
+    assert all(f.reason for f in res.suppressed)

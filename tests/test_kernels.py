@@ -37,6 +37,33 @@ def test_super_gmm_sweep(L, E, C, K, N, dtype):
                                    atol=tol)
 
 
+@pytest.mark.parametrize("L,E,C,K,N", [(2, 2, 192, 160, 192),
+                                       (1, 3, 24, 48, 96)])
+def test_super_gmm_non_power_of_two_dims(L, E, C, K, N):
+    """dims that a bare min(block, dim) clamp would misindex (192 vs 128):
+    the divisor rounding must pick a dividing block and stay correct."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    w = jax.random.normal(ks[0], (L, E, K, N))
+    x = jax.random.normal(ks[1], (E, C, K))
+    out = super_gmm(jnp.array([L - 1], jnp.int32), w, x,
+                    block_c=128, block_n=128, block_k=128)
+    ref = super_gmm_ref(jnp.array(L - 1), w, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_floor_to_divisor():
+    from repro.kernels.blocking import floor_to_divisor
+    assert floor_to_divisor(192, 128) == 96
+    assert floor_to_divisor(256, 128) == 128
+    assert floor_to_divisor(100, 128) == 100  # block >= dim -> whole dim
+    assert floor_to_divisor(97, 64) == 1      # prime dim still launches
+    with pytest.raises(ValueError, match="must be positive"):
+        floor_to_divisor(0, 128)
+    with pytest.raises(ValueError, match="must be positive"):
+        floor_to_divisor(128, -1)
+
+
 def test_super_gmm_layer_is_runtime_data():
     """One jit trace serves every layer id (the layer-oblivious property)."""
     L, E, C, K, N = 4, 2, 16, 16, 16
@@ -164,6 +191,17 @@ def test_flash_attention_sweep(BH, S, dh, bq, bk, dtype):
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_non_power_of_two_seq():
+    """S=192 with the default 128 blocks: min-clamp would misindex; the
+    divisor rounding (96) must match the oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q, k, v = (jax.random.normal(kk, (2, 192, 32)) for kk in ks)
+    out = flash_attention(q, k, v, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
 
 
 @pytest.mark.parametrize("window,softcap", [(64, None), (None, 30.0),

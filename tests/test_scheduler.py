@@ -88,7 +88,7 @@ def test_chunking_covers_requests_exactly(seed):
 def test_pair_batches_pairs_non_exclusive():
     batches = [Batch(requests=_reqs([100])) for _ in range(4)]
     excl = Batch(requests=_reqs([20_000]), exclusive=True)
-    pairs = pair_batches(batches[:2] + [excl] + batches[2:])
+    pairs = pair_batches([*batches[:2], excl, *batches[2:]])
     assert (excl, None) in pairs
     non_excl_pairs = [p for p in pairs if p[0] is not excl]
     assert all(p[1] is not None for p in non_excl_pairs)

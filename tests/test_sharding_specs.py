@@ -1,19 +1,26 @@
 """Sharding-rule structural validity: specs match trees, dims are divisible,
 and a sharded train step lowers on a host mesh."""
+from typing import ClassVar, Dict, Tuple
+
 import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCHS, get_config
+from repro.configs import ARCHS, EXTRA_ARCHS, get_config
 from repro.launch import sharding as SH
 from repro.launch.mesh import jit_shardings, make_host_mesh, mesh_context
 from repro.models.api import build_api
 
 
 class _FakeMesh:
-    axis_names = ("data", "model")
-    shape = {"data": 16, "model": 16}
+    axis_names: ClassVar[Tuple[str, ...]] = ("data", "model")
+    shape: ClassVar[Dict[str, int]] = {"data": 16, "model": 16}
+
+
+class _FakePodMesh:
+    axis_names: ClassVar[Tuple[str, ...]] = ("pod", "data", "model")
+    shape: ClassVar[Dict[str, int]] = {"pod": 2, "data": 8, "model": 16}
 
 
 @pytest.mark.parametrize("arch", ARCHS)
@@ -77,6 +84,26 @@ def test_sharded_train_step_lowers_on_host_mesh():
             mesh, (sspecs, bspecs))).lower(
             state_sds, batch_sds)
         assert lowered is not None
+
+
+@pytest.mark.parametrize("mesh_cls", [_FakeMesh, _FakePodMesh])
+@pytest.mark.parametrize("arch", ARCHS + EXTRA_ARCHS)
+def test_all_arch_specs_use_declared_mesh_axes(arch, mesh_cls):
+    """The sharding-table sweep (ISSUE 7): every arch's param specs must
+    only name axes the mesh declares, on both mesh flavors — the runtime
+    mirror of shardcheck's sc-unknown-mesh-axis rule."""
+    cfg = get_config(arch)
+    api = build_api(cfg)
+    tree = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    specs = SH.param_specs(tree, cfg, mesh_cls())
+    declared = set(mesh_cls.axis_names)
+    for spec in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            assert set(axes) <= declared, (arch, spec, mesh_cls.axis_names)
 
 
 def test_dispatch_groups_divides_tokens():
