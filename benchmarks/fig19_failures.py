@@ -3,6 +3,12 @@
 ASAP's barrier-free pipeline isolates a failed group (its batches restart, the
 other groups keep flowing); a synchronous engine's global barrier stalls the
 whole instance. Quantifies mean TTFT + completion under a mid-run outage.
+
+`--real` (ISSUE 8) adds a REAL-executor panel: the same mid-run MoE-device
+crash driven through a shared FaultPlan, once with the supervised failover
+path (tokens/s and SLO attainment dip, then recover on the surviving
+devices) and once with seed behavior (supervise=False: the crash panics the
+executor and every in-flight request is lost).
 """
 from benchmarks.common import ASAP_DEP, CFG, SYNC_DEP, fmt_table
 from repro.core.simulator import SimConfig, run_sim
@@ -30,6 +36,88 @@ def run(quick: bool = False) -> dict:
     return out
 
 
+def run_real(quick: bool = False) -> dict:
+    """REAL-executor panel (ISSUE 8): a FaultPlan crashes MoE device 1
+    mid-run.  Supervised run fails the device over live (replica-first
+    evacuation, exactly-once re-dispatch); seed-behavior run
+    (supervise=False) panics and loses everything in flight."""
+    # imports are local so `main()` (the sim panel, run by benchmarks/run.py)
+    # never pays for model init / jit
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.engine import ExecutorEngine
+    from repro.core.executor import DisaggregatedExecutor
+    from repro.core.faults import FaultEvent, FaultPlan
+    from repro.core.scheduler import LengthAwareBatcher
+    from repro.core.trace import Request, TraceClock
+    from repro.models.lm import init_lm_params
+
+    n = 10 if quick else 20
+    speed = 50.0  # trace seconds per wall second (TraceClock replay rate)
+    crash_at = 2.0  # trace seconds — early in the run, well before drain
+    plan = FaultPlan(events=(
+        FaultEvent(t=crash_at, kind="crash_moe", device=1),))
+    cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_layers=2, num_experts=8, top_k=2)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+
+    def one(supervise: bool) -> dict:
+        rng = np.random.RandomState(0)
+        reqs = [Request(rid=i, arrival=i * 0.2,
+                        length=int(rng.choice([8, 16, 24, 32])))
+                for i in range(n)]
+        ex = DisaggregatedExecutor(params, cfg, D=2, E=4,
+                                   supervise=supervise, region_timeout=30.0)
+        eng = ExecutorEngine(
+            ex, clock=TraceClock(speed=speed),
+            batcher=LengthAwareBatcher(inflection=48, max_tokens=128,
+                                       exclusive_cutoff=1 << 30,
+                                       max_wait=0.05),
+            fault_plan=plan)
+        eng.submit_all(reqs)
+        try:
+            results = eng.drain(timeout=600)
+        finally:
+            eng.close()
+        st = eng.stats()
+        return dict(
+            supervise=supervise,
+            results=[dict(rid=r.rid, t=r.first_token_time, ttft=r.ttft,
+                          length=r.length, status=r.status,
+                          retries=r.retries) for r in results],
+            statuses=st.statuses or {}, failovers=st.failovers)
+
+    sup = one(True)
+    seed = one(False)
+
+    ok_ttfts = sorted(r["ttft"] for r in sup["results"]
+                      if r["status"] == "ok")
+    slo = 2.0 * ok_ttfts[len(ok_ttfts) // 2] if ok_ttfts else 0.0
+
+    def windows(run_out, t_max, k=6):
+        edges = [t_max * i / k for i in range(k + 1)]
+        out = []
+        for a, b in zip(edges[:-1], edges[1:]):
+            in_w = [r for r in run_out["results"]
+                    if a <= r["t"] < b or (b == t_max and r["t"] == b)]
+            ok = [r for r in in_w if r["status"] == "ok"]
+            toks = sum(r["length"] for r in ok)
+            att = (sum(1 for r in ok if r["ttft"] <= slo) / len(in_w)
+                   if in_w else None)
+            out.append(dict(t0=a, t1=b,
+                            tokens_per_s=toks / max(b - a, 1e-9),
+                            slo_attainment=att, completed=len(in_w)))
+        return out
+
+    t_max = max((r["t"] for run_out in (sup, seed)
+                 for r in run_out["results"]), default=1.0)
+    sup["windows"] = windows(sup, t_max)
+    seed["windows"] = windows(seed, t_max)
+    return dict(supervised=sup, seed=seed, slo=slo, crash_at=crash_at,
+                crashed_device=1, n=n)
+
+
 def main(quick: bool = False):
     r = run(quick)
     print("== Fig 19 (beyond-paper): 5s DP-group outage mid-run ==")
@@ -38,5 +126,36 @@ def main(quick: bool = False):
     return r
 
 
+def main_real(quick: bool = False):
+    import json
+    import os
+    r = run_real(quick)
+    print("== Fig 19 REAL panel (ISSUE 8): MoE-device crash mid-run ==")
+    print(f"crash: moe device {r['crashed_device']} at t={r['crash_at']}s "
+          f"(trace), SLO={r['slo']:.3f}s")
+    for name in ("supervised", "seed"):
+        run_out = r[name]
+        print(f"-- {name}: statuses={run_out['statuses']} "
+              f"failovers={run_out['failovers']}")
+        rows = [(f"{w['t0']:.1f}-{w['t1']:.1f}",
+                 f"{w['tokens_per_s']:.1f}",
+                 "-" if w["slo_attainment"] is None
+                 else f"{w['slo_attainment']*100:.0f}%",
+                 w["completed"]) for w in run_out["windows"]]
+        print(fmt_table(rows, ["window_s", "tokens_per_s", "slo_att",
+                               "completed"]))
+    os.makedirs("results", exist_ok=True)
+    with open("results/fig19_failures.json", "w") as f:
+        json.dump(r, f, indent=2)
+    print("saved: results/fig19_failures.json")
+    return r
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--real", action="store_true",
+                    help="REAL-executor failover panel (ISSUE 8)")
+    a = ap.parse_args()
+    main_real(a.quick) if a.real else main(a.quick)

@@ -29,7 +29,14 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
+
+
+class AbortedError(RuntimeError):
+    """A blocking buffer wait observed the executor's stop event (shutdown or
+    panic).  Distinct from TimeoutError so the fault-retry path (a region
+    genuinely lost to an injected fault) is never confused with a shutdown —
+    see DisaggregatedExecutor (ISSUE 8)."""
 
 
 class Bitmap:
@@ -75,15 +82,56 @@ class Bitmap:
         with self._cv:
             return self._bits != 0
 
-    def wait_all(self, timeout: Optional[float] = None) -> bool:
+    def wake(self):
+        """Wake blocked waiters (pair with setting a `stop` event so parked
+        threads observe it promptly on shutdown/panic)."""
         with self._cv:
-            return self._cv.wait_for(lambda: self.full, timeout)
+            self._cv.notify_all()
 
-    def wait_clear(self, i: int, timeout: Optional[float] = None) -> bool:
-        """Backpressure: block while bit i is still set."""
+    @staticmethod
+    def _wait_slice(deadline: Optional[float]) -> Optional[float]:
+        """Next cv.wait slice: <= 0.05s so a stop event set without a
+        matching wake() still exits promptly AND so no single cv.wait
+        exceeds the lockdep held-lock-wait budget (the failover path blocks
+        in these waits while holding the executor's swap lock — ISSUE 8).
+        None signals timeout expiry."""
+        wait = 0.05
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return None
+            wait = min(wait, remaining)
+        return wait
+
+    def wait_all(self, timeout: Optional[float] = None,
+                 stop: Optional[threading.Event] = None) -> bool:
+        """Block until all n bits are set.  Returns False on timeout; raises
+        AbortedError once `stop` is set (shutdown/panic)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
-            return self._cv.wait_for(lambda: not (self._bits & (1 << i)),
-                                     timeout)
+            while not self.full:
+                if stop is not None and stop.is_set():
+                    raise AbortedError("bitmap wait_all aborted: stop is set")
+                wait = self._wait_slice(deadline)
+                if wait is None:
+                    return False
+                self._cv.wait(wait)
+            return True
+
+    def wait_clear(self, i: int, timeout: Optional[float] = None,
+                   stop: Optional[threading.Event] = None) -> bool:
+        """Backpressure: block while bit i is still set.  Returns False on
+        timeout; raises AbortedError once `stop` is set."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._bits & (1 << i):
+                if stop is not None and stop.is_set():
+                    raise AbortedError("bitmap wait_clear aborted: stop is set")
+                wait = self._wait_slice(deadline)
+                if wait is None:
+                    return False
+                self._cv.wait(wait)
+            return True
 
 
 @dataclasses.dataclass
@@ -115,9 +163,10 @@ class MoEDeviceBuffer:
 
     # ---- sender side (attention device NPU_ij) ----
     def dispatch_send(self, dp_i: int, tp_j: int, payload: DispatchPayload,
-                      timeout: Optional[float] = 240.0):
+                      timeout: Optional[float] = 240.0,
+                      stop: Optional[threading.Event] = None):
         """async-dispatch-send: backpressure-wait, write, set flag, return."""
-        if not self.flags[dp_i].wait_clear(tp_j, timeout):
+        if not self.flags[dp_i].wait_clear(tp_j, timeout, stop=stop):
             raise TimeoutError("dispatch backpressure timeout")
         # race-ok: bitmap handshake — flag clear ⇒ receiver drained this row,
         # and the write happens-before the flag set that publishes it
@@ -181,6 +230,62 @@ class MoEDeviceBuffer:
         self.flags[dp_i].clear()  # acknowledge: sender may write again
         return out  # type: ignore
 
+    def recv_any(self, timeout: Optional[float] = None,
+                 stop: Optional[threading.Event] = None,
+                 admit: Optional[Callable[[], bool]] = None,
+                 on_take: Optional[Callable[[int, List[DispatchPayload]],
+                                            None]] = None):
+        """wait_any + dispatch_recv as ONE atomic step under the shared cv
+        (ISSUE 8).  The split API leaves a window between "region i is
+        ready" and "take region i" in which a supervisor evacuating a dead
+        device could take the same region — the fused version checks the
+        admission fence and migrates the rows without dropping the lock.
+
+          admit    worker-generation fence: evaluated under the cv; a False
+                   return means this receiver was fenced out by a failover
+                   (`fenced`) and must exit — returns None immediately.
+          on_take  runs under the cv AFTER the rows are migrated and BEFORE
+                   the flags clear — the worker publishes "I am serving
+                   region i" (`_moe_active`/`_moe_current`) with no gap the
+                   quiesce or the supervisor could observe.
+
+        Returns (region, rows), or None on timeout/stop/fence."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if admit is not None and not admit():
+                    return None  # fenced out by a failover
+                for i in range(self.D):
+                    if self.flags[i].full:
+                        # race-ok: region complete and cv held — no sender
+                        # rewrites until the clear below (same handshake as
+                        # dispatch_recv, fused with the wait)
+                        row = self.rows[i]
+                        out = list(row)
+                        for j in range(self.T):
+                            row[j] = None
+                        if on_take is not None:
+                            on_take(i, out)
+                        self.flags[i].clear()  # re-entrant: shares this cv
+                        return i, out
+                if stop is not None and stop.is_set():
+                    return None
+                wait = 0.05 if timeout is None \
+                    else min(0.05, deadline - time.monotonic())
+                if wait <= 0 and timeout is not None:
+                    return None
+                self._cv.wait(wait)
+
+    def fenced(self, fn: Callable[[], Any]) -> Any:
+        """Run `fn` under the buffer's shared cv: the supervisor bumps the
+        worker-generation fence through here, atomically w.r.t. every
+        `recv_any` admission check, then wakes parked receivers so a fenced
+        worker observes the bump promptly."""
+        with self._cv:
+            out = fn()
+            self._cv.notify_all()
+            return out
+
 
 @dataclasses.dataclass
 class CombinePayload:
@@ -201,18 +306,31 @@ class AttnDeviceBuffer:
 
     # ---- sender side (MoE device e) ----
     def combine_send(self, e: int, payload: CombinePayload,
-                     timeout: Optional[float] = 240.0):
-        if not self.flags.wait_clear(e, timeout):
+                     timeout: Optional[float] = 240.0,
+                     stop: Optional[threading.Event] = None):
+        if not self.flags.wait_clear(e, timeout, stop=stop):
             raise TimeoutError("combine backpressure timeout")
         # race-ok: bitmap handshake — bit e clear ⇒ receiver drained segment e
         self.segments[e] = payload
         self.flags.set_bit(e)
 
+    def has_segment(self, e: int) -> bool:
+        """Bit e set: device e's result for the parked batch-layer is already
+        delivered and unconsumed.  The failover path's first-combine-wins
+        pre-check (ISSUE 8)."""
+        return self.flags.test(e)
+
+    def wake(self):
+        """Wake blocked combine waiters (executor shutdown/panic)."""
+        self.flags.wake()
+
     # ---- receiver side (attention device) ----
-    def combine_recv(self, timeout: Optional[float] = 240.0) -> List[CombinePayload]:
+    def combine_recv(self, timeout: Optional[float] = 240.0,
+                     stop: Optional[threading.Event] = None
+                     ) -> List[CombinePayload]:
         """Wait for ALL E segments (empty results still send a marker so the
         bitmap completes — 'all activated expert results received')."""
-        if not self.flags.wait_all(timeout):
+        if not self.flags.wait_all(timeout, stop=stop):
             raise TimeoutError("combine recv timeout")
         # race-ok: all E set_bits happened-before wait_all returned true;
         # senders stay blocked on backpressure until the clear below
@@ -220,6 +338,16 @@ class AttnDeviceBuffer:
         self.segments = [None] * self.E  # race-ok: same window — flags still set
         self.flags.clear()
         return out  # type: ignore
+
+    def scrub(self):
+        """Drop any parked segments and clear the flags (fault-retry path).
+        The caller (DisaggregatedExecutor._scrub_group_slot) has verified no
+        MoE device still serves this (group, slot) — so no sender is parked
+        in backpressure and none will write until the group re-dispatches."""
+        # race-ok: caller-guaranteed quiescence (no sender active for this
+        # buffer; the owning group worker is the only other toucher)
+        self.segments = [None] * self.E
+        self.flags.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.core.cost_model import Deployment, Placement, resample_fractions
 from repro.core.executor import BatchJob, DisaggregatedExecutor
+from repro.core.faults import FaultPlan
 from repro.core.placement_control import (PlacementController,
                                           WindowObservation)
 from repro.core.scheduler import Batch, LengthAwareBatcher
@@ -88,10 +89,21 @@ class RequestResult:
     batch_id: Optional[int] = None
     group: Optional[int] = None  # attention group that served the batch
     first_token: Optional[int] = None  # sampled token id (executor engine)
+    # --- request-lifecycle guarantees (ISSUE 8) ---------------------------
+    # Terminal status: "ok" (served), "timeout" (served or expired past its
+    # deadline), "shed" (rejected at admission under overload), "failed"
+    # (retry budget exhausted or the backend died).  Every submitted request
+    # ends in exactly one of these — drain() never strands a handle.
+    status: str = "ok"
+    retries: int = 0  # fault-aborted region replays the batch survived
 
     @property
     def ttft(self) -> float:
         return self.first_token_time - self.arrival
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
 
 class RequestHandle:
@@ -136,6 +148,11 @@ class EngineStats:
     placement_policy: Optional[str] = None  # currently installed placement
     migrations: int = 0  # MigrationPlans executed so far
     migrated_bytes: float = 0.0  # expert weight bytes shipped by them
+    # fault tolerance (ISSUE 8)
+    failovers: int = 0  # supervised MoE-device evacuations executed
+    statuses: Optional[Dict[str, int]] = None  # terminal status histogram
+    hedges_issued: int = 0  # duplicate batches launched for overdue ones
+    hedge_wins: int = 0  # hedges that finished before their primary
 
     def moe_imbalance(self) -> float:
         u = self.moe_device_util
@@ -331,6 +348,7 @@ class SimEngine(ServingEngine):
         self._handles: Dict[int, RequestHandle] = {}
         self._emitted = 0  # index into the sim's completion list
         self._outbox: List[RequestResult] = []
+        self._status_counts: Dict[str, int] = {}
         self._closed = False
 
     # ----------------------------------------------------------- plumbing --
@@ -376,6 +394,7 @@ class SimEngine(ServingEngine):
             h = self._handles.get(r.rid)
             if h is not None:
                 h._fulfill(res)
+            self._status_counts["ok"] = self._status_counts.get("ok", 0) + 1
             new.append(res)
         return new
 
@@ -398,12 +417,27 @@ class SimEngine(ServingEngine):
 
     def drain(self, timeout: Optional[float] = None) -> List[RequestResult]:
         """Advance virtual time until the heap empties or the horizon is
-        reached; like run_sim, requests an overloaded config could not serve
-        in time stay incomplete (their handles never fulfill)."""
+        reached.  Requests an overloaded config could not serve by the
+        horizon no longer strand their handles (ISSUE 8): they terminate
+        with status "timeout" — drain() leaves every submitted request in
+        a definite state on BOTH backends."""
         out, self._outbox = self._outbox, []
         while self._step():
             pass
-        return out + self._drain_completions()
+        out += self._drain_completions()
+        now = self._sim.now
+        for rid, h in self._handles.items():
+            if h._result is None:
+                res = RequestResult(
+                    rid=rid, arrival=h.arrival, length=h.length,
+                    first_token_time=max(now, h.arrival),
+                    decomposition={"queue": max(now - h.arrival, 0.0)},
+                    status="timeout")
+                h._fulfill(res)
+                self._status_counts["timeout"] = \
+                    self._status_counts.get("timeout", 0) + 1
+                out.append(res)
+        return out
 
     def _wait_handle(self, handle: RequestHandle, timeout: Optional[float]):
         while handle._result is None and self._step():
@@ -429,7 +463,8 @@ class SimEngine(ServingEngine):
             moe_device_util=util,
             placement_policy=self._sim.load_model.placement.policy,
             migrations=len(plans),
-            migrated_bytes=float(sum(p.total_bytes for p in plans)))
+            migrated_bytes=float(sum(p.total_bytes for p in plans)),
+            statuses=dict(self._status_counts))
 
     def close(self):
         self._closed = True
@@ -473,7 +508,11 @@ class ExecutorEngine(ServingEngine):
                  rebalance_target: Optional[Placement] = None,
                  rebalance_release: Optional[float] = None,
                  rebalance_cooldown: int = 1,
-                 rebalance_max_bytes: Optional[float] = None):
+                 rebalance_max_bytes: Optional[float] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 request_deadline: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 hedge_factor: Optional[float] = None):
         self.ex = executor
         self.cfg = executor.cfg
         self.clock = clock if clock is not None else TraceClock()
@@ -491,6 +530,9 @@ class ExecutorEngine(ServingEngine):
         # polls — quiesce, weight-slice copy, atomic table swap.
         self.controller: Optional[PlacementController] = None
         self._rebalance_interval = rebalance_interval
+        # created unconditionally: the supervisor's failover callback
+        # (`_on_failover`) serializes against the rebalance tick through it
+        self._rebalance_lock = threading.Lock()
         if rebalance_interval:
             target = rebalance_target if rebalance_target is not None \
                 else executor.placement
@@ -507,14 +549,19 @@ class ExecutorEngine(ServingEngine):
                 initial_fractions=executor.expert_fractions)
             self._next_rebalance = float(rebalance_interval)  # guarded_by: _rebalance_lock
             self._busy_snapshot = executor.moe_busy.copy()  # guarded_by: _rebalance_lock
-            self._rebalance_lock = threading.Lock()
             self._base_inflection = self.batcher.inflection
             self._base_hot = float(executor.placement.device_fractions(
                 executor.expert_fractions, executor.E).max())
+        # --- fault tolerance / request lifecycle (ISSUE 8) ----------------
+        self._fault_plan = fault_plan
+        self.request_deadline = request_deadline
+        self.max_queue = max_queue
+        self.hedge_factor = hedge_factor
         # wire the engine into the executor
         executor.clock = self.clock.now
         executor.router_stats = self.router_stats
         executor.on_complete = self._on_job_done
+        executor.on_failover = self._on_failover
         # admission state
         self._lock = threading.Lock()
         # _done_cv shares _lock: holding either means holding the same lock
@@ -527,6 +574,17 @@ class ExecutorEngine(ServingEngine):
         self._submitted = 0  # guarded_by: _lock
         self._finished = 0  # guarded_by: _lock
         self._draining = False  # guarded_by: _lock
+        # request-lifecycle state (ISSUE 8): rids with a terminal result
+        # (dedup — a hedged twin's second completion is dropped), terminal
+        # status histogram, live batches eligible for hedging, the batch
+        # service-time EWMA overdue-ness is judged against, and hedge
+        # accounting for stats()
+        self._completed_rids: set = set()  # guarded_by: _lock
+        self._status_counts: Dict[str, int] = {}  # guarded_by: _lock
+        self._live_jobs: List[BatchJob] = []  # guarded_by: _lock
+        self._svc_ewma: Optional[float] = None  # guarded_by: _lock
+        self._hedges_issued = 0  # guarded_by: _lock
+        self._hedge_wins = 0  # guarded_by: _lock
         self._stop = threading.Event()
         self._wake = threading.Event()
         self._admit_thread: Optional[threading.Thread] = None
@@ -538,6 +596,9 @@ class ExecutorEngine(ServingEngine):
         assert not self._stop.is_set(), "engine reused after close()"
         if self._admit_thread is None:
             self.clock.start()
+            if self._fault_plan is not None:
+                # trace clock is zero-based: plan times are trace seconds
+                self.ex.arm_faults(self._fault_plan, t0=0.0)
             self.ex.ensure_started()
             self._admit_thread = threading.Thread(
                 target=self._admit_loop, name="admission", daemon=True)
@@ -578,7 +639,29 @@ class ExecutorEngine(ServingEngine):
                 with self._lock:
                     while self._arrivals and self._arrivals[0][0] <= now:
                         _, _, req = heapq.heappop(self._arrivals)
+                        if (self.max_queue is not None
+                                and self.batcher.pending_count
+                                >= self.max_queue):
+                            # overload shedding at admission (ISSUE 8): a
+                            # full queue rejects instead of queueing forever
+                            self._finalize_locked(req.rid, req.arrival,
+                                                  req.length, now, "shed")
+                            continue
+                        if (self.request_deadline is not None
+                                and now - req.arrival
+                                > self.request_deadline):
+                            self._finalize_locked(req.rid, req.arrival,
+                                                  req.length, now, "timeout")
+                            continue
                         emitted += self.batcher.add(req, now)
+                    if self.request_deadline is not None:
+                        # expire requests that aged out INSIDE the batcher
+                        # before any compute is spent on them
+                        for req in self.batcher.expel(
+                                lambda r: now - r.arrival
+                                > self.request_deadline):
+                            self._finalize_locked(req.rid, req.arrival,
+                                                  req.length, now, "timeout")
                     emitted += self.batcher.poll(now)
                     if self._draining and not self._arrivals:
                         emitted += self.batcher.flush(now)
@@ -599,6 +682,29 @@ class ExecutorEngine(ServingEngine):
             with self._done_cv:
                 self._done_cv.notify_all()
 
+    def _finalize_locked(self, rid: int, arrival: float, length: int,
+                         now: float, status: str):
+        """Mint a terminal non-ok result the engine decided on its own
+        (shed at admission, deadline expiry, backend death).  Caller holds
+        `_lock` — which IS `_done_cv`'s lock, so the fulfill + notify
+        happen inline without re-acquiring (the Condition shares it)."""
+        if rid in self._completed_rids:  # race-ok: caller holds _lock (documented contract)
+            return
+        self._completed_rids.add(rid)  # race-ok: caller holds _lock (documented contract)
+        self._tokens.pop(rid, None)  # race-ok: caller holds _lock (documented contract)
+        res = RequestResult(
+            rid=rid, arrival=arrival, length=length,
+            first_token_time=max(now, arrival),
+            decomposition={"queue": max(now - arrival, 0.0)},
+            status=status)
+        self._outbox.append(res)  # race-ok: caller holds _lock (documented contract)
+        h = self._handles.get(rid)  # race-ok: caller holds _lock (documented contract)
+        if h is not None:
+            h._fulfill(res)
+        self._finished += 1  # race-ok: caller holds _lock (documented contract)
+        self._status_counts[status] = self._status_counts.get(status, 0) + 1  # race-ok: caller holds _lock (documented contract)
+        self._done_cv.notify_all()
+
     def _launch(self, batch: Batch):
         reqs = batch.requests
         # _tokens is written by submit() on caller threads; the admission
@@ -615,11 +721,17 @@ class ExecutorEngine(ServingEngine):
                        t_submitted=self.clock.now())
         for r in reqs:
             r.batch_id = batch.bid
+        with self._lock:
+            self._live_jobs.append(job)
         self.ex.submit_job(job)
 
     # ------------------------------------------------------- completions --
     def _on_job_done(self, job: BatchJob):
-        """Runs in the completing group-worker thread (out of order)."""
+        """Runs in the completing group-worker thread (out of order).
+        Idempotent per request (ISSUE 8): with hedging, both twins of a
+        batch eventually complete — the first one to get here wins each
+        rid, the loser's copies are dropped, so handles fulfill exactly
+        once and `_finished` counts every request exactly once."""
         reqs: List[Request] = job.meta or []
         if not reqs:
             return
@@ -631,28 +743,56 @@ class ExecutorEngine(ServingEngine):
             first = np.asarray(
                 jnp.argmax(lm_head(self.ex.params, h_last, self.cfg), -1))
         t_done = job.t_finished
-        results = []
-        for i, r in enumerate(reqs):
-            r.first_token_time = t_done
-            ttft = max(t_done - r.arrival, 0.0)
-            queue = min(max((job.t_started or t_done) - r.arrival, 0.0), ttft)
-            kernel = min(max(job.kernel_time, 0.0), ttft - queue)
-            comm = min(max(job.comm_time, 0.0), ttft - queue - kernel)
-            results.append(RequestResult(
-                rid=r.rid, arrival=r.arrival, length=r.length,
-                first_token_time=t_done,
-                decomposition={
-                    "queue": queue, "kernel": kernel, "comm": comm,
-                    "other": max(ttft - queue - kernel - comm, 0.0)},
-                batch_id=job.bid, group=job.group,
-                first_token=int(first[i]) if first is not None else None))
         with self._done_cv:
-            for res in results:
+            self._live_jobs = [j for j in self._live_jobs if j is not job]
+            if job.failed is None and job.t_submitted is not None \
+                    and t_done is not None:
+                svc = max(t_done - job.t_submitted, 0.0)
+                self._svc_ewma = svc if self._svc_ewma is None \
+                    else 0.8 * self._svc_ewma + 0.2 * svc
+            if job.failed is not None and any(j.bid == job.bid
+                                              for j in self._live_jobs):
+                # this copy exhausted its retries but its hedged twin is
+                # still running — let the twin decide the terminal status
+                self._done_cv.notify_all()
+                return
+            won = False
+            for i, r in enumerate(reqs):
+                if r.rid in self._completed_rids:
+                    continue  # the hedged twin already finished this rid
+                self._completed_rids.add(r.rid)
+                won = True
+                r.first_token_time = t_done
+                ttft = max(t_done - r.arrival, 0.0)
+                queue = min(max((job.t_started or t_done) - r.arrival, 0.0),
+                            ttft)
+                kernel = min(max(job.kernel_time, 0.0), ttft - queue)
+                comm = min(max(job.comm_time, 0.0), ttft - queue - kernel)
+                if job.failed is not None:
+                    status = "failed"
+                elif (self.request_deadline is not None
+                      and ttft > self.request_deadline):
+                    status = "timeout"  # served, but past its deadline
+                else:
+                    status = "ok"
+                res = RequestResult(
+                    rid=r.rid, arrival=r.arrival, length=r.length,
+                    first_token_time=t_done,
+                    decomposition={
+                        "queue": queue, "kernel": kernel, "comm": comm,
+                        "other": max(ttft - queue - kernel - comm, 0.0)},
+                    batch_id=job.bid, group=job.group,
+                    first_token=int(first[i]) if first is not None else None,
+                    status=status, retries=job.retries)
                 self._outbox.append(res)
                 h = self._handles.get(res.rid)
                 if h is not None:
                     h._fulfill(res)
                 self._finished += 1
+                self._status_counts[status] = \
+                    self._status_counts.get(status, 0) + 1
+            if job.is_hedge and won:
+                self._hedge_wins += 1
             self._done_cv.notify_all()
 
     def _check_errors(self):
@@ -661,6 +801,72 @@ class ExecutorEngine(ServingEngine):
                 from self._admit_error
         if self.ex.errors:
             raise RuntimeError("executor thread failed") from self.ex.errors[0]
+
+    # --------------------------------------------------- fault tolerance --
+    def _on_failover(self, device: int):
+        """Supervisor callback after a failover evacuated `device` (runs on
+        the supervisor thread, OUTSIDE the executor's `_swap_lock`).  Keeps
+        the placement controller's view in sync with the degraded reality:
+        without this, the next rebalance window would emit a plan that
+        routes traffic back onto the dead device."""
+        c = self.controller
+        if c is None:
+            return
+        with self._rebalance_lock:
+            c.sync(placement=self.ex.placement,
+                   target=c.target.fail(device),
+                   base=c.base.fail(device))
+            hot = float(self.ex.placement.device_fractions(
+                self.ex.expert_fractions, self.ex.E).max())
+            with self._lock:
+                self.batcher.retarget(
+                    self._base_inflection * self._base_hot / max(hot, 1e-9))
+
+    def _maybe_hedge(self):
+        """Overdue-batch hedging (ISSUE 8 satellite — replaces the retired
+        `runtime.fault_tolerance.HedgedDispatcher` with the same policy on
+        the engine's admission queue): when a live batch has been out for
+        more than `hedge_factor` x the EWMA batch service time, clone it
+        un-pinned onto the shared queue.  Whichever copy completes first
+        wins each request (`_on_job_done` dedups per rid); the loser's
+        output is dropped, so hedging trades compute for tail latency
+        without ever duplicating a completion."""
+        if self.hedge_factor is None:
+            return
+        now = self.clock.now()
+        clones: List[BatchJob] = []
+        with self._lock:
+            ewma = self._svc_ewma
+            if ewma is None:
+                return  # no service-time baseline yet
+            cutoff = self.hedge_factor * ewma
+            for j in self._live_jobs:
+                if j.hedged or j.is_hedge or j.t_submitted is None:
+                    continue
+                if now - j.t_submitted <= cutoff:
+                    continue
+                j.hedged = True
+                clone = BatchJob(tokens=j.tokens, bid=j.bid,
+                                 lengths=list(j.lengths), meta=j.meta,
+                                 t_submitted=now, is_hedge=True)
+                self._live_jobs.append(clone)
+                self._hedges_issued += 1
+                clones.append(clone)
+        for c in clones:
+            self.ex.submit_job(c)
+
+    def _fail_pending_locked(self) -> List[RequestResult]:
+        """The backend died mid-run (panic or admission failure) and the
+        caller is drain(): honor the lifecycle contract anyway.  Whatever
+        completed keeps its result; every other submitted request ends
+        `failed` right now.  poll() and handle.result() still RAISE on
+        backend death — drain() alone is the bookend that must terminate
+        with definite states (ISSUE 8).  Caller holds `_lock`."""
+        now = self.clock.now()
+        for rid, h in list(self._handles.items()):  # race-ok: caller holds _lock (documented contract)
+            self._finalize_locked(rid, h.arrival, h.length, now, "failed")
+        out, self._outbox = self._outbox, []  # race-ok: caller holds _lock (documented contract)
+        return out
 
     # ------------------------------------------------- placement control --
     def _maybe_rebalance(self):
@@ -714,6 +920,7 @@ class ExecutorEngine(ServingEngine):
     def poll(self) -> List[RequestResult]:
         self._check_errors()
         self._maybe_rebalance()
+        self._maybe_hedge()
         with self._lock:
             out, self._outbox = self._outbox, []
         return out
@@ -731,8 +938,12 @@ class ExecutorEngine(ServingEngine):
             # outside the lock: a migration quiesce must not stall
             # completion callbacks on _done_cv
             self._maybe_rebalance()
+            self._maybe_hedge()
             with self._done_cv:
-                self._check_errors()
+                if self._admit_error is not None or self.ex.errors:
+                    # mid-crash drain still terminates with every request
+                    # in a definite state (ISSUE 8)
+                    return self._fail_pending_locked()
                 if self._finished >= self._submitted:
                     out, self._outbox = self._outbox, []
                     return out
@@ -752,6 +963,7 @@ class ExecutorEngine(ServingEngine):
         while not handle._event.wait(0.1):
             self._check_errors()
             self._maybe_rebalance()
+            self._maybe_hedge()
             if deadline is not None and time.monotonic() >= deadline:
                 raise TimeoutError(f"request {handle.rid} still in flight")
 
@@ -761,6 +973,8 @@ class ExecutorEngine(ServingEngine):
         elapsed = max(now - t0, 1e-9) if t0 is not None else 1e-9
         with self._lock:
             submitted, finished = self._submitted, self._finished
+            statuses = dict(self._status_counts)
+            hedges, wins = self._hedges_issued, self._hedge_wins
         return EngineStats(
             engine="executor", elapsed=elapsed,
             submitted=submitted, completed=finished,
@@ -770,7 +984,9 @@ class ExecutorEngine(ServingEngine):
             group_util=self.ex.group_busy / elapsed,
             placement_policy=self.ex.placement.policy,
             migrations=len(self.ex.migrations),
-            migrated_bytes=self.ex.migrated_bytes)
+            migrated_bytes=self.ex.migrated_bytes,
+            failovers=self.ex.failovers,
+            statuses=statuses, hedges_issued=hedges, hedge_wins=wins)
 
     def close(self):
         self._stop.set()

@@ -79,9 +79,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.async_primitives import (AttnDeviceBuffer, CombinePayload,
-                                         DispatchPayload, MoEDeviceBuffer)
+from repro.core.async_primitives import (AbortedError, AttnDeviceBuffer,
+                                         CombinePayload, DispatchPayload,
+                                         MoEDeviceBuffer)
 from repro.core.cost_model import Placement
+from repro.core.faults import FaultInjector, FaultPlan, InjectedFault
 from repro.kernels.super_gmm.ops import (pack_capacity, super_moe_ffn,
                                          unpack_capacity)
 from repro.models.attention import attention_forward
@@ -106,6 +108,11 @@ class BatchJob:
     t_finished: Optional[float] = None
     kernel_time: float = 0.0  # attention-side compute (this group's stream)
     comm_time: float = 0.0  # blocked in combine (MoE compute + wire + queue)
+    # --- fault tolerance (ISSUE 8) ----------------------------------------
+    retries: int = 0  # region-timeout replays (capped-backoff, from layer 0)
+    failed: Optional[str] = None  # terminal failure reason (result stays None)
+    hedged: bool = False  # a hedge clone of this job was issued
+    is_hedge: bool = False  # this job IS the hedge clone
 
 
 class DisaggregatedExecutor:
@@ -116,7 +123,12 @@ class DisaggregatedExecutor:
                  expert_fractions: Optional[Sequence[float]] = None,
                  moe_path: str = "fused", moe_kernel: str = "pallas",
                  combine_path: str = "segsum",
-                 idle_backoff: Optional[float] = 0.05):
+                 idle_backoff: Optional[float] = 0.05,
+                 supervise: bool = True,
+                 stall_timeout: Optional[float] = None,
+                 max_worker_restarts: int = 3,
+                 region_timeout: float = 60.0,
+                 max_job_retries: int = 2):
         assert cfg.family == "moe", "executor drives MoE models"
         assert moe_path in ("fused", "eager"), moe_path
         assert moe_kernel in ("pallas", "ref"), moe_kernel
@@ -181,6 +193,46 @@ class DisaggregatedExecutor:
         self._moe_active = [False] * E
         self.migrations: List[Dict[str, Any]] = []  # live re-placement log
         self.migrated_bytes = 0.0
+        # --- fault tolerance (ISSUE 8) ------------------------------------
+        # One lock serializes EVERY placement swap: the engine's rebalance
+        # tick and the supervisor's failover both funnel through
+        # apply_placement, which would otherwise interleave their freeze/
+        # quiesce/swap phases.
+        self.supervise = supervise
+        self.stall_timeout = stall_timeout  # clock units; None = death-only
+        self.max_worker_restarts = max_worker_restarts
+        self.region_timeout = region_timeout  # wall s: combine_recv bound
+        self.max_job_retries = max_job_retries
+        self._swap_lock = threading.Lock()
+        self.fault_injector: Optional[FaultInjector] = None
+        self.on_failover: Optional[Any] = None  # callable(device), post-swap
+        self.failovers = 0  # guarded_by: protocol
+        # (single-writer: only the supervisor thread executes failovers)
+        # guarded_by: protocol
+        # (single-writer per element: worker e stamps its own heartbeat;
+        # the supervisor tolerates a stale read — one scan of extra latency)
+        self._heartbeat = [0.0] * E
+        # guarded_by: protocol
+        # (worker-generation fence: bumped ONLY under the buffer's shared cv
+        # via MoEDeviceBuffer.fenced, read by recv_any's admission check
+        # under the same cv; a worker's unlocked loop-top read may be stale
+        # one iteration — the next recv_any re-validates under the cv)
+        self._moe_gen = [0] * E
+        # guarded_by: protocol
+        # (the region worker e took but has not combined yet, set under the
+        # buffer cv by recv_any's on_take and cleared by the worker BEFORE
+        # its combine_send; after the generation fence the supervisor is the
+        # cell's only reader/writer — "still set" proves the combine never
+        # happened, so the failover re-serve is exactly-once)
+        self._moe_current: List[Optional[tuple]] = [None] * E
+        # guarded_by: protocol
+        # (written once by dying worker e, read by the supervisor after it
+        # observed the thread dead — the join/is_alive edge orders the two)
+        self._moe_fail_exc: List[Optional[BaseException]] = [None] * E
+        self._moe_restarts = [0] * E  # guarded_by: protocol
+        # (single-writer: only the supervisor restarts workers)
+        self._sup_thread: Optional[threading.Thread] = None
+        self._retired: List[threading.Thread] = []  # fenced-out old workers
         # jit caches (shape-keyed via jax.jit) + trace-count probes
         self.trace_counts: collections.Counter = collections.Counter()  # guarded_by: _trace_lock
         self._trace_lock = threading.Lock()  # counters bump from N threads
@@ -360,6 +412,14 @@ class DisaggregatedExecutor:
                      t_rows, k_rows, local_ids):
         """Write one device's T payload rows (empty payloads included so the
         T·D bitmap regions always complete)."""
+        inj = self.fault_injector
+        if inj is not None and inj.should_drop_dispatch(e):
+            # injected network fault: drop the WHOLE region (all T rows) —
+            # never a partial region.  The region stays incomplete, the
+            # group's combine_recv times out, and the batch replays through
+            # the retry path (exactly-once: the injector fires per event).
+            self._logev("drop-dispatch", g, slot, layer, e)
+            return
         token_ids = np.stack([t_rows, k_rows], 1)  # (token, k)
         counts = np.bincount(local_ids,
                              minlength=max(len(self.dev_experts[e]), 1))
@@ -371,7 +431,7 @@ class DisaggregatedExecutor:
                                 tokens=payload_tokens[sl],
                                 token_ids=token_ids[sl],
                                 expert_ids=local_ids[sl])
-            self.moe_bufs[e].dispatch_send(g, j, p)
+            self.moe_bufs[e].dispatch_send(g, j, p, stop=self.stop)
         self._logev("dispatch", g, slot, layer, e, int(len(t_rows)))
 
     def _dispatch(self, g: int, slot: int, layer: int, xf, idx,
@@ -438,8 +498,15 @@ class DisaggregatedExecutor:
 
         combine_path="segsum" (default) runs the jitted scatter-add;
         "host" keeps the pre-ISSUE-5 per-payload np.add.at loop as the
-        bit-equality oracle and benchmark baseline."""
-        payloads = self.attn_bufs[g][slot].combine_recv()
+        bit-equality oracle and benchmark baseline.
+
+        The wait is bounded by `region_timeout` (wall seconds): a region
+        lost to a fault (dropped dispatch/combine, a failover window longer
+        than the bound) surfaces as TimeoutError and the group worker
+        replays the batch through the retry path instead of wedging for the
+        240s protocol default (ISSUE 8)."""
+        payloads = self.attn_bufs[g][slot].combine_recv(
+            timeout=self.region_timeout, stop=self.stop)
         Tn, d = xf.shape
         layer = None
         if self.combine_path == "host":
@@ -523,25 +590,64 @@ class DisaggregatedExecutor:
             out[m] = np.asarray(y, np.float32)
         return out
 
-    def _moe_worker(self, e: int):
+    def _injected_sleep(self, e: int, gen: int, ev):
+        """Interpret a stall_moe / delay_wake fault event: dead to the world
+        for `duration` clock seconds.  A stall does NOT heartbeat (that is
+        what the supervisor's stall detector keys on); a delayed wake DOES
+        (benign latency — no failover)."""
+        self._logev("fault", ev.kind, e, ev.duration)
+        t_end = self.clock() + ev.duration
+        while self.clock() < t_end and not self.stop.is_set():
+            # race-ok: fence read — a failover mid-stall retired this worker;
+            # exactness doesn't matter, the next recv_any re-validates
+            if self._moe_gen[e] != gen:
+                return
+            if ev.kind == "delay_wake":
+                self._heartbeat[e] = self.clock()  # race-ok: single-writer (worker e stamps its own cell)
+            time.sleep(0.001)
+
+    def _moe_worker(self, e: int, gen: int = 0):
         buf = self.moe_bufs[e]
         ffn = self._expert_ffn_fused if self.moe_path == "fused" \
             else self._expert_ffn_eager
+
+        def on_take(i, rows):
+            # runs UNDER the buffer cv, after the rows migrated and before
+            # the flags clear (recv_any): in-flight state is published with
+            # no gap the quiesce poll or the supervisor could observe.
+            # race-ok: single-writer (worker e); set before flags clear so the quiesce poll never sees a gap
+            self._moe_active[e] = True
+            self._moe_current[e] = (i, rows)  # race-ok: published under the buffer cv; the supervisor reads it only after fencing this worker out
+
         try:
             while True:
-                # block on "any region complete" (condition variable — no
-                # sleep-polling; idle_backoff only bounds the stop check)
-                i = buf.wait_any(timeout=self.idle_backoff, stop=self.stop)
-                if i is None:
+                # race-ok: fence read — cheap exit for a retired worker; the
+                # authoritative check is recv_any's admit under the cv
+                if self._moe_gen[e] != gen:
+                    return
+                self._heartbeat[e] = self.clock()  # race-ok: single-writer (worker e stamps its own cell)
+                inj = self.fault_injector
+                if inj is not None:
+                    ev = inj.poll_worker(e)
+                    if ev is not None:
+                        if ev.kind == "crash_moe":
+                            raise InjectedFault(
+                                f"injected crash: moe device {e} "
+                                f"(scheduled t={ev.t})")
+                        self._injected_sleep(e, gen, ev)
+                        continue
+                # block on "any region complete" + take it in ONE atomic
+                # step (the split wait_any/dispatch_recv would race the
+                # supervisor's failover evacuation — ISSUE 8)
+                got = buf.recv_any(
+                    timeout=self.idle_backoff, stop=self.stop,
+                    admit=lambda: self._moe_gen[e] == gen,  # race-ok: evaluated under the buffer cv by recv_any — atomic w.r.t. the fence bump
+                    on_take=on_take)
+                if got is None:
                     if self.stop.is_set():
                         return
                     continue
-                # mark in-flight BEFORE dispatch_recv clears the region
-                # flags: the live re-placement quiesce reads "no flags set
-                # and not active" as proof nothing routed under the old
-                # tables is still being served (ISSUE 5)
-                self._moe_active[e] = True  # race-ok: single-writer (worker e); set before flags clear so the quiesce poll never sees a gap
-                rows = buf.dispatch_recv(i)
+                i, rows = got
                 layer = rows[0].layer
                 slot = rows[0].slot
                 tokens = np.concatenate([r.tokens for r in rows], 0)
@@ -556,16 +662,38 @@ class DisaggregatedExecutor:
                 else:
                     out = None
                 self._logev("moe", e, i, slot, layer, len(tokens))
+                # clear BEFORE the combine attempt: "_moe_current still set"
+                # is the supervisor's proof the combine never happened, which
+                # makes its re-serve of a crashed worker's region exactly-once
+                self._moe_current[e] = None  # race-ok: single-writer until fenced; cleared before combine_send by protocol
+                inj = self.fault_injector
+                if inj is not None and inj.should_drop_combine(e):
+                    # injected drop: the group's combine times out and the
+                    # batch retries — the region is consumed exactly once
+                    self._logev("drop-combine", e, i, slot, layer)
+                    self._moe_active[e] = False  # race-ok: single-writer (worker e)
+                    continue
+                # race-ok: fence re-check — fenced out mid-compute means the
+                # failover already re-served this region; sending a stale
+                # combine here could corrupt a LATER batch-layer's segment
+                if self._moe_gen[e] != gen:
+                    self._moe_active[e] = False  # race-ok: single-writer semantics transferred back; worker exits next loop
+                    continue
                 self.attn_bufs[i][slot].combine_send(
                     e, CombinePayload(layer=layer, token_ids=token_ids,
-                                      expert_ids=eids, outputs=out))
+                                      expert_ids=eids, outputs=out),
+                    stop=self.stop)
                 self._moe_active[e] = False  # race-ok: single-writer (worker e); combine_send above happened-before
+        except AbortedError:
+            return  # stop observed inside a buffer wait (shutdown/panic)
         except BaseException as ex:  # surface thread failures to the caller
-            self._panic(ex)
+            self._worker_failed(e, ex)
 
     # --------------------------------------------------------- group worker
     def _panic(self, ex: BaseException):
-        """Surface a worker-thread failure to every waiter."""
+        """Surface a worker-thread failure to every waiter — the LAST
+        resort: under supervision a dying MoE worker goes through
+        `_worker_failed` -> failover instead (ISSUE 8)."""
         self.errors.append(ex)
         self.stop.set()
         with self._jobq_cv:
@@ -574,6 +702,23 @@ class DisaggregatedExecutor:
             self._done_cv.notify_all()
         for buf in self.moe_bufs:
             buf.wake()
+        # release group workers parked in combine_recv and MoE workers
+        # parked in combine_send backpressure: their stop-aware waits raise
+        # AbortedError on the next wakeup instead of masking the original
+        # failure with a 240s protocol timeout (ISSUE 8 satellite)
+        for bufs in self.attn_bufs:
+            for buf in bufs:
+                buf.wake()
+
+    def _worker_failed(self, e: int, exc: BaseException):
+        """A MoE worker thread is dying.  Supervised: record the cause and
+        let the thread exit — the supervisor detects the death and fails the
+        device over.  Unsupervised: seed behavior (panic)."""
+        if not self.supervise:
+            self._panic(exc)
+            return
+        self._moe_fail_exc[e] = exc  # race-ok: written once by dying worker e; the supervisor reads it only after observing the thread dead
+        self._logev("worker-died", e, type(exc).__name__)
 
     def _take_job(self, g: int, timeout: float = 0.0) -> Optional[BatchJob]:
         """Pop the oldest admitted job this group may serve (un-pinned or
@@ -657,7 +802,13 @@ class DisaggregatedExecutor:
                 st = min(waiting, key=lambda s: s["seq"])
                 xf, w, shared = st["ctx"]
                 t0 = self.clock()
-                st["h"] = self._combine(g, st["slot"], st["h"], xf, w, shared)
+                try:
+                    st["h"] = self._combine(g, st["slot"], st["h"], xf, w,
+                                            shared)
+                except TimeoutError:
+                    st["job"].comm_time += self.clock() - t0
+                    self._retry_or_fail(g, st, active, free_slots)
+                    continue
                 st["job"].comm_time += self.clock() - t0
                 st["layer"] += 1
                 if st["layer"] >= self.L:
@@ -677,8 +828,81 @@ class DisaggregatedExecutor:
                         self._done_cv.notify_all()
                 else:
                     st["phase"] = "attn"
+        except AbortedError:
+            return  # stop observed inside a buffer wait (shutdown/panic)
         except BaseException as ex:
             self._panic(ex)
+
+    # ------------------------------------------------ fault retry (ISSUE 8)
+    def _scrub_group_slot(self, g: int, slot: int):
+        """Quiesce-then-scrub one (group, slot) protocol lane after a region
+        timeout.  Wait until no MoE buffer holds rows for region g AND no
+        device is mid-serve on region g (worker `_moe_current` set under the
+        buffer cv before the flags clear, so the two checks in THIS order
+        cannot miss an in-flight take); every combine_send for the lane has
+        then happened-before, and whatever partial combine state is parked
+        in the slot's buffer can be dropped without a late stale segment
+        corrupting the replay."""
+        deadline = time.monotonic() + 4 * (self.region_timeout or 60.0)
+        while True:
+            if self.stop.is_set():
+                raise AbortedError("scrub aborted: executor stopping")
+            busy = False
+            for e in range(self.E):
+                if self.moe_bufs[e].flags[g].any_set():
+                    busy = True
+                    break
+                # race-ok: checked AFTER the flags — a take publishes
+                # _moe_current under the cv BEFORE clearing the flags, so a
+                # region-g take invisible here would still have shown set
+                # flags above; a stale non-None read just polls again
+                cur = self._moe_current[e]
+                if cur is not None and cur[0] == g:
+                    busy = True
+                    break
+            if not busy:
+                break
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"scrub: region {g} did not quiesce — MoE device wedged "
+                    f"with supervision unable to evacuate it")
+            time.sleep(0.002)
+        self.attn_bufs[g][slot].scrub()
+        self._logev("scrub", g, slot)
+
+    def _retry_or_fail(self, g: int, st: Dict[str, Any], active, free_slots):
+        """A region timed out (fault-dropped dispatch/combine or a failover
+        window longer than region_timeout): scrub the lane and replay the
+        batch from layer 0 with capped backoff.  Replays are idempotent —
+        the scrub guarantees no stale segment survives, and re-served
+        regions resolve first-combine-wins.  Past `max_job_retries` the job
+        fails TERMINALLY (job.failed set, result None): the engine maps this
+        to RequestResult.status="failed", which keeps drain()'s definite-
+        state guarantee even when a device never comes back."""
+        job = st["job"]
+        job.retries += 1
+        self._logev("region-timeout", g, st["slot"], st["layer"], job.retries)
+        self._scrub_group_slot(g, st["slot"])
+        if job.retries > self.max_job_retries:
+            job.failed = (f"region timeout at layer {st['layer']} after "
+                          f"{job.retries - 1} replays")
+            job.result = None
+            job.t_finished = self.clock()
+            free_slots.append(st["slot"])
+            active.remove(st)
+            if self.on_complete is not None:
+                self.on_complete(job)
+            with self._done_cv:
+                self._done_cv.notify_all()
+            return
+        # capped exponential backoff (wall seconds): give an in-progress
+        # failover time to land before redispatching into the same hole
+        time.sleep(min(0.05 * (2 ** (job.retries - 1)), 0.5))
+        st["h"] = embed_tokens(self.params, jnp.asarray(job.tokens), None,
+                               self.cfg)
+        st["layer"] = 0
+        st["phase"] = "attn"
+        st["ctx"] = None
 
     # ------------------------------------------- live re-placement (ISSUE 5)
     def apply_placement(self, placement: Placement,
@@ -705,7 +929,27 @@ class DisaggregatedExecutor:
              lookups (`_primary`/`_replicated`/`_g2l`) and release the gate.
 
         Returns the migration record also appended to `self.migrations`
-        (and surfaced through `ExecutorEngine.stats()`)."""
+        (and surfaced through `ExecutorEngine.stats()`).
+
+        Serialized by `_swap_lock`: the engine's rebalance tick and the
+        supervisor's failover (ISSUE 8) both re-place experts through here
+        and must never interleave freeze/quiesce/swap phases."""
+        with self._swap_lock:
+            return self._apply_placement_locked(placement, expert_fractions,
+                                                timeout)
+
+    def _apply_placement_locked(self, placement: Placement,
+                                expert_fractions: Optional[Sequence[float]]
+                                = None,
+                                timeout: float = 60.0,
+                                drain_hook=None,
+                                kind: str = "rebalance") -> Dict[str, Any]:
+        """apply_placement body; caller holds `_swap_lock`.  `drain_hook`
+        (failover path) runs between drain polls OUTSIDE the gate cv: it
+        serves the dead device's buffered regions with the OLD resident
+        stack, which both empties them before the swap invalidates their
+        local expert ids AND un-wedges any dispatcher blocked on the dead
+        device's backpressure (that dispatcher holds the gate open)."""
         fr = tuple(float(x) for x in expert_fractions) \
             if expert_fractions is not None else self.expert_fractions
         assert len(fr) == self.cfg.num_experts
@@ -722,7 +966,7 @@ class DisaggregatedExecutor:
             # plans and `migrations` stay in one-to-one correspondence
             self.placement, self.expert_fractions = placement, fr
             rec = {"t": t0, "seconds": 0.0, "moved_copies": 0, "bytes": 0.0,
-                   "devices": (), "policy": placement.policy}
+                   "devices": (), "policy": placement.policy, "kind": kind}
             self.migrations.append(rec)
             return rec
 
@@ -741,20 +985,33 @@ class DisaggregatedExecutor:
         deadline = time.monotonic() + timeout
         with self._gate_cv:
             self._gate_frozen = True
-            try:
-                while self._dispatchers > 0:
-                    _check_alive(deadline, "dispatch drain")
-                    self._gate_cv.wait(0.05)
-            except BaseException:
+        try:
+            while True:
+                with self._gate_cv:
+                    if self._dispatchers == 0:
+                        break
+                    if drain_hook is None:
+                        self._gate_cv.wait(0.05)
+                _check_alive(deadline, "dispatch drain")
+                if drain_hook is not None:
+                    # failover: a dispatcher may be wedged on the DEAD
+                    # device's backpressure — serving its regions (outside
+                    # the gate cv) is what lets that dispatcher finish
+                    drain_hook()
+                    time.sleep(0.001)
+        except BaseException:
+            with self._gate_cv:
                 self._gate_frozen = False
                 self._gate_cv.notify_all()
-                raise
+            raise
         try:
             for e in affected:
                 # race-ok: quiesce poll — a stale read just polls again; the
                 # gate freeze guarantees no NEW dispatch can re-set either
                 while self.moe_bufs[e].any_pending() or self._moe_active[e]:
                     _check_alive(deadline, f"moe device {e} drain")
+                    if drain_hook is not None:
+                        drain_hook()
                     time.sleep(0.001)
             nbytes = 0.0
             for e in affected:
@@ -778,7 +1035,7 @@ class DisaggregatedExecutor:
         dt = self.clock() - t0
         rec = {"t": self.clock(), "seconds": dt, "moved_copies": len(moved),
                "bytes": nbytes, "devices": tuple(affected),
-               "policy": placement.policy}
+               "policy": placement.policy, "kind": kind}
         self.migrations.append(rec)
         self.migrated_bytes += nbytes
         # the re-placement occupies the receiving devices (weight copy +
@@ -787,6 +1044,179 @@ class DisaggregatedExecutor:
             self.moe_busy[list(affected)] += dt / len(affected)  # race-ok: workers for `affected` are parked behind the frozen gate here
         self._logev("migrate", tuple(affected), len(moved))
         return rec
+
+    # ---------------------------------------------- supervision & failover
+    def arm_faults(self, plan: FaultPlan, t0: Optional[float] = None):
+        """Install and arm a deterministic fault plan against this
+        executor's clock (ISSUE 8).  The engine passes `t0=0.0` — its
+        TraceClock is already zero-based; a bare executor anchors the plan
+        at the current clock reading."""
+        inj = FaultInjector(plan, self.E)
+        inj.arm(self.clock, t0=t0)
+        self.fault_injector = inj
+        return inj
+
+    def _fence_worker(self, e: int) -> int:
+        """Bump device e's generation under its buffer cv and return the
+        NEW generation.  After the bump the old worker can neither take
+        another region (recv_any re-validates the fence under the same cv)
+        nor send another combine (it re-checks after computing); ownership
+        of `_moe_current[e]` transfers to the supervisor."""
+        buf = self.moe_bufs[e]
+
+        def bump():
+            self._moe_gen[e] += 1  # race-ok: runs under the buffer cv (fenced) — atomic w.r.t. recv_any admission
+            return self._moe_gen[e]  # race-ok: same fenced scope as the bump above
+
+        return buf.fenced(bump)
+
+    def _serve_region(self, e: int, i: int, rows) -> None:
+        """Failover path: compute one orphaned region with device e's OLD
+        resident stack (on the supervisor thread) and combine it to its
+        group — unless the group already holds device e's segment (first
+        combine wins: the worker may have sent before dying)."""
+        layer = rows[0].layer
+        slot = rows[0].slot
+        tokens = np.concatenate([r.tokens for r in rows], 0)
+        token_ids = np.concatenate([r.token_ids for r in rows], 0)
+        eids = np.concatenate([r.expert_ids for r in rows], 0)
+        ffn = self._expert_ffn_fused if self.moe_path == "fused" \
+            else self._expert_ffn_eager
+        out = None
+        if len(tokens):
+            t0 = self.clock()
+            out = ffn(e, layer, tokens, eids)
+            self.moe_busy[e] += self.clock() - t0  # race-ok: worker e is fenced out; the supervisor is the cell's only writer here
+        self._logev("moe-failover", e, i, slot, layer, len(tokens))
+        abuf = self.attn_bufs[i][slot]
+        if abuf.has_segment(e):
+            return  # the dead worker's combine landed first — keep it
+        try:
+            abuf.combine_send(
+                e, CombinePayload(layer=layer, token_ids=token_ids,
+                                  expert_ids=eids, outputs=out),
+                timeout=1.0, stop=self.stop)
+        except TimeoutError:
+            # segment held by a batch-layer the group has already timed out
+            # and moved past — drop it; the group's replay re-covers it
+            self._logev("combine-skipped", e, i, slot, layer)
+
+    def _serve_orphans(self, e: int) -> int:
+        """Drain device e's in-flight region (taken but never combined)
+        plus every full region still buffered for it, serving each exactly
+        once on the supervisor thread.  Caller holds `_swap_lock` and has
+        fenced worker e out.  Publishes `_moe_current[e]` while serving so
+        `_scrub_group_slot` observes the supervisor's in-flight work
+        exactly like a worker's."""
+        served = 0
+        # race-ok: worker e is fenced out — the supervisor owns the cell.
+        # "_moe_current still set" is the proof the worker's combine for
+        # this region never happened (it clears BEFORE combine_send), so
+        # re-serving here is exactly-once.
+        cur = self._moe_current[e]
+        if cur is not None:
+            i, rows = cur
+            self._serve_region(e, i, rows)
+            self._moe_current[e] = None  # race-ok: supervisor-owned after the fence
+            served += 1
+        buf = self.moe_bufs[e]
+
+        def on_take(i, rows):
+            # race-ok: published under the buffer cv; supervisor-owned
+            # after the fence (scrub protocol: set before flags clear)
+            self._moe_current[e] = (i, rows)
+
+        while True:
+            got = buf.recv_any(timeout=0, on_take=on_take)
+            if got is None:
+                return served
+            i, rows = got
+            self._serve_region(e, i, rows)
+            self._moe_current[e] = None  # race-ok: supervisor-owned after the fence
+            served += 1
+
+    def _failover(self, e: int, reason: str):
+        """Supervised recovery of MoE device e (ISSUE 8): fence the old
+        worker out, serve its orphaned regions exactly once, evacuate its
+        experts onto survivors through the live re-placement machinery
+        (replica-first — `Placement.fail` mirrors the sim's `_fail_moe`),
+        then restart the worker at the new generation.  Holds `_swap_lock`
+        end-to-end so a concurrent engine rebalance cannot interleave with
+        the evacuation."""
+        self._logev("failover-begin", e, reason)
+        with self._swap_lock:
+            gen = self._fence_worker(e)
+            self._serve_orphans(e)
+            # the fenced worker can no longer flip this; in-flight
+            # ownership transferred to the supervisor and its serving is
+            # done, so the quiesce poll below must not wait on it
+            self._moe_active[e] = False  # race-ok: worker e fenced out; supervisor is the only writer until the restart below
+            failed = self.placement.fail(e)
+            self._apply_placement_locked(
+                failed, expert_fractions=self.expert_fractions,
+                timeout=60.0, drain_hook=lambda: self._serve_orphans(e),
+                kind="failover")
+            old = self._moe_threads[e]
+            if old.is_alive():
+                self._retired.append(old)  # a stalled (not dead) worker:
+                # fenced out, it exits on its next fence check; joined at
+                # close()
+            self._moe_restarts[e] += 1  # race-ok: supervisor single-writer
+            self.failovers += 1  # race-ok: supervisor single-writer
+            self._logev("failover", e, reason, self._moe_restarts[e])  # race-ok: supervisor single-writer
+        # restart OUTSIDE _swap_lock: Thread.start() blocks on the thread's
+        # internal started event (a condition wait the lockdep sanitizer
+        # rightly flags under a held lock).  Only the supervisor writes
+        # _moe_threads[e] after startup, so the gap is single-threaded.
+        nt = threading.Thread(
+            target=self._moe_worker, args=(e, gen),
+            name=f"moe-{e}-r{self._moe_restarts[e]}", daemon=True)  # race-ok: supervisor single-writer
+        self._moe_threads[e] = nt
+        nt.start()
+        cb = self.on_failover
+        if cb is not None:
+            # OUTSIDE _swap_lock: the engine's rebalance tick nests
+            # _rebalance_lock -> apply_placement -> _swap_lock; calling out
+            # under _swap_lock would close that cycle (ABBA)
+            cb(e)
+
+    def _supervisor_loop(self):
+        """Detect dead or stalled MoE workers and fail them over
+        (ISSUE 8).  Panics only as a last resort: restart budget exhausted
+        or the failover machinery itself failing."""
+        try:
+            while not self.stop.is_set():
+                for e in range(self.E):
+                    t = self._moe_threads[e]
+                    dead = not t.is_alive()
+                    # race-ok: heartbeat/_moe_active/any_pending reads are a
+                    # detection heuristic — a stale read only delays or
+                    # re-confirms detection by one 20ms tick
+                    stalled = (
+                        self.stall_timeout is not None
+                        and self.clock() - self._heartbeat[e]
+                        > self.stall_timeout
+                        and (self._moe_active[e]
+                             or self.moe_bufs[e].any_pending()))
+                    if not (dead or stalled):
+                        continue
+                    if self.stop.is_set():
+                        return  # shutdown, not a fault: workers exit on stop
+                    if self._moe_restarts[e] >= self.max_worker_restarts:  # race-ok: supervisor single-writer
+                        # race-ok: supervisor single-writer (_moe_restarts);
+                        # _moe_fail_exc read after the worker was seen dead
+                        raise RuntimeError(
+                            f"moe device {e} {'died' if dead else 'stalled'}"
+                            f" with restart budget exhausted "
+                            f"({self._moe_restarts[e]}/"
+                            f"{self.max_worker_restarts})"
+                        ) from self._moe_fail_exc[e]
+                    self._failover(e, "died" if dead else "stalled")
+                self.stop.wait(0.02)
+        except BaseException as ex:
+            if self.stop.is_set():
+                return  # racing a shutdown: close() owns the teardown
+            self._panic(ex)
 
     # ------------------------------------------------- engine lifecycle/run
     def ensure_started(self):
@@ -807,8 +1237,14 @@ class DisaggregatedExecutor:
         self.stop.clear()
         if self._t_serving_start is None:
             self._t_serving_start = self.clock()
+        now = self.clock()
+        for e in range(self.E):
+            self._heartbeat[e] = now  # race-ok: no worker threads are running yet
+        # race-ok: no worker threads are running yet — gen reads the cell a
+        # prior close()'s failovers last left it at
         self._moe_threads = [
-            threading.Thread(target=self._moe_worker, args=(e,),
+            threading.Thread(target=self._moe_worker,
+                             args=(e, self._moe_gen[e]),
                              name=f"moe-{e}", daemon=True)
             for e in range(self.E)]
         self._g_threads = [
@@ -817,6 +1253,12 @@ class DisaggregatedExecutor:
             for g in range(self.D)]
         for t in self._moe_threads + self._g_threads:
             t.start()
+        if self.supervise:
+            # spawned LAST: every thread it monitors is already alive
+            self._sup_thread = threading.Thread(
+                target=self._supervisor_loop, name="moe-supervisor",
+                daemon=True)
+            self._sup_thread.start()
         self._started = True
 
     def submit_job(self, job: BatchJob) -> BatchJob:
@@ -837,7 +1279,8 @@ class DisaggregatedExecutor:
         with self._done_cv:
             ok = self._done_cv.wait_for(
                 lambda: bool(self.errors)
-                or all(j.result is not None for j in jobs), timeout)
+                or all(j.result is not None or j.failed is not None
+                       for j in jobs), timeout)
         if self.errors:
             raise RuntimeError("executor thread failed") from self.errors[0]
         return bool(ok)
@@ -854,13 +1297,21 @@ class DisaggregatedExecutor:
             self._done_cv.notify_all()
         for buf in self.moe_bufs:
             buf.wake()  # prompt exit for workers idling in wait_any
-        for t in self._g_threads + self._moe_threads:
+        for bufs in self.attn_bufs:
+            for buf in bufs:
+                buf.wake()  # release combine_recv/combine_send blockers —
+                # their stop-aware waits raise AbortedError instead of
+                # deadlocking close() behind a 240s protocol timeout, and a
+                # close() AFTER a panic joins survivors without raising a
+                # second masking exception (ISSUE 8 satellite)
+        sup = [self._sup_thread] if self._sup_thread is not None else []
+        threads = self._g_threads + self._moe_threads + self._retired + sup
+        for t in threads:
             t.join(timeout=timeout)
-        alive = [t.name for t in self._g_threads + self._moe_threads
-                 if t.is_alive()]
-        self._hung += [t for t in self._g_threads + self._moe_threads
-                       if t.is_alive()]
+        alive = [t.name for t in threads if t.is_alive()]
+        self._hung += [t for t in threads if t.is_alive()]
         self._g_threads, self._moe_threads = [], []
+        self._retired, self._sup_thread = [], None
         self._started = False
         if not alive:
             self.stop.clear()  # a clean close is restartable (warm jit
@@ -900,14 +1351,19 @@ class DisaggregatedExecutor:
             self._jobq_cv.notify_all()
         for buf in self.moe_bufs:
             buf.wake()
+        for bufs in self.attn_bufs:
+            for buf in bufs:
+                buf.wake()
+        sup = [self._sup_thread] if self._sup_thread is not None else []
+        threads = self._g_threads + self._moe_threads + self._retired + sup
         grace = time.monotonic() + 2.0
-        for t in self._g_threads + self._moe_threads:
+        for t in threads:
             t.join(timeout=max(grace - time.monotonic(), 1e-3))
-        self._hung = [t for t in self._g_threads + self._moe_threads
-                      if t.is_alive()]
+        self._hung = [t for t in threads if t.is_alive()]
         hung_g = [t.name for t in self._g_threads if t.is_alive()]
         stuck_moe = [t.name for t in self._moe_threads if t.is_alive()]
         self._g_threads, self._moe_threads = [], []
+        self._retired, self._sup_thread = [], None
         self._started = False
         if not self._hung:  # a late-but-clean exit leaves the executor
             self.stop.clear()  # reusable, like the pre-engine run()

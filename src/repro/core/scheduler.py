@@ -94,6 +94,23 @@ class LengthAwareBatcher:
         self.inflection = max(int(inflection), 1)
         return old
 
+    def expel(self, pred) -> List[Request]:
+        """Remove and return every pending request matching `pred` (ISSUE 8:
+        the engine expires past-deadline requests while they still sit in
+        the batcher, before any compute is spent on them).  `_pending` and
+        `_pending_t` stay in lockstep; survivors keep their original age so
+        aging-based flushes are unaffected."""
+        hit = [i for i, r in enumerate(self._pending) if pred(r)]
+        if not hit:
+            return []
+        out = [self._pending[i] for i in hit]
+        drop = set(hit)
+        self._pending = [r for i, r in enumerate(self._pending)
+                         if i not in drop]
+        self._pending_t = [t for i, t in enumerate(self._pending_t)
+                           if i not in drop]
+        return out
+
     def add(self, req: Request, now: float) -> List[Batch]:
         out: List[Batch] = []
         if req.length > self.exclusive_cutoff:

@@ -79,6 +79,7 @@ import numpy as np
 
 from repro.core.cost_model import (CostModel, Deployment, ExpertLoadModel,
                                    Hardware, Placement, V5E)
+from repro.core.faults import FaultPlan
 from repro.core.placement_control import (MigrationPlan, PlacementController,
                                           WindowObservation)
 from repro.core.scheduler import Batch, LengthAwareBatcher, balanced_partition
@@ -123,6 +124,24 @@ class SimConfig:
     failure_duration: float = 5.0
     failure_group: int = 0
     failure_moe_device: Optional[int] = None  # kill an MoE device instead
+    # shared deterministic fault schedule (ISSUE 8, core/faults.py): the
+    # SAME FaultPlan the real executor consumes.  The legacy flag triple
+    # above is one interpretation of it (`FaultPlan.from_flags`); setting
+    # both is ambiguous and `resolved_fault_plan` raises.
+    fault_plan: Optional[FaultPlan] = None
+
+    def resolved_fault_plan(self) -> Optional[FaultPlan]:
+        """Effective MoE-device fault schedule: `fault_plan` wins; the
+        legacy `failure_at/failure_duration/failure_moe_device` triple
+        becomes a single-crash plan.  Returns None when only the DP-group
+        failure path (`failure_at` without a MoE device) is in play."""
+        if self.fault_plan is not None:
+            if self.failure_moe_device is not None:
+                raise ValueError(
+                    "set either fault_plan or failure_moe_device, not both")
+            return self.fault_plan
+        return FaultPlan.from_flags(self.failure_at, self.failure_duration,
+                                    self.failure_moe_device)
 
     def resolved_skew(self) -> Tuple[str, float]:
         """Effective (mode, alpha): SimConfig overrides TraceConfig; a
@@ -335,15 +354,20 @@ class AsapSim(_Engine):
         if self._armed:
             return self
         self._armed = True
-        if self.sim.failure_moe_device is not None:
-            if self.sim.failure_at is None:
-                raise ValueError(
-                    "failure_moe_device requires failure_at to be set")
-            if not 0 <= self.sim.failure_moe_device < self.ep:
-                raise ValueError(
-                    f"failure_moe_device {self.sim.failure_moe_device} "
-                    f"outside [0, {self.ep})")
-            self.at(self.sim.failure_at, self._fail_moe)
+        plan = self.sim.resolved_fault_plan()
+        if plan is not None:
+            plan.validate(self.ep)
+            for ev in plan.events:
+                # crash -> permanent device failure + evacuation; every
+                # non-fatal kind (stall/drop/delay) -> a device-time stall
+                # of `duration` (the analytical analogue of a wedged worker
+                # or a retransmitted payload)
+                if ev.kind == "crash_moe":
+                    self.at(ev.t, lambda ev=ev: self._fail_moe(
+                        ev.device, ev.duration))
+                else:
+                    self.at(ev.t, lambda ev=ev: self._stall_moe(
+                        ev.device, ev.duration))
         elif self.sim.failure_at is not None:
             self.at(self.sim.failure_at, self._fail)
             self.at(self.sim.failure_at + self.sim.failure_duration,
@@ -645,14 +669,19 @@ class AsapSim(_Engine):
             self.pending.appendleft(st)
         self._assign()
 
-    def _fail_moe(self):
+    def _fail_moe(self, d: Optional[int] = None,
+                  duration: Optional[float] = None):
         """Kill one MoE device (ISSUE 2).  Experts with surviving replicas
         fail over instantly; orphaned experts are re-placed on the least-
         loaded survivors, which pay the weight migration and stall until the
         repair window ends.  The dead device's buffered regions are
-        re-dispatched to the survivors that inherit its traffic share."""
-        d = int(self.sim.failure_moe_device)
-        repair_end = self.now + self.sim.failure_duration
+        re-dispatched to the survivors that inherit its traffic share.
+        Defaults reproduce the legacy `failure_moe_device` config path
+        bit-exactly; a FaultPlan crash event passes explicit args."""
+        d = int(self.sim.failure_moe_device) if d is None else int(d)
+        duration = self.sim.failure_duration if duration is None \
+            else float(duration)
+        repair_end = self.now + duration
         self._placement_target = self._placement_target.fail(d)
         self._moe_alive[d] = 0.0
         old_frac = self.load_model.device_fractions(0).copy()
@@ -680,6 +709,19 @@ class AsapSim(_Engine):
             self.moe_dev_busy_time[d] = max(
                 self.moe_dev_busy_time[d] - backlog, 0.0)
         self.moe_dev_free[d] = self.now  # hosts nothing from here on
+
+    def _stall_moe(self, d: int, duration: float):
+        """Non-fatal device fault (FaultPlan stall_moe/drop_*/delay_wake):
+        device `d` serves nothing for `duration` device-seconds.  Queued and
+        future regions are served LATE, not lost — throughput dips and
+        recovers with no placement change, which is exactly the asymmetry
+        vs. `_fail_moe` the executor's supervisor mirrors (stalls detected
+        past `stall_timeout` escalate to failover there; short ones just
+        ride out).  Busy time is NOT accrued: a wedged device does no
+        work."""
+        d = int(d)
+        self.moe_dev_free[d] = max(float(self.moe_dev_free[d]), self.now) \
+            + float(duration)
 
     def _repair(self):
         self.g_alive[self.sim.failure_group] = True
@@ -747,15 +789,16 @@ class SyncSim(_Engine):
         if self._armed:
             return self
         self._armed = True
-        if self.sim.failure_moe_device is not None:
-            if self.sim.failure_at is None:
-                raise ValueError(
-                    "failure_moe_device requires failure_at to be set")
-            if not 0 <= self.sim.failure_moe_device < self.dep.E:
-                raise ValueError(
-                    f"failure_moe_device {self.sim.failure_moe_device} "
-                    f"outside [0, {self.dep.E})")
-        if self.sim.failure_at is not None:
+        plan = self.sim.resolved_fault_plan()
+        if plan is not None:
+            plan.validate(self.dep.E)
+            for ev in plan.events:
+                if ev.kind == "crash_moe":
+                    self.at(ev.t, lambda ev=ev: self._fail(
+                        ev.device, ev.duration))
+                else:
+                    self.at(ev.t, lambda ev=ev: self._stall(ev.duration))
+        elif self.sim.failure_at is not None:
             self.at(self.sim.failure_at, self._fail)
         return self
 
@@ -774,19 +817,24 @@ class SyncSim(_Engine):
         self.queue.append(r)
         self._try_iteration()
 
-    def _fail(self):
+    def _fail(self, moe_device: Optional[int] = None,
+              duration: Optional[float] = None):
         # global barrier: whole engine stalls for the repair window AND the
         # in-flight iteration is lost — cancel its completion event (epoch
         # bump), requeue its requests at the head of the queue, and re-run
-        # the iteration once the engine thaws.
-        self.frozen_until = self.now + self.sim.failure_duration
-        if self.sim.failure_moe_device is not None:
+        # the iteration once the engine thaws.  Defaults reproduce the
+        # legacy config path bit-exactly; FaultPlan crash events pass args.
+        if moe_device is None:
+            moe_device = self.sim.failure_moe_device
+        duration = self.sim.failure_duration if duration is None \
+            else float(duration)
+        self.frozen_until = self.now + duration
+        if moe_device is not None:
             # MoE-device outage (ISSUE 2): after the freeze the dead rank's
             # experts live on the survivors, so every later iteration
             # straddles the DEGRADED slowest EP rank — the barrier pins the
             # whole instance to the inherited load forever.
-            self.load_model = self.load_model.with_failed(
-                int(self.sim.failure_moe_device))
+            self.load_model = self.load_model.with_failed(int(moe_device))
             self.cm = dataclasses.replace(
                 self.cm, copies_override=self.load_model.expected_copies())
         if self.engine_busy:
@@ -795,6 +843,16 @@ class SyncSim(_Engine):
             if self._inflight:  # default mode removed them from the queue
                 self.queue.extendleft(reversed(self._inflight))
             self._inflight = None
+        self.at(self.frozen_until, self._try_iteration)
+
+    def _stall(self, duration: float):
+        """Non-fatal rank fault (FaultPlan stall_moe/drop_*/delay_wake):
+        under the global barrier ANY rank's stall freezes the whole engine
+        for `duration` — the sync baseline's structural weakness vs. ASAP's
+        per-device stall (`AsapSim._stall_moe`).  The in-flight iteration
+        finishes late rather than being lost (no state is destroyed)."""
+        self.frozen_until = max(self.frozen_until, self.now) \
+            + float(duration)
         self.at(self.frozen_until, self._try_iteration)
 
     def _moe_layer_latencies(self, tokens: int) -> np.ndarray:

@@ -41,7 +41,18 @@ experts LIVE between polls):
   --rebalance-policy P     one_shot_threshold | hysteresis | partial | drift
   --rebalance-release R / --rebalance-cooldown N / --rebalance-max-bytes B
   --failure-at T --failure-duration W
-  --fail-moe-device D      kill MoE device D at T
+  --fail-moe-device D      kill MoE device D at T — routed through the shared
+                           `FaultPlan` (core/faults.py, ISSUE 8) so it drives
+                           BOTH engines: the sim evacuates analytically, the
+                           executor detects the dead worker and runs a live
+                           supervised failover (quiesce + weight copy + table
+                           swap), printing a "supervised failover" line
+
+Request-lifecycle knobs (executor engine, ISSUE 8): --request-deadline S
+(past-deadline requests end status=timeout), --max-queue N (overload
+shedding, status=shed), --hedge-factor F (clone overdue batches; first
+completion per request wins).  Every completion line carries its terminal
+status; --save-stats records the status histogram and failover count.
   --measured-from PATH     drive the sim's expert-load model from router
                            stats measured on a live run (RouterStatsCollector
                            JSON, e.g. --save-router-stats output) instead of
@@ -64,6 +75,7 @@ from repro.core.cost_model import Deployment, Placement
 from repro.core.engine import (ExecutorEngine, RouterStatsCollector,
                                SimEngine)
 from repro.core.executor import DisaggregatedExecutor
+from repro.core.faults import FaultPlan
 from repro.core.placement_control import POLICIES
 from repro.core.scheduler import LengthAwareBatcher
 from repro.core.simulator import SimConfig
@@ -114,6 +126,14 @@ def run_executor(args) -> int:
                                moe_path=args.moe_path,
                                moe_kernel=args.moe_kernel,
                                idle_backoff=args.idle_backoff)
+    # the SAME FaultPlan format the sim interprets analytically drives the
+    # executor's injector + supervised failover (ISSUE 8)
+    plan = FaultPlan.from_flags(args.failure_at, args.failure_duration,
+                                args.fail_moe_device)
+    if plan is not None:
+        plan.validate(E)
+        print(f"fault plan armed (supervised failover): "
+              f"{[ev.to_dict() for ev in plan.events]}")
     engine = ExecutorEngine(
         ex, clock=TraceClock(speed=args.time_scale),
         batcher=LengthAwareBatcher(inflection=64, max_tokens=128,
@@ -124,7 +144,11 @@ def run_executor(args) -> int:
         rebalance_target=placement,
         rebalance_release=args.rebalance_release,
         rebalance_cooldown=args.rebalance_cooldown,
-        rebalance_max_bytes=args.rebalance_max_bytes)
+        rebalance_max_bytes=args.rebalance_max_bytes,
+        fault_plan=plan,
+        request_deadline=args.request_deadline,
+        max_queue=args.max_queue,
+        hedge_factor=args.hedge_factor)
     if args.rebalance_interval:
         print(f"placement control plane: policy={args.rebalance_policy} "
               f"interval={args.rebalance_interval}s "
@@ -132,17 +156,24 @@ def run_executor(args) -> int:
               f"{placement.policy}"
               + (f"(hot={placement.replicate_hot})"
                  if placement.replicate_hot else ""))
+    def _print_result(r):
+        print(f"  done rid={r.rid:<3d} batch={r.batch_id} "
+              f"group={r.group} ttft={r.ttft:.3f}s "
+              f"first_token={r.first_token} status={r.status}"
+              + (f" retries={r.retries}" if r.retries else "")
+              + f"  [{_fmt_decomp(r.decomposition)}]")
+
     t0 = time.time()
     handles = engine.submit_all(reqs)
     results = []
     while len(results) < len(reqs) and time.time() - t0 < 600:
         for r in engine.poll():
             results.append(r)
-            print(f"  done rid={r.rid:<3d} batch={r.batch_id} "
-                  f"group={r.group} ttft={r.ttft:.3f}s "
-                  f"first_token={r.first_token}  [{_fmt_decomp(r.decomposition)}]")
+            _print_result(r)
         time.sleep(0.01)
-    results += engine.drain(timeout=120)
+    for r in engine.drain(timeout=120):
+        results.append(r)
+        _print_result(r)
     wall = time.time() - t0
 
     # out-of-order completion evidence (the async-serving property)
@@ -164,6 +195,16 @@ def run_executor(args) -> int:
         print(f"live re-placement: {st.migrations} migration(s), "
               f"{st.migrated_bytes / 1e6:.2f} MB of expert weights moved, "
               f"now serving placement={st.placement_policy}")
+    if st.statuses:
+        print("request statuses: "
+              + " ".join(f"{k}={v}" for k, v in sorted(st.statuses.items())))
+    if st.failovers:
+        print(f"supervised failover: {st.failovers} MoE-device "
+              f"evacuation(s) executed live; dead device(s) "
+              f"{list(ex.placement.dead)} evacuated onto survivors")
+    if st.hedges_issued:
+        print(f"hedged dispatch: {st.hedges_issued} clone(s) issued, "
+              f"{st.hedge_wins} won")
     if args.save_router_stats:
         engine.router_stats.save(args.save_router_stats)
         print(f"router stats saved to {args.save_router_stats}")
@@ -182,6 +223,10 @@ def run_executor(args) -> int:
                 "router_assignments": st.router_assignments,
                 "mean_ttft": float(np.mean([r.ttft for r in results]))
                 if results else None,
+                "statuses": st.statuses,
+                "failovers": st.failovers,
+                "hedges_issued": st.hedges_issued,
+                "hedge_wins": st.hedge_wins,
             }, f, indent=2)
         print(f"engine stats saved to {args.save_stats}")
     engine.close()
@@ -242,8 +287,11 @@ def run_simulation(args) -> int:
         extra += (f"  [MoE device {args.fail_moe_device} killed at "
                   f"t={args.failure_at}s]")
     print(f"  {extra}")
-    ttfts = np.array([r.ttft for r in results])
-    print(f"  completed: {len(results)}/{st.submitted}")
+    ok = [r for r in results if r.status == "ok"]
+    ttfts = np.array([r.ttft for r in ok])
+    print(f"  completed: {len(ok)}/{st.submitted}"
+          + (f"  (timeout: {len(results) - len(ok)})"
+             if len(results) > len(ok) else ""))
     if len(ttfts):
         print(f"  mean TTFT: {ttfts.mean() * 1000:.0f} ms   "
               f"p99: {np.percentile(ttfts, 99) * 1000:.0f} ms")
@@ -321,6 +369,19 @@ def main():
                     help="kill this MoE device at --failure-at (instead of "
                          "the DP-group outage); replicas fail over, orphaned "
                          "experts re-place after the repair window")
+    ap.add_argument("--request-deadline", type=float, default=None,
+                    help="executor engine: TTFT deadline in trace seconds — "
+                         "requests that age past it expire in queue or are "
+                         "marked status=timeout on completion (ISSUE 8)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="executor engine: admission-queue cap — arrivals "
+                         "beyond it are shed with status=shed instead of "
+                         "queueing unboundedly (ISSUE 8)")
+    ap.add_argument("--hedge-factor", type=float, default=None,
+                    help="executor engine: clone a batch overdue by this "
+                         "factor x the EWMA batch service time onto the "
+                         "shared queue; first completion per request wins "
+                         "(ISSUE 8)")
     ap.add_argument("--moe-path", default="fused", choices=["fused", "eager"],
                     help="executor engine: fused super-kernel hot path or the "
                          "pre-fusion per-expert loop (benchmark baseline)")
@@ -358,6 +419,24 @@ def main():
     if args.rebalance_interval is not None \
             and args.rebalance_interval <= 0:
         ap.error("--rebalance-interval must be positive")
+    # fault / lifecycle flag validation (ISSUE 8 satellite): unsupported
+    # combinations fail loudly instead of silently dropping the fault
+    if args.fail_moe_device is not None and args.failure_at is None:
+        ap.error("--fail-moe-device requires --failure-at (when should the "
+                 "device die?)")
+    if args.engine == "executor" and args.failure_at is not None \
+            and args.fail_moe_device is None:
+        ap.error("--failure-at without --fail-moe-device is the sim's "
+                 "DP-group outage; the executor engine has no DP-group "
+                 "failure path — pass --fail-moe-device D to kill an MoE "
+                 "device instead")
+    if args.engine == "sim":
+        for flag, val in (("--request-deadline", args.request_deadline),
+                          ("--max-queue", args.max_queue),
+                          ("--hedge-factor", args.hedge_factor)):
+            if val is not None:
+                ap.error(f"{flag} is an executor-engine request-lifecycle "
+                         f"knob; --engine sim does not consume it")
     if args.rebalance_interval is not None \
             and Placement.parse(args.placement,
                                 args.replicate_hot) == Placement():

@@ -13,16 +13,18 @@ the discrete-event simulator):
    this is driven by the cluster scheduler's device health callback; here the
    alive-set is injectable for tests.
 
-3. Straggler mitigation — (a) the ASAP async pipeline itself (no global
-   barrier to straggle; quantified in benchmarks/fig19_failures.py), and
-   (b) `HedgedDispatcher`: re-enqueue a batch to another DP group when its
-   combine is overdue by `hedge_factor` x expected latency (duplicate results
-   are idempotent — first combine wins).
+3. Straggler mitigation — the ASAP async pipeline itself (no global barrier
+   to straggle; quantified in benchmarks/fig19_failures.py).  Hedged
+   re-dispatch of overdue batches lives on the SERVING path now:
+   `ExecutorEngine(hedge_factor=...)` clones an overdue batch onto the
+   shared admission queue and dedups completions per request (first
+   completion wins) — see `core/engine.py._maybe_hedge` and
+   docs/robustness.md.  The old standalone `HedgedDispatcher` here predated
+   the engine API, was wired to nothing, and was retired by ISSUE 8.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, List, Optional
 
 import jax
@@ -99,37 +101,3 @@ def reshard_onto(tree, mesh, specs):
         sh = jax.NamedSharding(mesh, spec)
         out.append(jax.device_put(np.asarray(jax.device_get(leaf)), sh))
     return jax.tree_util.tree_unflatten(treedef, out)
-
-
-# ---------------------------------------------------------------------------
-# Straggler hedging
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class HedgedDispatcher:
-    """Wraps work dispatch with tail-latency hedging: if a task hasn't
-    completed within hedge_factor x expected, resubmit to another worker and
-    take the first result (idempotent combine)."""
-    expected_latency: float
-    hedge_factor: float = 3.0
-    hedges_issued: int = 0
-    hedge_wins: int = 0
-
-    def run(self, submit: Callable[[int], Any], workers: List[int],
-            poll: Callable[[], Optional[Any]], now: Callable[[], float] = time.monotonic):
-        t0 = now()
-        submit(workers[0])
-        hedged = False
-        while True:
-            r = poll()
-            if r is not None:
-                if hedged:
-                    self.hedge_wins += 1
-                return r
-            if not hedged and now() - t0 > self.hedge_factor * self.expected_latency \
-                    and len(workers) > 1:
-                submit(workers[1])
-                self.hedges_issued += 1
-                hedged = True
-            time.sleep(self.expected_latency / 20)

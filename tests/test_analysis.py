@@ -137,9 +137,16 @@ def test_core_lock_order_graph_is_golden(core_result):
     this list consciously, alongside docs/static_analysis.md."""
     edges = set(core_result.lock_edges)
     golden = {
-        # rebalance tick -> freeze the dispatch gate
+        # placement-swap serializer (rebalance AND failover) -> gate freeze,
+        # migration log, quiesce polls of the buffer flags
+        ("DisaggregatedExecutor._swap_lock", "DisaggregatedExecutor._gate_cv"),
+        ("DisaggregatedExecutor._swap_lock", "DisaggregatedExecutor._log_lock"),
+        ("DisaggregatedExecutor._swap_lock", "MoEDeviceBuffer._cv"),
+        ("DisaggregatedExecutor._swap_lock", "Bitmap._cv"),
+        # rebalance tick -> apply_placement takes the swap serializer; its
+        # transitive closure mirrors the _swap_lock edges above
+        ("ExecutorEngine._rebalance_lock", "DisaggregatedExecutor._swap_lock"),
         ("ExecutorEngine._rebalance_lock", "DisaggregatedExecutor._gate_cv"),
-        # ... -> migration event log
         ("ExecutorEngine._rebalance_lock", "DisaggregatedExecutor._log_lock"),
         # ... -> batcher retarget under the admission lock
         ("ExecutorEngine._rebalance_lock", "ExecutorEngine._lock"),

@@ -1,0 +1,261 @@
+"""Fault tolerance in the REAL executor (ISSUE 8): supervised failover,
+exactly-once re-dispatch, request-lifecycle guarantees, and clean shutdown
+after a panic.  Runs with the lockdep sanitizer (conftest, ASAP_LOCKDEP=1)."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import Deployment, Placement
+from repro.core.engine import ExecutorEngine
+from repro.core.executor import DisaggregatedExecutor
+from repro.core.faults import FaultEvent, FaultPlan, InjectedFault
+from repro.core.scheduler import LengthAwareBatcher
+from repro.core.simulator import AsapSim, SimConfig
+from repro.core.trace import Request, TraceClock
+from repro.models.lm import init_lm_params
+
+# threaded executor + jit compiles: slow lane (tier-1 still runs everything)
+pytestmark = pytest.mark.slow
+
+TERMINAL = {"ok", "timeout", "shed", "failed"}
+
+
+def _engine(num_layers=2, num_experts=8, D=2, E=4, speed=50.0,
+            batcher=None, ex_kw=None, **kw):
+    cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_layers=num_layers, num_experts=num_experts, top_k=2)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    ex = DisaggregatedExecutor(params, cfg, D=D, E=E, **(ex_kw or {}))
+    return ExecutorEngine(
+        ex, clock=TraceClock(speed=speed),
+        batcher=batcher or LengthAwareBatcher(
+            inflection=48, max_tokens=128, exclusive_cutoff=1 << 30,
+            max_wait=0.05), **kw)
+
+
+def _trace(n=6, seed=0, spacing=0.1):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i, arrival=i * spacing,
+                    length=int(rng.choice([8, 16, 24, 32])))
+            for i in range(n)]
+
+
+def _check_definite(results, reqs):
+    """Lifecycle guarantee: one terminal result per submitted request —
+    nothing lost, nothing duplicated, every status definite."""
+    assert sorted(r.rid for r in results) == sorted(r.rid for r in reqs)
+    assert all(r.status in TERMINAL for r in results)
+
+
+# ---------------------------------------------------------------------------
+# supervised failover
+# ---------------------------------------------------------------------------
+
+
+def test_crash_failover_completes_trace_exactly_once():
+    """Acceptance criterion: a FaultPlan killing one MoE device mid-run —
+    the engine completes the whole trace, zero lost/duplicated requests,
+    >= 1 executed failover in the migration log."""
+    plan = FaultPlan(events=[FaultEvent(t=0.5, kind="crash_moe", device=1)])
+    eng = _engine(fault_plan=plan)
+    reqs = _trace(8)
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    _check_definite(results, reqs)
+    assert all(r.status == "ok" for r in results), \
+        [(r.rid, r.status) for r in results]
+    ex = eng.ex
+    assert ex.failovers >= 1
+    assert any(rec.get("kind") == "failover" for rec in ex.migrations)
+    assert 1 in ex.placement.dead  # the dead device left the placement
+    st = eng.stats()
+    assert st.failovers == ex.failovers
+    assert sum((st.statuses or {}).values()) == len(reqs)
+
+
+def test_stall_failover_unwedges_the_device():
+    """A wedged (not dead) worker: no heartbeat past stall_timeout while
+    work is pending must escalate to the same failover path."""
+    plan = FaultPlan(events=[
+        FaultEvent(t=0.5, kind="stall_moe", device=0, duration=1e9)])
+    eng = _engine(fault_plan=plan, ex_kw=dict(stall_timeout=1.0))
+    reqs = _trace(8)
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    _check_definite(results, reqs)
+    assert all(r.status == "ok" for r in results)
+    assert eng.ex.failovers >= 1
+    assert 0 in eng.ex.placement.dead
+
+
+def test_delay_wake_is_benign():
+    """delay_wake keeps heartbeating: the supervisor must NOT fail over."""
+    # stall_timeout is in CLOCK units (trace seconds at speed=50): keep it
+    # far above first-batch jit compile time so only a real wedge trips it
+    plan = FaultPlan(events=[
+        FaultEvent(t=0.5, kind="delay_wake", device=0, duration=1.0)])
+    eng = _engine(fault_plan=plan, ex_kw=dict(stall_timeout=3000.0))
+    reqs = _trace(6)
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    _check_definite(results, reqs)
+    assert all(r.status == "ok" for r in results)
+    assert eng.ex.failovers == 0
+    assert eng.ex.placement.dead == ()
+
+
+@pytest.mark.parametrize("kind", ["drop_combine", "drop_dispatch"])
+def test_dropped_payload_retries_idempotently(kind):
+    """A dropped dispatch/combine payload: the region times out, the batch
+    replays (capped backoff), and the retry is idempotent — one result per
+    request, retries recorded."""
+    plan = FaultPlan(events=[FaultEvent(t=0.0, kind=kind, device=0)])
+    eng = _engine(fault_plan=plan, ex_kw=dict(region_timeout=3.0))
+    reqs = _trace(6)
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    _check_definite(results, reqs)
+    assert all(r.status == "ok" for r in results)
+    assert any(r.retries >= 1 for r in results), \
+        "the dropped payload must have forced at least one replay"
+    inj = eng.ex.fault_injector
+    assert [ev.kind for ev in inj.fired_events()] == [kind]
+
+
+def test_sim_executor_failover_placement_parity():
+    """The SAME FaultPlan produces the SAME failover placement in both
+    runtimes: round-robin base with the crashed device marked dead."""
+    plan = FaultPlan(events=[FaultEvent(t=0.5, kind="crash_moe", device=1)])
+    eng = _engine(fault_plan=plan)
+    eng.submit_all(_trace(6))
+    eng.drain(timeout=300)
+    eng.close()
+    ex_pl = eng.ex.placement
+    assert ex_pl.dead == (1,)
+
+    sim = AsapSim(get_config("deepseek_v32"),
+                  SimConfig(mode="asap", rps=1.0, duration=10.0,
+                            fault_plan=FaultPlan(events=[
+                                FaultEvent(t=2.0, kind="crash_moe",
+                                           device=1, duration=5.0)])),
+                  Deployment(D=2, T=2, E=4))
+    sim.simulate()
+    sim_pl = sim.load_model.placement
+    assert sim_pl.dead == (1,)
+    # same policy + same dead set => identical expert->device tables at the
+    # executor's width (replica-first evacuation in both runtimes)
+    fr = Placement.uniform_fractions(8)
+    assert sim_pl.table(fr, 4) == ex_pl.table(fr, 4)
+
+
+# ---------------------------------------------------------------------------
+# request-lifecycle guarantees
+# ---------------------------------------------------------------------------
+
+
+def test_seed_behavior_unsupervised_crash_fails_definitely():
+    """supervise=False reproduces seed behavior: the crash panics the
+    executor — but drain() still terminates with every request in a
+    definite state, submit-after-panic raises with the ORIGINAL cause, and
+    close() does not mask it with a second exception."""
+    plan = FaultPlan(events=[FaultEvent(t=0.2, kind="crash_moe", device=1)])
+    eng = _engine(fault_plan=plan, ex_kw=dict(supervise=False))
+    reqs = _trace(8)
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    _check_definite(results, reqs)
+    assert any(r.status == "failed" for r in results)
+    assert eng.ex.failovers == 0
+    # submit after the panic: loud, causal, no deadlock
+    with pytest.raises(RuntimeError) as ei:
+        eng.ex.ensure_started()
+    assert isinstance(ei.value.__cause__, InjectedFault)
+    eng.close()  # must join survivors without raising a masking exception
+
+
+def test_close_during_in_flight_crash():
+    """close() racing an injected crash must terminate cleanly (ISSUE 8
+    satellite): buffer CVs released, survivors joined, no hang."""
+    plan = FaultPlan(events=[FaultEvent(t=0.2, kind="crash_moe", device=0)])
+    eng = _engine(fault_plan=plan, ex_kw=dict(supervise=False))
+    eng.submit_all(_trace(6))
+    time.sleep(0.3)  # let the crash land while work is in flight
+    t0 = time.monotonic()
+    eng.close()
+    assert time.monotonic() - t0 < 120.0
+
+
+def test_overload_shedding_at_admission():
+    """max_queue rejects at admission: shed requests terminate immediately
+    with status='shed'; admitted ones still complete."""
+    batcher = LengthAwareBatcher(inflection=1 << 30, max_tokens=1 << 30,
+                                 exclusive_cutoff=1 << 30, max_wait=1e9)
+    eng = _engine(batcher=batcher, max_queue=2)
+    reqs = [Request(rid=i, arrival=0.0, length=8) for i in range(6)]
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    _check_definite(results, reqs)
+    by = {r.rid: r for r in results}
+    assert sum(1 for r in results if r.status == "shed") == 4
+    assert sum(1 for r in results if r.status == "ok") == 2
+    assert all(by[r.rid].retries == 0 for r in reqs)
+
+
+def test_request_deadline_yields_timeout_status():
+    """A tiny per-request deadline: every result still terminates, late ones
+    carry status='timeout' (expired at admission, in the batcher, or past
+    deadline at first token)."""
+    eng = _engine(request_deadline=1e-6)
+    reqs = _trace(6)
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    _check_definite(results, reqs)
+    assert all(r.status in ("ok", "timeout") for r in results)
+    assert any(r.status == "timeout" for r in results)
+
+
+def test_hedged_redispatch_is_idempotent():
+    """Hedging (retired HedgedDispatcher, re-homed on the engine): an
+    aggressive hedge_factor clones overdue batches, yet completions dedup —
+    exactly one result per request, hedges accounted in stats."""
+    plan = FaultPlan(events=[
+        FaultEvent(t=0.3, kind="delay_wake", device=0, duration=2.0)])
+    eng = _engine(fault_plan=plan, hedge_factor=0.05,
+                  ex_kw=dict(stall_timeout=None))
+    reqs = _trace(8, spacing=0.05)
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    _check_definite(results, reqs)
+    assert all(r.status == "ok" for r in results)
+    st = eng.stats()
+    assert st.hedges_issued >= 1
+    assert st.hedge_wins >= 0
+
+
+def test_drain_terminates_mid_crash_with_definite_statuses():
+    """drain() bounded-time termination through a crash + failover storm:
+    every submitted request ends in exactly one terminal status."""
+    plan = FaultPlan(events=[
+        FaultEvent(t=0.3, kind="crash_moe", device=1),
+        FaultEvent(t=0.6, kind="drop_combine", device=0),
+    ])
+    eng = _engine(fault_plan=plan, ex_kw=dict(region_timeout=3.0))
+    reqs = _trace(10, spacing=0.05)
+    eng.submit_all(reqs)
+    t0 = time.monotonic()
+    results = eng.drain(timeout=300)
+    eng.close()
+    assert time.monotonic() - t0 < 300.0
+    _check_definite(results, reqs)
+    st = eng.stats()
+    assert sum((st.statuses or {}).values()) == len(reqs)

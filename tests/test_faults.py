@@ -1,0 +1,155 @@
+"""Deterministic fault injection (ISSUE 8): the shared FaultPlan schema,
+exactly-once injector consumption, and the simulator's interpretation of a
+plan (crash ≡ legacy failure flags bit-exactly; stall delays, never loses)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                               FaultPlan)
+from repro.core.scheduler import LengthAwareBatcher
+from repro.core.simulator import AsapSim, SimConfig, run_sim
+from repro.core.trace import Request
+
+CFG = get_config("deepseek_v32")
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validates_kind_and_time():
+    with pytest.raises(ValueError):
+        FaultEvent(t=1.0, kind="meteor_strike", device=0)
+    with pytest.raises(ValueError):
+        FaultEvent(t=-1.0, kind="crash_moe", device=0)
+    ev = FaultEvent(t=2.0, kind="stall_moe", device=1, duration=0.5)
+    assert FaultEvent.from_dict(ev.to_dict()) == ev
+
+
+def test_fault_plan_sorts_events_and_roundtrips():
+    plan = FaultPlan(events=[FaultEvent(t=5.0, kind="crash_moe", device=0),
+                             FaultEvent(t=1.0, kind="delay_wake", device=1)],
+                     seed=7)
+    assert [ev.t for ev in plan.events] == [1.0, 5.0]
+    rt = FaultPlan.from_dict(plan.to_dict())
+    assert rt.events == plan.events and rt.seed == 7
+
+
+def test_fault_plan_from_flags():
+    assert FaultPlan.from_flags(8.0, 5.0, None) is None
+    with pytest.raises(ValueError):
+        FaultPlan.from_flags(None, 5.0, 0)
+    plan = FaultPlan.from_flags(8.0, 5.0, 2)
+    assert plan.events == (FaultEvent(t=8.0, kind="crash_moe", device=2,
+                                      duration=5.0),)
+
+
+def test_fault_plan_validate_bounds():
+    plan = FaultPlan(events=[FaultEvent(t=1.0, kind="crash_moe", device=4)])
+    with pytest.raises(ValueError):
+        plan.validate(4)
+    assert plan.validate(5) is plan
+
+
+# ---------------------------------------------------------------------------
+# injector: exactly-once consumption
+# ---------------------------------------------------------------------------
+
+
+def test_injector_consumes_each_event_exactly_once():
+    plan = FaultPlan(events=[
+        FaultEvent(t=1.0, kind="crash_moe", device=0),
+        FaultEvent(t=1.0, kind="drop_dispatch", device=1),
+        FaultEvent(t=1.0, kind="drop_combine", device=1),
+    ])
+    inj = FaultInjector(plan, num_moe_devices=2)
+    t = [0.0]
+    inj.arm(lambda: t[0], t0=0.0)
+    # nothing due yet
+    assert inj.poll_worker(0) is None
+    assert not inj.should_drop_dispatch(1)
+    assert len(inj.pending_events()) == 3
+    t[0] = 2.0  # everything due now
+    ev = inj.poll_worker(0)
+    assert ev is not None and ev.kind == "crash_moe"
+    assert inj.poll_worker(0) is None  # consumed
+    assert inj.should_drop_dispatch(1)
+    assert not inj.should_drop_dispatch(1)  # consumed
+    assert inj.should_drop_combine(1)
+    assert not inj.should_drop_combine(1)
+    assert len(inj.fired_events()) == 3 and not inj.pending_events()
+
+
+def test_injector_kinds_are_device_scoped():
+    plan = FaultPlan(events=[FaultEvent(t=0.0, kind="crash_moe", device=1)])
+    inj = FaultInjector(plan, num_moe_devices=2)
+    inj.arm(lambda: 1.0, t0=0.0)
+    assert inj.poll_worker(0) is None  # device 0 is healthy
+    assert inj.poll_worker(1).kind == "crash_moe"
+
+
+def test_fault_kinds_frozen():
+    assert FAULT_KINDS == ("crash_moe", "stall_moe", "drop_dispatch",
+                           "drop_combine", "delay_wake")
+
+
+# ---------------------------------------------------------------------------
+# simulator interpretation
+# ---------------------------------------------------------------------------
+
+
+def test_sim_crash_plan_is_bit_exact_with_legacy_flags():
+    """`failure_moe_device` is now one interpretation of a FaultPlan: the
+    plan-driven run must reproduce the legacy flag-driven run exactly."""
+    kw = dict(rps=1.0, duration=25.0, ep_skew=1.2, placement="replicated",
+              replicate_hot=2)
+    legacy = run_sim(CFG, SimConfig(mode="asap", failure_at=8.0,
+                                    failure_duration=5.0,
+                                    failure_moe_device=0, **kw))
+    plan = FaultPlan.from_flags(8.0, 5.0, 0)
+    planned = run_sim(CFG, SimConfig(mode="asap", fault_plan=plan, **kw))
+    assert planned.mean_ttft == legacy.mean_ttft
+    assert planned.completed_fraction() == legacy.completed_fraction()
+
+
+@pytest.mark.parametrize("mode", ["asap", "default"])
+def test_sim_stall_plan_delays_but_never_loses(mode):
+    kw = dict(rps=1.0, duration=25.0)
+    healthy = run_sim(CFG, SimConfig(mode=mode, **kw))
+    plan = FaultPlan(events=[FaultEvent(t=8.0, kind="stall_moe", device=0,
+                                        duration=4.0)])
+    stalled = run_sim(CFG, SimConfig(mode=mode, fault_plan=plan, **kw))
+    assert stalled.completed_fraction() == 1.0  # a stall loses nothing
+    assert stalled.mean_ttft >= healthy.mean_ttft  # ...but is not free
+
+
+def test_sim_rejects_plan_plus_legacy_flags():
+    plan = FaultPlan(events=[FaultEvent(t=8.0, kind="crash_moe", device=0)])
+    with pytest.raises(ValueError):
+        AsapSim(CFG, SimConfig(mode="asap", fault_plan=plan, failure_at=8.0,
+                               failure_moe_device=0)).start()
+
+
+def test_sim_validates_plan_device_bounds():
+    plan = FaultPlan(events=[FaultEvent(t=8.0, kind="crash_moe", device=99)])
+    with pytest.raises(ValueError):
+        AsapSim(CFG, SimConfig(mode="asap", fault_plan=plan)).start()
+
+
+# ---------------------------------------------------------------------------
+# admission: deadline expiry plumbing (satellite of the lifecycle work)
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_expel_removes_matching_and_keeps_rest():
+    b = LengthAwareBatcher(inflection=1 << 30, max_tokens=1 << 30,
+                           exclusive_cutoff=1 << 30, max_wait=1e9)
+    reqs = [Request(rid=i, arrival=0.0, length=8 * (i + 1)) for i in range(4)]
+    for r in reqs:
+        b.add(r, now=0.0)
+    out = b.expel(lambda r: r.rid % 2 == 0)
+    assert [r.rid for r in out] == [0, 2]
+    assert b.pending_count == 2
+    assert b.expel(lambda r: False) == []
+    assert b.pending_count == 2
