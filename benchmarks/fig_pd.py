@@ -1,0 +1,134 @@
+"""Beyond-paper — prefill/decode disaggregation end-to-end (ISSUE 9).
+
+The paper stops at prefill TTFT; this figure composes the async-prefill
+pipeline with the new decode subsystem and asks the MegaScale-Infer
+question: what do TTFT, TPOT and GOODPUT look like when decode runs
+
+  * nowhere          — the prefill-only seed (out_len == 1, the repo's
+                       pre-ISSUE-9 behavior; TPOT undefined),
+  * colocated        — decode shares the prefill engine's device, KV never
+                       crosses the wire (the handoff-free baseline),
+  * disaggregated    — dedicated decode engine(s) fed over the ICI via
+                       `KVHandle` transfers (`PDOrchestrator`).
+
+Goodput counts requests that are `ok` AND meet BOTH per-token SLOs
+(TTFT <= 5 s, TPOT <= 100 ms), per trace second.  The same arrivals /
+prompt lengths / sampled output lengths are replayed into every arm, so
+the columns differ only by serving topology.  Results land in
+results/fig_pd.json (CI uploads them).
+"""
+import json
+import os
+
+from benchmarks.common import CFG, SLO, fmt_table
+from repro.core.engine import SimEngine
+from repro.core.decode import SimDecodeEngine
+from repro.core.orchestrator import PDOrchestrator
+from repro.core.simulator import SimConfig
+from repro.core.trace import TraceConfig, generate_requests
+
+TPOT_SLO = 0.100  # 100 ms/token steady-state budget
+OUT_LEN_MEAN = 24.0
+OUT_LEN_CV = 0.5
+DECODE_WIDTH = 32
+
+
+def _metrics(results, duration):
+    ok = [r for r in results if r.status == "ok"]
+    ttfts = [r.ttft for r in ok]
+    tpots = [r.tpot for r in ok if r.tpot is not None]
+    good = [r for r in ok if r.ttft <= SLO
+            and (r.tpot is None or r.tpot <= TPOT_SLO)]
+    toks = sum(r.tokens_out for r in ok)
+    return {
+        "ok": len(ok), "total": len(results),
+        "mean_ttft": sum(ttfts) / len(ttfts) if ttfts else None,
+        "mean_tpot": sum(tpots) / len(tpots) if tpots else None,
+        "goodput_rps": len(good) / duration,
+        "token_throughput": toks / duration,
+    }
+
+
+def _run_prefill_only(reqs, rps, duration, tc):
+    eng = SimEngine(CFG, SimConfig(mode="asap", rps=rps, duration=duration,
+                                   trace=tc))
+    eng.submit_all(reqs)
+    results = eng.poll() + eng.drain()
+    eng.close()
+    m = _metrics(results, duration)
+    m.update(kv_handoffs=0, kv_gb=0.0)
+    return m
+
+
+def _run_pd(reqs, rps, duration, tc, colocated):
+    pre = SimEngine(CFG, SimConfig(mode="asap", rps=rps, duration=duration,
+                                   trace=tc))
+    dec = SimDecodeEngine(CFG, pre._sim.cm, load_model=pre._sim.load_model,
+                          width=DECODE_WIDTH)
+    orch = PDOrchestrator([pre], [dec], hw=pre._sim.cm.hw,
+                          colocated=colocated)
+    orch.submit_all(reqs)
+    results = orch.poll() + orch.drain()
+    m = _metrics(results, duration)
+    m.update(kv_handoffs=orch.kv_log.count,
+             kv_gb=orch.kv_log.bytes / 1e9)
+    orch.close()
+    return m
+
+
+def run(quick: bool = False) -> dict:
+    duration = 20.0 if quick else 40.0
+    rps_points = [1.0, 2.0] if quick else [1.0, 2.0, 4.0]
+    tc_gen = TraceConfig(out_len_mean=OUT_LEN_MEAN, out_len_cv=OUT_LEN_CV)
+    arms = {}
+    for rps in rps_points:
+        reqs = generate_requests(rps, duration, tc_gen)
+        arms[rps] = {
+            # the seed workload: identical arrivals/prompts, out_len 1
+            "prefill_only": _run_prefill_only(_single_token(reqs), rps,
+                                              duration, TraceConfig()),
+            "colocated": _run_pd(reqs, rps, duration, tc_gen, True),
+            "disaggregated": _run_pd(reqs, rps, duration, tc_gen, False),
+        }
+    return {"duration": duration, "slo": SLO, "tpot_slo": TPOT_SLO,
+            "out_len_mean": OUT_LEN_MEAN, "decode_width": DECODE_WIDTH,
+            "arms": arms}
+
+
+def _single_token(reqs):
+    import dataclasses
+    return [dataclasses.replace(r, out_len=1) for r in reqs]
+
+
+def _fmt(v, scale=1e3, unit=""):
+    return "-" if v is None else f"{v * scale:.0f}{unit}"
+
+
+def main(quick: bool = False) -> dict:
+    r = run(quick)
+    rows = []
+    for rps, arm in r["arms"].items():
+        for name, m in arm.items():
+            rows.append((rps, name, f"{m['ok']}/{m['total']}",
+                         _fmt(m["mean_ttft"]), _fmt(m["mean_tpot"]),
+                         f"{m['goodput_rps']:.2f}",
+                         f"{m['token_throughput']:.1f}",
+                         m["kv_handoffs"], f"{m['kv_gb']:.2f}"))
+    print("== prefill/decode disaggregation: TTFT / TPOT / goodput ==")
+    print(fmt_table(rows, ["rps", "topology", "ok", "ttft_ms", "tpot_ms",
+                           "goodput_rps", "tok/s", "handoffs", "kv_GB"]))
+    print(f"\ngoodput = ok & TTFT<={r['slo']:.0f}s & "
+          f"TPOT<={r['tpot_slo'] * 1e3:.0f}ms, per trace second; "
+          f"prefill-only is the pre-decode seed (TPOT undefined).")
+    os.makedirs("results", exist_ok=True)
+    with open("results/fig_pd.json", "w") as f:
+        json.dump(r, f, indent=2, sort_keys=True, default=float)
+    print("saved: results/fig_pd.json")
+    return r
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

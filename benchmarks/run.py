@@ -20,6 +20,7 @@ MODULES = [
      "+ REAL-executor live re-placement (beyond paper)"),
     ("superkernel_dispatch", "SuperKernel AOT dispatch (structural)"),
     ("fig_executor_hotpath", "Executor hot path: fused vs eager (beyond paper)"),
+    ("fig_pd", "P/D disaggregation: TTFT/TPOT/goodput (beyond paper)"),
     ("roofline", "Roofline table (from dry-run)"),
 ]
 

@@ -499,6 +499,62 @@ class CostModel:
     def prefill_attention_latency(self, seq_lens: Sequence[int]) -> float:
         return self.cfg.num_layers * self.attention_layer_latency(seq_lens)
 
+    # --------------------------------------------------- decode (ISSUE 9)
+    def kv_token_bytes(self) -> float:
+        """KV-cache bytes ONE token contributes across all layers (K and V,
+        bf16) — the unit both the per-step decode read cost and the
+        prefill->decode transfer cost are priced in."""
+        c = self.cfg
+        return 2.0 * c.num_layers * c.kv_dim * 2
+
+    def decode_attention_step_latency(self, kv_lens: Sequence[int]) -> float:
+        """One attention layer of ONE decode step over a batch of requests
+        with per-row KV lengths.  Memory-bound by construction: the whole KV
+        cache of every active row streams from HBM per step, the projections
+        touch one token per row, and the weights stream once (batch-width
+        amortized — the MegaScale-Infer decode regime)."""
+        c = self.cfg
+        B = len(kv_lens)
+        if B == 0:
+            return 0.0
+        kv_total = float(sum(kv_lens))
+        w = 2.0 * c.d_model * (2 * c.q_dim + 2 * c.kv_dim)  # bf16 weights
+        kv_bytes = kv_total * 2.0 * c.kv_dim * 2  # K+V read per step
+        act = 2.0 * B * (c.d_model * 4 + 2 * (c.q_dim + c.kv_dim))
+        flops = 2.0 * B * c.d_model * (2 * c.q_dim + 2 * c.kv_dim) \
+            + 4.0 * kv_total * c.q_dim
+        T = self.dep.T
+        return max(flops / (T * self.hw.peak_flops * self.hw.flop_efficiency),
+                   (w + kv_bytes + act) / (T * self.hw.hbm_bw))
+
+    def decode_step_latency(self, kv_lens: Sequence[int], load_model=None,
+                            lkey: int = 0) -> float:
+        """One full single-token decode step for a continuous batch.
+
+        Per layer: memory-bound attention over the per-row KV caches + the
+        MoE stage at batch width B (per-step expert routing through the
+        SAME `ExpertLoadModel` the prefill stage uses — the step straddles
+        the slowest MoE device).  One host dispatch per step (the executor
+        runs ONE jitted step over all layers)."""
+        c = self.cfg
+        B = len(kv_lens)
+        if B == 0:
+            return 0.0
+        attn = self.decode_attention_step_latency(kv_lens)
+        if load_model is not None and c.num_experts:
+            loads = load_model.device_loads(B, layer=lkey)
+            hits = load_model.device_experts_hit(B, layer=lkey)
+            moe = float(np.max(self.moe_device_latency(loads, hits, B)))
+        else:
+            moe = self.moe_layer_latency(B)
+        return c.num_layers * (attn + moe) + self.hw.host_dispatch
+
+    def kv_transfer_seconds(self, prompt_len: int) -> float:
+        """Prefill->decode KV handoff cost: the prompt's whole per-layer
+        cache crosses the ICI once (one link, point-to-point)."""
+        return self.hw.hop_latency \
+            + float(prompt_len) * self.kv_token_bytes() / self.hw.ici_bw
+
     # ------------------------------------------------------------------ MoE
     def expert_bytes(self) -> float:
         c = self.cfg

@@ -60,7 +60,8 @@ from repro.core.faults import FaultPlan
 from repro.core.placement_control import (PlacementController,
                                           WindowObservation)
 from repro.core.scheduler import Batch, LengthAwareBatcher
-from repro.core.simulator import AsapSim, SimConfig, SyncSim
+from repro.core.kv import KVHandle, KVSpec
+from repro.core.simulator import AsapSim, SimConfig, SyncSim, drain_horizon
 from repro.core.trace import Request, TraceClock
 from repro.models.lm import lm_head
 
@@ -96,10 +97,36 @@ class RequestResult:
     # ends in exactly one of these — drain() never strands a handle.
     status: str = "ok"
     retries: int = 0  # fault-aborted region replays the batch survived
+    # --- decode extension (ISSUE 9) ---------------------------------------
+    # tokens_out counts EVERY emitted token (first token included), so the
+    # prefill-only seed behavior is tokens_out == 1 with completion_time ==
+    # first_token_time.  When a decode stage served the request the
+    # decomposition grows "kv_transfer" / "decode_queue" / "decode" keys and
+    # the extended contract (pinned in tests/test_pd.py) holds: components
+    # >= 0 and summing <= completion latency, with
+    # tpot == (completion_time - first_token_time) / (tokens_out - 1).
+    tokens_out: int = 1
+    completion_time: Optional[float] = None  # last-token timestamp
+    token_times: Optional[List[float]] = None  # per-token timestamps
 
     @property
     def ttft(self) -> float:
         return self.first_token_time - self.arrival
+
+    @property
+    def completion_latency(self) -> float:
+        t = self.completion_time if self.completion_time is not None \
+            else self.first_token_time
+        return t - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time-per-output-token over the decode tail (None until a
+        decode stage produced more than the first token)."""
+        if self.completion_time is None or self.tokens_out <= 1:
+            return None
+        return (self.completion_time - self.first_token_time) \
+            / (self.tokens_out - 1)
 
     @property
     def ok(self) -> bool:
@@ -339,10 +366,12 @@ class SimEngine(ServingEngine):
         self._sim = AsapSim(cfg, sim, asap_dep) if sim.mode == "asap" \
             else SyncSim(cfg, sim, sync_dep)
         self._sim.arm()
-        # same drop-detection horizon as the offline run_sim driver: an
-        # overloaded config must report incomplete requests, not fold an
-        # unbounded drain tail into the TTFT stats
-        self._horizon = sim.duration * 4 + 60.0
+        # drop-detection horizon: the offline run_sim bound (duration*4+60)
+        # plus an expected-decode-steps budget when the trace samples output
+        # lengths — long-generation traces must not be mislabeled `timeout`
+        # by a prefill-sized cutoff (ISSUE 9 satellite).  out_len_mean <= 1
+        # reproduces the run_sim bound exactly (bit-parity preserved).
+        self._horizon = drain_horizon(sim, self._sim.cm)
         self.router_stats = RouterStatsCollector(max(cfg.num_experts, 1))
         self._sim.router_hook = self._record_routing
         self._handles: Dict[int, RequestHandle] = {}
@@ -447,6 +476,17 @@ class SimEngine(ServingEngine):
                 f"request {handle.rid} did not complete by the simulation "
                 f"horizon ({self._horizon:.0f}s; now t={self._sim.now:.3f}s)")
 
+    def take_kv(self, rid: int) -> KVHandle:
+        """Export a completed request's prefill KV state (ISSUE 9).  The
+        simulator's handle is ANALYTIC: no payload, byte/transfer accounting
+        from the spec — the orchestrator charges the ICI wire cost."""
+        h = self._handles.get(rid)
+        assert h is not None and h._result is not None, \
+            f"take_kv({rid}) before the prefill completed"
+        return KVHandle(rid=rid, prompt_len=h.length,
+                        spec=KVSpec.from_config(self.cfg),
+                        created_at=h._result.first_token_time)
+
     def stats(self) -> EngineStats:
         elapsed = max(self._sim.now, 1e-9)
         if isinstance(self._sim, AsapSim):
@@ -512,9 +552,19 @@ class ExecutorEngine(ServingEngine):
                  fault_plan: Optional[FaultPlan] = None,
                  request_deadline: Optional[float] = None,
                  max_queue: Optional[int] = None,
-                 hedge_factor: Optional[float] = None):
+                 hedge_factor: Optional[float] = None,
+                 keep_kv: bool = False):
         self.ex = executor
         self.cfg = executor.cfg
+        # --- prefill->decode KV handoff (ISSUE 9) -------------------------
+        # keep_kv retains each ok request's per-layer KV slices until the
+        # orchestrator claims them via take_kv(); requires an executor built
+        # with emit_kv=True (the fused attention step must return caches).
+        self.keep_kv = keep_kv
+        if keep_kv:
+            assert getattr(executor, "emit_kv", False), \
+                "keep_kv=True requires DisaggregatedExecutor(emit_kv=True)"
+        self._kv: Dict[int, tuple] = {}  # rid -> (k, v) [L, len, kvh, hd]  guarded_by: _lock
         self.clock = clock if clock is not None else TraceClock()
         self.batcher = batcher if batcher is not None else LengthAwareBatcher(
             inflection=64, max_tokens=4096, exclusive_cutoff=1 << 30,
@@ -762,6 +812,10 @@ class ExecutorEngine(ServingEngine):
                     continue  # the hedged twin already finished this rid
                 self._completed_rids.add(r.rid)
                 won = True
+                if self.keep_kv and job.kv is not None \
+                        and job.failed is None:
+                    k, v = job.kv
+                    self._kv[r.rid] = (k[:, i, :r.length], v[:, i, :r.length])
                 r.first_token_time = t_done
                 ttft = max(t_done - r.arrival, 0.0)
                 queue = min(max((job.t_started or t_done) - r.arrival, 0.0),
@@ -917,6 +971,22 @@ class ExecutorEngine(ServingEngine):
             self._rebalance_lock.release()
 
     # ---------------------------------------------------------------- API --
+    def take_kv(self, rid: int) -> KVHandle:
+        """Claim the completed prefill's KV cache for the decode handoff
+        (ISSUE 9).  Pops the retained per-layer slices — each handle is
+        claimable exactly once; requires keep_kv=True and a completed ok
+        prefill for `rid`."""
+        with self._lock:
+            payload = self._kv.pop(rid, None)
+            h = self._handles.get(rid)
+        assert payload is not None, \
+            f"take_kv({rid}): no retained KV (keep_kv off, not ok, or taken)"
+        assert h is not None and h._result is not None
+        return KVHandle(rid=rid, prompt_len=h.length,
+                        spec=KVSpec.from_config(self.cfg),
+                        created_at=h._result.first_token_time,
+                        payload=payload)
+
     def poll(self) -> List[RequestResult]:
         self._check_errors()
         self._maybe_rebalance()

@@ -86,7 +86,7 @@ from repro.core.cost_model import Placement
 from repro.core.faults import FaultInjector, FaultPlan, InjectedFault
 from repro.kernels.super_gmm.ops import (pack_capacity, super_moe_ffn,
                                          unpack_capacity)
-from repro.models.attention import attention_forward
+from repro.models.attention import attention_forward, attention_prefill
 from repro.models.common import ModelConfig, act_fn, apply_norm
 from repro.models.moe import gated_ffn, router_topk
 from repro.models.lm import embed_tokens, lm_stages
@@ -113,6 +113,11 @@ class BatchJob:
     failed: Optional[str] = None  # terminal failure reason (result stays None)
     hedged: bool = False  # a hedge clone of this job was issued
     is_hedge: bool = False  # this job IS the hedge clone
+    # --- prefill/decode disaggregation (ISSUE 9) --------------------------
+    # With `emit_kv=True` the pipeline also exports the batch's per-layer KV
+    # caches: (k, v) stacked [L, B, S, kvh, hd] np arrays.  The engine
+    # slices per-request handles out of them for decode enrollment.
+    kv: Optional[tuple] = None
 
 
 class DisaggregatedExecutor:
@@ -128,11 +133,15 @@ class DisaggregatedExecutor:
                  stall_timeout: Optional[float] = None,
                  max_worker_restarts: int = 3,
                  region_timeout: float = 60.0,
-                 max_job_retries: int = 2):
+                 max_job_retries: int = 2,
+                 emit_kv: bool = False):
         assert cfg.family == "moe", "executor drives MoE models"
         assert moe_path in ("fused", "eager"), moe_path
         assert moe_kernel in ("pallas", "ref"), moe_kernel
         assert combine_path in ("segsum", "host"), combine_path
+        assert not (emit_kv and moe_path == "eager"), \
+            "emit_kv requires the fused attention step (the KV cache is " \
+            "exported by the jitted attention_prefill path)"
         (kind, n, opts), = lm_stages(cfg)
         assert kind == "decoder" and opts["moe"]
         self.params, self.cfg = params, cfg
@@ -143,6 +152,7 @@ class DisaggregatedExecutor:
         self.moe_path = moe_path
         self.moe_kernel = moe_kernel
         self.combine_path = combine_path
+        self.emit_kv = emit_kv
         self.idle_backoff = idle_backoff  # max CV wait in the MoE workers
         self.stage = params["stages"][0]
         # --- replica-aware expert placement (ROADMAP item d) --------------
@@ -312,9 +322,16 @@ class DisaggregatedExecutor:
         the layer id is a traced scalar indexing the stacked params, so the
         steady state performs zero retraces (jax.jit keys on shapes only).
         The stacked params are closed over (resident, like the MoE steps'
-        weights) so per-call dispatch doesn't re-flatten the pytree."""
+        weights) so per-call dispatch doesn't re-flatten the pytree.
+
+        With `emit_kv` (ISSUE 9) the attention part runs through
+        `attention_prefill` and the step ALSO returns the layer's (k, v)
+        cache — the raw material of the prefill->decode KV handoff.  The
+        branch is Python-level on a constructor flag, so the jit cache
+        still keys on shapes only."""
         cfg = self.cfg
         sp = self._attn_stage
+        emit_kv = self.emit_kv
 
         def step(lid, h):
             with self._trace_lock:  # runs at trace time only
@@ -322,9 +339,17 @@ class DisaggregatedExecutor:
             lp = jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(a, lid, 0,
                                                        keepdims=False), sp)
-            h = h + attention_forward(lp["attn"],
-                                      apply_norm(h, lp["ln_attn"], cfg),
-                                      cfg, use_dense=True)
+            kv = None
+            if emit_kv:
+                a, cache = attention_prefill(
+                    lp["attn"], apply_norm(h, lp["ln_attn"], cfg), cfg,
+                    use_dense=True)
+                h = h + a
+                kv = (cache.k, cache.v)
+            else:
+                h = h + attention_forward(lp["attn"],
+                                          apply_norm(h, lp["ln_attn"], cfg),
+                                          cfg, use_dense=True)
             x = apply_norm(h, lp["ln_ffn"], cfg)
             B, S, d = x.shape
             xf = x.reshape(B * S, d)
@@ -334,7 +359,7 @@ class DisaggregatedExecutor:
                 s = lp["shared"]
                 shared = gated_ffn(xf, s["w_gate"], s["w_up"], s["w_down"],
                                    act_fn(cfg.act))
-            return h, xf, weights, idx, shared
+            return h, xf, weights, idx, shared, kv
 
         return jax.jit(step)
 
@@ -772,7 +797,8 @@ class DisaggregatedExecutor:
                                      None, self.cfg)
                     active.append({"job": job, "h": h, "layer": 0,
                                    "phase": "attn", "slot": free_slots.pop(0),
-                                   "ctx": None, "seq": 0, "valid": valid})
+                                   "ctx": None, "seq": 0, "valid": valid,
+                                   "kv": []})
                 if not active:
                     continue  # idle: loop back into the blocking take
                 # run attention+dispatch for every slot that is ready
@@ -781,9 +807,12 @@ class DisaggregatedExecutor:
                         continue
                     t0 = self.clock()
                     if fused:
-                        h, xf, w, idx, shared = self._attn_step(
+                        h, xf, w, idx, shared, kv = self._attn_step(
                             jnp.asarray(st["layer"], jnp.int32), st["h"])
                         w, idx = np.asarray(w), np.asarray(idx)
+                        if kv is not None:  # emit_kv: per-layer KV handoff
+                            st["kv"].append((np.asarray(kv[0]),
+                                             np.asarray(kv[1])))
                     else:
                         h, xf, w, idx, shared = self._attn_part(
                             self._layer_params(st["layer"]), st["h"])
@@ -816,6 +845,9 @@ class DisaggregatedExecutor:
                     t0 = self.clock()
                     job.result = np.asarray(
                         apply_norm(st["h"], self.params["final_norm"], self.cfg))
+                    if st["kv"]:
+                        job.kv = (np.stack([k for k, _ in st["kv"]]),
+                                  np.stack([v for _, v in st["kv"]]))
                     dt = self.clock() - t0
                     job.kernel_time += dt
                     self.group_busy[g] += dt  # race-ok: single-writer (group worker g accumulates its own cell)
@@ -903,6 +935,7 @@ class DisaggregatedExecutor:
         st["layer"] = 0
         st["phase"] = "attn"
         st["ctx"] = None
+        st["kv"] = []  # replay re-emits every layer's cache from scratch
 
     # ------------------------------------------- live re-placement (ISSUE 5)
     def apply_placement(self, placement: Placement,

@@ -1,0 +1,114 @@
+"""KV-handoff layer for prefill/decode disaggregation (ISSUE 9).
+
+A prefill engine finishes a request holding the prompt's per-layer KV cache.
+Disaggregated serving moves that state to a DECODE engine before the second
+token can be produced — this module is the currency of that move:
+
+  * `KVSpec`     — per-layer cache geometry derived from a ModelConfig
+                   (layers x kv heads x head_dim, bf16), shared by both
+                   backends so analytic byte accounting and the real
+                   device-buffer move price the same payload.
+  * `KVHandle`   — one request's exported cache: rid, prompt length, spec,
+                   and (real executor only) the stacked [L, len, kvh, hd]
+                   K/V arrays.  The simulator's handle is analytic —
+                   payload None, bytes/transfer cost from the spec.
+  * `transfer_seconds` — the ICI cost of shipping one handle
+                   (`CostModel.kv_transfer_seconds` equivalent, usable
+                   without building a full CostModel).
+  * `KVTransferLog` — thread-safe handoff accounting the orchestrator
+                   reports (count + bytes), so "did a KV handoff actually
+                   happen" is checkable in smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Optional, Tuple
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    """Per-layer KV-cache geometry (bf16 K + V per token per layer)."""
+    num_layers: int
+    num_kv_heads: int
+    head_dim: int
+    bytes_per_el: int = 2  # bf16
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig) -> "KVSpec":
+        return cls(num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+                   head_dim=cfg.head_dim)
+
+    @property
+    def token_bytes(self) -> float:
+        """Bytes ONE cached token contributes across all layers (K and V)."""
+        return 2.0 * self.num_layers * self.num_kv_heads * self.head_dim \
+            * self.bytes_per_el
+
+    def layer_shape(self, length: int) -> Tuple[int, int, int]:
+        """Shape of one layer's K (or V) cache for a `length`-token prompt."""
+        return (length, self.num_kv_heads, self.head_dim)
+
+
+@dataclasses.dataclass
+class KVHandle:
+    """One request's exported prefill KV state.
+
+    `payload` is backend-specific: the real executor attaches the stacked
+    per-layer (k, v) arrays ([L, len, kvh, hd] each) and the decode engine's
+    enrollment performs a REAL device-buffer move; the simulator leaves it
+    None and charges only the analytic transfer cost.
+    """
+    rid: int
+    prompt_len: int
+    spec: KVSpec
+    created_at: float  # engine-time the prefill finished (first token)
+    payload: Optional[Any] = None  # (k [L,len,kvh,hd], v [L,len,kvh,hd])
+
+    @property
+    def bytes(self) -> float:
+        return self.prompt_len * self.spec.token_bytes
+
+
+def transfer_seconds(handle: KVHandle, hw) -> float:
+    """ICI wire time to ship `handle` point-to-point (one hop + one link —
+    the same pricing as `CostModel.kv_transfer_seconds`)."""
+    return hw.hop_latency + handle.bytes / hw.ici_bw
+
+
+class KVTransferLog:
+    """Thread-safe prefill->decode handoff accounting.
+
+    The orchestrator records one entry per enrollment into a REMOTE decode
+    engine (colocated mode transfers nothing); serve.py's pd-smoke gate and
+    `fig_pd` read the totals.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0  # guarded_by: _lock
+        self._bytes = 0.0  # guarded_by: _lock
+        self._seconds = 0.0  # guarded_by: _lock
+
+    def record(self, handle: KVHandle, seconds: float):
+        with self._lock:
+            self._count += 1
+            self._bytes += handle.bytes
+            self._seconds += seconds
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def bytes(self) -> float:
+        with self._lock:
+            return self._bytes
+
+    @property
+    def seconds(self) -> float:
+        with self._lock:
+            return self._seconds

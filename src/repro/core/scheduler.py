@@ -18,6 +18,7 @@ Baselines (§5.1):
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 from typing import List, Optional, Sequence, Tuple
 
@@ -182,6 +183,53 @@ def chunk_requests(requests: Sequence[Request], chunk: int) -> List[Batch]:
                              chunk_len=c))
             start += c
     return out
+
+
+class DecodeAdmissionQueue:
+    """Ready-time-ordered admission into a width-capped decode batch
+    (ISSUE 9).  Shared by both decode runtimes: the simulator's analytic
+    continuous batcher and the executor's slot-based enrollment both pop
+    eligible requests (KV handoff landed, a slot free) in ready order.
+    Single-threaded by design — each decode engine owns one instance and
+    drives it from its own admission point (poll()/advance())."""
+
+    def __init__(self, width: int):
+        assert width >= 1
+        self.width = width
+        self._heap: List[Tuple[float, int, object]] = []
+        self._ctr = itertools.count()
+        self.active = 0  # occupied decode slots; caller releases
+
+    def push(self, t_ready: float, item):
+        heapq.heappush(self._heap, (t_ready, next(self._ctr), item))
+
+    def next_ready(self) -> Optional[float]:
+        """Ready time of the head entry (None when empty)."""
+        return self._heap[0][0] if self._heap else None
+
+    def admit(self, now: float) -> List[object]:
+        """Pop every entry ready by `now` that fits under the width cap,
+        marking its slot occupied.  The caller calls release() per leave."""
+        out: List[object] = []
+        while self._heap and self._heap[0][0] <= now \
+                and self.active < self.width:
+            _, _, item = heapq.heappop(self._heap)
+            self.active += 1
+            out.append(item)
+        return out
+
+    def release(self, n: int = 1):
+        """Return `n` slots after requests left the decode batch."""
+        self.active = max(self.active - n, 0)
+
+    def drain_all(self) -> List[object]:
+        """Remove and return every still-pending entry (shutdown path)."""
+        out = [item for _, _, item in self._heap]
+        self._heap = []
+        return out
+
+    def __len__(self) -> int:
+        return len(self._heap)
 
 
 def pair_batches(ready: List[Batch]) -> List[Tuple[Batch, Optional[Batch]]]:

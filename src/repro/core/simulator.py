@@ -1009,6 +1009,159 @@ class SyncSim(_Engine):
 
 
 # ---------------------------------------------------------------------------
+# Decode stage (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+class DecodeEntry:
+    """One request resident in (or pending for) a decode batch."""
+    __slots__ = ("rid", "kv_len", "remaining", "t_ready", "t_admitted",
+                 "token_times")
+
+    def __init__(self, rid: int, prompt_len: int, steps: int, t_ready: float):
+        self.rid = rid
+        self.kv_len = prompt_len  # grows one token per step
+        self.remaining = steps  # decode tokens still to produce
+        self.t_ready = t_ready  # KV landed; eligible for admission
+        self.t_admitted: Optional[float] = None
+        self.token_times: List[float] = []  # virtual per-token timestamps
+
+
+class DecodeSim:
+    """Analytic continuous-batching decode runtime in VIRTUAL time.
+
+    The memory-bound counterpart of AsapSim's prefill pipeline: each step
+    serves every active request one token for `CostModel.decode_step_latency`
+    (KV-bytes-read dominated, batch-width amortized, per-step expert routing
+    through the same `ExpertLoadModel`).  Requests JOIN between steps when
+    their KV handoff has landed (`t_ready`) and a slot under `width` is
+    free, and LEAVE the instant their sampled decode length is produced —
+    continuous batching, no wave barriers.
+
+    `advance(t_limit)` never steps past a caller-chosen frontier, which is
+    how the orchestrator keeps a decode sim causally behind its prefill
+    sim's virtual clock; time never rewinds (enrollments with t_ready in
+    the past admit at `now`).
+    """
+
+    def __init__(self, cfg: ModelConfig, cm: CostModel,
+                 load_model: Optional[ExpertLoadModel] = None,
+                 width: int = 32):
+        assert width >= 1
+        self.cfg, self.cm = cfg, cm
+        self.load_model = load_model
+        self.width = width
+        self.now = 0.0
+        self._pending: List[Tuple[float, int, DecodeEntry]] = []  # heap
+        self._seq = itertools.count()
+        self._active: Dict[int, DecodeEntry] = {}
+        self.completed: List[DecodeEntry] = []  # drained by the caller
+        self.busy_time = 0.0
+        self.steps = 0
+        self.router_hook: Optional[Callable] = None  # (tokens, lkey)
+
+    @property
+    def load(self) -> int:
+        """Requests enrolled but not finished (least-loaded routing key)."""
+        return len(self._active) + len(self._pending)
+
+    def enroll(self, rid: int, prompt_len: int, steps: int, t_ready: float):
+        """Register one request whose KV handle lands at `t_ready`; it will
+        produce `steps` decode tokens after admission."""
+        assert steps >= 1
+        e = DecodeEntry(rid, prompt_len, steps, t_ready)
+        heapq.heappush(self._pending, (t_ready, next(self._seq), e))
+        return e
+
+    def _admit(self, t_limit: float) -> bool:
+        admitted = False
+        while self._pending and len(self._active) < self.width \
+                and self._pending[0][0] <= max(self.now, t_limit):
+            t_ready, _, e = heapq.heappop(self._pending)
+            # continuous batching joins at step boundaries; time never
+            # rewinds for handles that landed while a step was in flight
+            e.t_admitted = max(self.now, t_ready)
+            self._active[e.rid] = e
+            admitted = True
+        return admitted
+
+    def advance(self, t_limit: float):
+        """Run decode steps until `t_limit` (virtual seconds) or until no
+        work is eligible before it.  A step in progress may finish past the
+        limit — the caller's next advance() starts from that frontier."""
+        while True:
+            self._admit(self.now)
+            if not self._active:
+                if not self._pending or self._pending[0][0] > t_limit:
+                    return
+                # idle: jump to the next KV arrival (never rewinding)
+                self.now = max(self.now, self._pending[0][0])
+                continue
+            if self.now >= t_limit:
+                return
+            entries = list(self._active.values())
+            kv_lens = [e.kv_len for e in entries]
+            dt = self.cm.decode_step_latency(kv_lens, self.load_model)
+            if self.router_hook is not None:
+                # expectation-weighted per-step routing: B tokens route
+                # through every MoE layer of the step
+                self.router_hook(len(entries) * self.cfg.num_layers, 0)
+            self.now += dt
+            self.busy_time += dt
+            self.steps += 1
+            for e in entries:
+                e.kv_len += 1
+                e.remaining -= 1
+                e.token_times.append(self.now)
+                if e.remaining <= 0:
+                    del self._active[e.rid]
+                    self.completed.append(e)
+
+    def remaining_work(self) -> Tuple[int, int]:
+        """(total decode steps still owed, max final KV length) over every
+        unfinished enrollment — sizes the caller's drain horizon."""
+        entries = list(self._active.values()) \
+            + [e for _, _, e in self._pending]
+        steps = sum(e.remaining for e in entries)
+        kv_max = max((e.kv_len + e.remaining for e in entries), default=0)
+        return steps, kv_max
+
+    def drain(self, horizon: float):
+        """Advance until everything enrolled finished or `horizon` passed.
+        Returns entries still unfinished at the horizon (timeout cases)."""
+        while (self._active or self._pending) and self.now < horizon:
+            before = self.steps
+            self.advance(horizon)
+            if self.steps == before and not self._active:
+                break  # nothing eligible before the horizon
+        leftovers = list(self._active.values()) \
+            + [e for _, _, e in self._pending]
+        self._active.clear()
+        self._pending = []
+        return leftovers
+
+
+def drain_horizon(sim_cfg: SimConfig, cm: CostModel) -> float:
+    """Bounded drain horizon for the online SimEngine (ISSUE 9 satellite).
+
+    The prefill-sized bound from PR 4 (`duration*4 + 60`) mislabels
+    long-generation traces as `timeout`: a trace with sampled decode
+    lengths legitimately runs ~total-decode-steps x per-step latency past
+    the last arrival.  Budget that tail from the trace's expected step
+    count at a conservative (serial, batch-width-1) per-step latency.
+    Traces without decode (`out_len_mean <= 1`) return the seed bound
+    EXACTLY, preserving bit-parity with the offline run_sim driver."""
+    base = sim_cfg.duration * 4 + 60.0
+    tc = sim_cfg.trace
+    if tc.out_len_mean <= 1.0:
+        return base
+    total_steps = max(sim_cfg.rps * sim_cfg.duration, 1.0) * tc.out_len_mean
+    kv = int(tc.mean_len + tc.out_len_mean) + 1
+    per_step = cm.decode_step_latency([kv])
+    return base + 2.0 * total_steps * per_step
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 

@@ -21,6 +21,9 @@ class Request:
     rid: int
     arrival: float
     length: int
+    # decode: tokens to generate AFTER the first (prefill) token.  1 == the
+    # prefill-only seed behavior — the request terminates at TTFT.
+    out_len: int = 1
     # runtime bookkeeping
     batch_id: Optional[int] = None
     first_token_time: Optional[float] = None
@@ -50,6 +53,12 @@ class TraceConfig:
     # rebalance_interval), not here.
     ep_skew: float = 0.0
     ep_skew_mode: str = "zipf"
+    # Sampled decode lengths (ISSUE 9): tokens generated per request.  The
+    # defaults (mean 1, cv 0) keep every existing prefill-only path
+    # bit-identical — out_len == 1 means "terminate at TTFT".  out_len_cv is
+    # the coefficient of variation of a lognormal over the mean.
+    out_len_mean: float = 1.0
+    out_len_cv: float = 0.0
 
 
 def sample_lengths(n: int, tc: TraceConfig = TraceConfig()) -> np.ndarray:
@@ -57,6 +66,18 @@ def sample_lengths(n: int, tc: TraceConfig = TraceConfig()) -> np.ndarray:
     mu = math.log(tc.mean_len) - tc.sigma ** 2 / 2.0
     x = rng.lognormal(mu, tc.sigma, size=n)
     return np.clip(x, tc.min_len, tc.max_len).astype(np.int64)
+
+
+def sample_out_len(rid: int, tc: TraceConfig = TraceConfig()) -> int:
+    """Decode length for ONE request, deterministic per (seed, rid): the
+    same rid resamples the same out_len no matter how many requests exist
+    or in what order they are generated (sim/executor traces agree)."""
+    if tc.out_len_mean <= 1.0 or tc.out_len_cv <= 0.0:
+        return max(int(round(tc.out_len_mean)), 1)
+    rng = np.random.default_rng((tc.seed, 3371, rid))
+    sigma = math.sqrt(math.log(1.0 + tc.out_len_cv ** 2))
+    mu = math.log(tc.out_len_mean) - sigma ** 2 / 2.0
+    return max(int(round(rng.lognormal(mu, sigma))), 1)
 
 
 def generate_requests(rps: float, duration: float,
@@ -69,7 +90,9 @@ def generate_requests(rps: float, duration: float,
         t += rng.exponential(1.0 / rps)
         if t >= duration:
             break
-        out.append(Request(rid=rid, arrival=t, length=int(lengths[rid % len(lengths)])))
+        out.append(Request(rid=rid, arrival=t,
+                           length=int(lengths[rid % len(lengths)]),
+                           out_len=sample_out_len(rid, tc)))
         rid += 1
     return out
 

@@ -59,6 +59,19 @@ status; --save-stats records the status histogram and failover count.
                            the synthetic --ep-skew Zipf
   e.g. PYTHONPATH=src python -m repro.launch.serve --engine sim --rps 2 \
          --ep-skew 1.2 --replicate-hot 2 --rebalance-interval 5
+
+Prefill/decode disaggregation (ISSUE 9): `--mode pd` runs the full
+disaggregated lifecycle on EITHER engine — a dedicated prefill engine feeds
+a dedicated decode engine through the KV-handoff layer (core/kv.py), the
+`PDOrchestrator` streams per-token completions out of order, and every
+completion line carries tokens_out/TPOT.  Knobs: --out-len-mean/--out-len-cv
+(sampled decode lengths, deterministic per rid), --decode-width (decode
+batch slots), --colocated (baseline: no KV transfer cost, no handoffs
+logged).  The run FAILS unless every request reaches a definite status, ok
+requests produced exactly out_len tokens, and (disaggregated) at least one
+KV handoff happened — the CI pd-smoke gate.
+  e.g. PYTHONPATH=src python -m repro.launch.serve --engine executor \
+         --mode pd --requests 6 --out-len-mean 4 --out-len-cv 0.5
 """
 from __future__ import annotations
 
@@ -71,16 +84,19 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.cost_model import Deployment, Placement
+from repro.core.cost_model import V5E, Deployment, Placement
+from repro.core.decode import (DecodeExecutor, ExecDecodeEngine,
+                               SimDecodeEngine)
 from repro.core.engine import (ExecutorEngine, RouterStatsCollector,
                                SimEngine)
 from repro.core.executor import DisaggregatedExecutor
 from repro.core.faults import FaultPlan
+from repro.core.orchestrator import PDOrchestrator
 from repro.core.placement_control import POLICIES
 from repro.core.scheduler import LengthAwareBatcher
 from repro.core.simulator import SimConfig
 from repro.core.trace import Request, TraceClock, TraceConfig, \
-    generate_requests, sample_lengths
+    generate_requests, sample_lengths, sample_out_len
 from repro.models.lm import init_lm_params
 
 
@@ -302,6 +318,164 @@ def run_simulation(args) -> int:
     return 0
 
 
+def _pd_gate(results, reqs, kv_log, colocated) -> int:
+    """The pd-smoke contract: every request reached a definite status, every
+    ok request produced exactly its sampled out_len tokens, and the
+    disaggregated path performed at least one KV handoff."""
+    out_len = {r.rid: r.out_len for r in reqs}
+    rc = 0
+    if len(results) != len(reqs):
+        print(f"ERROR: {len(reqs) - len(results)} request(s) without a "
+              f"result", file=sys.stderr)
+        rc = 1
+    for r in results:
+        if r.status not in ("ok", "timeout", "shed", "failed"):
+            print(f"ERROR: rid={r.rid} indefinite status {r.status!r}",
+                  file=sys.stderr)
+            rc = 1
+        if r.status == "ok" and r.tokens_out != out_len[r.rid]:
+            print(f"ERROR: rid={r.rid} produced {r.tokens_out} tokens, "
+                  f"expected out_len={out_len[r.rid]}", file=sys.stderr)
+            rc = 1
+    if not colocated and kv_log.count < 1:
+        print("ERROR: disaggregated run performed no KV handoff",
+              file=sys.stderr)
+        rc = 1
+    return rc
+
+
+def _pd_summary(results, kv_log, colocated):
+    ok = [r for r in results if r.status == "ok"]
+    ttfts = np.array([r.ttft for r in ok]) if ok else np.array([0.0])
+    tpots = [r.tpot for r in ok if r.tpot is not None]
+    toks = sum(r.tokens_out for r in ok)
+    print(f"completed {len(ok)}/{len(results)} ok, {toks} tokens out; "
+          f"mean TTFT {ttfts.mean() * 1000:.0f} ms"
+          + (f", mean TPOT {np.mean(tpots) * 1000:.1f} ms" if tpots else ""))
+    if colocated:
+        print("kv handoffs: 0 (colocated baseline)")
+    else:
+        print(f"kv handoffs: {kv_log.count} "
+              f"({kv_log.bytes / 1e6:.2f} MB, "
+              f"{kv_log.seconds * 1000:.2f} ms wire time)")
+
+
+def run_pd(args) -> int:
+    """Disaggregated prefill/decode serving (`--mode pd`, ISSUE 9): a
+    dedicated prefill engine feeds a dedicated decode engine through the
+    KV-handoff layer, federated by the PDOrchestrator."""
+    out_mean = args.out_len_mean if args.out_len_mean is not None else 4.0
+    out_cv = args.out_len_cv if args.out_len_cv is not None else 0.5
+    label = "colocated baseline" if args.colocated else "disaggregated"
+
+    if args.engine == "sim":
+        cfg = get_config("deepseek_v32")
+        tc = TraceConfig(out_len_mean=out_mean, out_len_cv=out_cv)
+        sim = SimConfig(mode="asap", rps=args.rps, duration=args.duration,
+                        ep_skew=args.ep_skew, ep_skew_mode=args.ep_skew_mode,
+                        trace=tc)
+        width = args.decode_width if args.decode_width is not None else 32
+        pre = SimEngine(cfg, sim)
+        dec = SimDecodeEngine(cfg, pre._sim.cm,
+                              load_model=pre._sim.load_model, width=width)
+        orch = PDOrchestrator([pre], [dec], hw=pre._sim.cm.hw,
+                              colocated=args.colocated)
+        reqs = generate_requests(args.rps, args.duration, tc)
+        print(f"sim pd engine ({label}): rps={args.rps} "
+              f"duration={args.duration}s out_len~lognorm(mean={out_mean}, "
+              f"cv={out_cv}) decode_width={width}")
+        orch.submit_all(reqs)
+        results = orch.drain()
+        for r in sorted(results, key=lambda x: x.completion_time
+                        if x.completion_time is not None
+                        else x.first_token_time)[:12]:
+            print(f"  done rid={r.rid:<3d} tokens_out={r.tokens_out} "
+                  f"ttft={r.ttft:.3f}s"
+                  + (f" tpot={r.tpot * 1000:.1f}ms" if r.tpot else "")
+                  + f" status={r.status}")
+        _pd_summary(results, orch.kv_log, args.colocated)
+        return _pd_gate(results, reqs, orch.kv_log, args.colocated)
+
+    # --- real executor backend -------------------------------------------
+    cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_layers=3, num_experts=8, top_k=2)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_lm_params(key, cfg)
+    D = args.dp_groups if args.dp_groups is not None else 2
+    E = args.moe_devices if args.moe_devices is not None else 4
+    slots = args.decode_width if args.decode_width is not None else 4
+    max_len = 64  # decode cache rows: prompt + decode tail per request
+    tc = TraceConfig(mean_len=24, max_len=32, seed=args.seed,
+                     out_len_mean=out_mean, out_len_cv=out_cv)
+    rng = np.random.default_rng(args.seed + 1)
+    lengths = np.clip(sample_lengths(args.requests, tc), 8, 32)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(args.rps, 1e-9),
+                                         size=args.requests))
+    reqs = [Request(rid=i, arrival=float(arrivals[i]),
+                    length=int(lengths[i]),
+                    out_len=min(sample_out_len(i, tc),
+                                max_len - int(lengths[i])))
+            for i in range(args.requests)]
+    print(f"executor pd engine ({label}): D={D} prefill groups, E={E} MoE "
+          f"devices -> decode runtime with {slots} slots x {max_len} tokens; "
+          f"{args.requests} requests, out_lens "
+          f"{[r.out_len for r in reqs]}")
+    ex = DisaggregatedExecutor(params, cfg, D=D, E=E, emit_kv=True,
+                               moe_path=args.moe_path,
+                               moe_kernel=args.moe_kernel,
+                               idle_backoff=args.idle_backoff)
+    clock = TraceClock(speed=args.time_scale)
+    pre = ExecutorEngine(
+        ex, clock=clock, keep_kv=True,
+        batcher=LengthAwareBatcher(inflection=64, max_tokens=128,
+                                   exclusive_cutoff=10_000, max_wait=0.05))
+    rt = DecodeExecutor(params, cfg, slots=slots, max_len=max_len,
+                        clock=clock.now)
+    dec = ExecDecodeEngine(rt)
+    orch = PDOrchestrator([pre], [dec], hw=V5E, colocated=args.colocated)
+
+    t0 = time.time()
+    orch.submit_all(reqs)
+    results = []
+    while len(results) < len(reqs) and time.time() - t0 < 600:
+        for r in orch.poll():
+            results.append(r)
+            print(f"  done rid={r.rid:<3d} tokens_out={r.tokens_out} "
+                  f"ttft={r.ttft:.3f}s"
+                  + (f" tpot={r.tpot * 1000:.1f}ms" if r.tpot else "")
+                  + f" status={r.status}  [{_fmt_decomp(r.decomposition)}]")
+        time.sleep(0.01)
+    for r in orch.drain(timeout=120):
+        results.append(r)
+        print(f"  done rid={r.rid:<3d} tokens_out={r.tokens_out} "
+              f"ttft={r.ttft:.3f}s status={r.status}")
+    _pd_summary(results, orch.kv_log, args.colocated)
+    print(f"decode runtime: {rt.trace_counts['decode_step']} trace(s) of the "
+          f"jitted step (zero steady-state retraces == 1)")
+    rc = _pd_gate(results, reqs, orch.kv_log, args.colocated)
+    if args.save_stats:
+        ok = [r for r in results if r.status == "ok"]
+        tpots = [r.tpot for r in ok if r.tpot is not None]
+        with open(args.save_stats, "w") as f:
+            json.dump({
+                "engine": f"pd:{'colocated' if args.colocated else 'remote'}",
+                "requests": len(reqs),
+                "completed_ok": len(ok),
+                "tokens_out": int(sum(r.tokens_out for r in ok)),
+                "expected_tokens": int(sum(r.out_len for r in reqs)),
+                "mean_ttft": float(np.mean([r.ttft for r in ok]))
+                if ok else None,
+                "mean_tpot": float(np.mean(tpots)) if tpots else None,
+                "kv_handoffs": orch.kv_log.count,
+                "kv_bytes": orch.kv_log.bytes,
+                "decode_traces": rt.trace_counts["decode_step"],
+                "statuses": {r.rid: r.status for r in results},
+            }, f, indent=2)
+        print(f"pd stats saved to {args.save_stats}")
+    orch.close()
+    return rc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=["executor", "sim"], default="executor")
@@ -327,7 +501,23 @@ def main():
                     help="sim engine: drive expert load from measured router "
                          "stats JSON instead of synthetic --ep-skew")
     ap.add_argument("--mode", default="asap",
-                    choices=["asap", "default", "chunked"])
+                    choices=["asap", "default", "chunked", "pd"],
+                    help="sim baseline mode, or `pd` for the disaggregated "
+                         "prefill/decode lifecycle on EITHER engine "
+                         "(ISSUE 9)")
+    ap.add_argument("--out-len-mean", type=float, default=None,
+                    help="pd mode: mean sampled decode length (tokens, "
+                         "lognormal, deterministic per rid; default 4)")
+    ap.add_argument("--out-len-cv", type=float, default=None,
+                    help="pd mode: coefficient of variation of the sampled "
+                         "decode lengths (default 0.5)")
+    ap.add_argument("--decode-width", type=int, default=None,
+                    help="pd mode: decode batch width — sim continuous-batch "
+                         "cap (default 32) / executor cache slots (default 4)")
+    ap.add_argument("--colocated", action="store_true",
+                    help="pd mode: colocated baseline — prefill and decode "
+                         "share the device, KV transfer costs nothing and no "
+                         "handoff is logged")
     ap.add_argument("--ep-skew", type=float, default=0.0,
                     help="Zipf exponent of expert-routing skew (0 = uniform)")
     ap.add_argument("--ep-skew-mode", default="zipf",
@@ -444,6 +634,36 @@ def main():
               "--placement arms a control plane that is already at its "
               "target — no migration will ever fire; pass --placement/"
               "--replicate-hot to give it somewhere to go", file=sys.stderr)
+    # pd-mode flag validation (ISSUE 9 satellite): decode knobs without the
+    # mode that consumes them are configuration mistakes, not silent no-ops
+    if args.mode != "pd":
+        for flag, val in (("--out-len-mean", args.out_len_mean),
+                          ("--out-len-cv", args.out_len_cv),
+                          ("--decode-width", args.decode_width)):
+            if val is not None:
+                ap.error(f"{flag} requires --mode pd (only the "
+                         f"disaggregated lifecycle runs a decode stage)")
+        if args.colocated:
+            ap.error("--colocated requires --mode pd (it selects the "
+                     "colocated prefill+decode baseline)")
+    else:
+        if args.out_len_mean is not None and args.out_len_mean < 1.0:
+            ap.error("--out-len-mean must be >= 1 (every request emits at "
+                     "least the first token)")
+        if args.out_len_cv is not None and args.out_len_cv < 0.0:
+            ap.error("--out-len-cv must be >= 0")
+        if args.decode_width is not None and args.decode_width < 1:
+            ap.error("--decode-width must be >= 1")
+        for flag, val in (("--rebalance-interval", args.rebalance_interval),
+                          ("--failure-at", args.failure_at),
+                          ("--request-deadline", args.request_deadline),
+                          ("--max-queue", args.max_queue),
+                          ("--hedge-factor", args.hedge_factor)):
+            if val is not None:
+                ap.error(f"{flag} is not supported with --mode pd (the "
+                         f"disaggregated path runs the plain prefill "
+                         f"lifecycle; run those knobs without --mode pd)")
+        sys.exit(run_pd(args))
     if args.engine == "executor":
         sys.exit(run_executor(args))
     sys.exit(run_simulation(args))

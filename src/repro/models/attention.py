@@ -392,3 +392,38 @@ def attention_decode(p, x, cache: KVCache, cfg: ModelConfig, *,
     s = jnp.where(valid[None, None, None, :], s, NEG_INF)
     o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1).astype(vv.dtype), vv)
     return o.reshape(B, 1, cfg.q_dim) @ p["wo"], new_cache
+
+
+def attention_decode_ragged(p, x, k_cache, v_cache, lengths,
+                            cfg: ModelConfig):
+    """One-token decode over a RAGGED batch: per-ROW cache lengths (ISSUE 9).
+
+    Continuous batching puts requests of different ages in one step, so the
+    scalar `KVCache.length` is not enough — each row appends at its own
+    `lengths[b]` slot and attends over its own prefix.  x: [B, 1, d];
+    k_cache/v_cache: [B, S_max, kvh, hd]; lengths: [B] int32.  Returns
+    (out [B, 1, d_model->wo'd], new_k, new_v); the caller advances lengths.
+
+    Rows past their sampled decode length still compute (shapes are static —
+    zero steady-state retraces); the runtime masks their writes out by NOT
+    advancing `lengths`, so a stale slot is simply overwritten on re-use.
+    """
+    B = x.shape[0]
+    size = k_cache.shape[1]
+    pos = lengths[:, None]  # RoPE position of the new token, per row
+    q, k, v = _project_qkv(p, x, x, cfg, pos, pos)
+    slot = jnp.minimum(lengths, size - 1)
+    ck = k_cache.at[jnp.arange(B), slot].set(k[:, 0])
+    cv = v_cache.at[jnp.arange(B), slot].set(v[:, 0])
+
+    kk = _expand_kv(ck, cfg.num_heads)
+    vv = _expand_kv(cv, cfg.num_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32)
+    s = s * (cfg.head_dim ** -0.5)
+    if cfg.logit_softcap is not None:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    idx = jnp.arange(size)
+    valid = idx[None, :] <= jnp.minimum(lengths, size - 1)[:, None]  # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1).astype(vv.dtype), vv)
+    return o.reshape(B, 1, cfg.q_dim) @ p["wo"], ck, cv

@@ -120,6 +120,26 @@ def decoder_block_decode(p, h, cache, cfg: ModelConfig, *,
     return h + ffn_forward(p["ffn"], x, cfg), cache
 
 
+def decoder_block_decode_ragged(p, h, k_cache, v_cache, lengths,
+                                cfg: ModelConfig, *, moe: bool = False):
+    """One-token decode over a ragged continuous batch (ISSUE 9).
+
+    h: [B, 1, d]; k_cache/v_cache: [B, S_max, kvh, hd]; lengths: [B] int32
+    per-row cache lengths.  Returns (h, new_k, new_v); the caller advances
+    `lengths` for active rows only."""
+    from repro.models.attention import attention_decode_ragged
+    B = h.shape[0]
+    a, ck, cv = attention_decode_ragged(
+        p["attn"], apply_norm(h, p["ln_attn"], cfg), k_cache, v_cache,
+        lengths, cfg)
+    h = h + a
+    x = apply_norm(h, p["ln_ffn"], cfg)
+    if moe:
+        y, _ = moe_forward(p["ffn"], x.reshape(B, -1), cfg, mode="capacity")
+        return h + y.reshape(B, 1, -1), ck, cv
+    return h + ffn_forward(p["ffn"], x, cfg), ck, cv
+
+
 # ---------------------------------------------------------------------------
 # Encoder block (bidirectional self-attention)
 # ---------------------------------------------------------------------------
