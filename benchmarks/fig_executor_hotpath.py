@@ -15,6 +15,17 @@ contract on both paths under all three placement policies.
 Acceptance (ISSUE 3): fused >= 3x eager tokens/s, zero steady-state
 retraces, contract passes everywhere.  JSON lands in
 results/fig_executor_hotpath.json so CI tracks the perf trajectory.
+
+ISSUE 10 adds the LIGHT-LOAD arm: many small DP groups (D=8) feeding few MoE
+devices (E=2) with tiny regions, so per-launch fixed cost (dispatch + pack)
+dominates compute — exactly the regime the cross-region continuous batcher
+targets.  Compares per-region (moe_batch_window=0) vs batched
+(moe_batch_window>0) tokens/s on the SAME geometry with interleaved
+best-of-N per arm (one policy for both, so thread jitter cancels), and
+reports regions/launch, capacity-slot occupancy, and bucket hit/miss counts.
+CI gate (.github/workflows/ci.yml hotpath-bench): batched must stay within
+5% of per-region; target is batched >= 1.3x.  Occupancy telemetry lands in
+results/superkernel_occupancy.json for the CI artifact.
 """
 from __future__ import annotations
 
@@ -34,6 +45,8 @@ from repro.models.lm import init_lm_params, lm_backbone
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results",
                    "fig_executor_hotpath.json")
+OCC_OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "superkernel_occupancy.json")
 
 PLACEMENTS = [("round_robin", Placement()),
               ("greedy_balanced", Placement("greedy_balanced")),
@@ -76,6 +89,70 @@ def _measure(params, cfg, jobs, D, E, **kw):
     return tokens / wall, retraces, done
 
 
+def _measure_light(params, cfg, jobs, D, E, S, **kw):
+    """Light-load variant of `_measure`: pre-traces the whole power-of-two
+    capacity-bucket ladder up to the max merged drain (D regions) before the
+    warmup run, so the batched arm's data-dependent merge sizes never pay a
+    mid-run jit compile (which would turn a perf comparison into a compile
+    benchmark).  Returns launch telemetry for the TIMED run only."""
+    ex = DisaggregatedExecutor(params, cfg, D=D, E=E, moe_kernel="ref", **kw)
+    ex.prewarm_buckets(D * S * cfg.top_k)
+    ex.run(_per_group(jobs[:2 * D], D))  # warmup: jit attention/router steps
+    warm = sum(ex.trace_counts.values())
+    l0, r0 = ex.moe_launches.sum(), ex.moe_launch_regions.sum()
+    rows0, slots0 = ex.moe_launch_rows.sum(), ex.moe_launch_slots.sum()
+    t0 = time.perf_counter()
+    done = ex.run(_per_group(jobs, D))
+    wall = time.perf_counter() - t0
+    retraces = sum(ex.trace_counts.values()) - warm
+    tokens = sum(int(np.prod(np.asarray(j.tokens).shape)) for j in done)
+    launches = ex.moe_launches.sum() - l0
+    tele = dict(
+        launches=int(launches),
+        regions_per_launch=float((ex.moe_launch_regions.sum() - r0)
+                                 / max(launches, 1.0)),
+        occupancy=float((ex.moe_launch_rows.sum() - rows0)
+                        / max(ex.moe_launch_slots.sum() - slots0, 1.0)),
+        bucket_hits=int(ex.bucket_hits.sum()),
+        bucket_misses=int(ex.bucket_misses.sum()))
+    ex.close()
+    return tokens / wall, retraces, done, tele
+
+
+def _run_batching_arm(quick: bool = False) -> dict:
+    """Per-region vs cross-region-batched super-kernel at low per-group RPS.
+
+    Small-compute geometry (d_ff=64, top_k=2, B=1, S=8) over D=8 groups and
+    E=2 MoE devices: each region carries ~8 assignment rows per device, so
+    the per-region path pays D dispatch+pack+launch round trips per layer
+    where the batcher pays ~D/5.  Interleaved best-of-N with the same policy
+    on both arms (mirrors the best-of-2 loop in `run`)."""
+    cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_layers=3, num_experts=8, top_k=2, d_ff=64)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    D, E, S, window = 8, 2, 8, 0.02
+    jobs = _jobs(cfg, 24 if quick else 32, B=1, S=S)
+
+    arms = [("per_region", {}), ("batched", dict(moe_batch_window=window))]
+    tput = {name: 0.0 for name, _ in arms}
+    rt, tele, done_by = {}, {}, {}
+    for _ in range(3):  # interleaved: jitter hits both arms alike
+        for name, kw in arms:
+            tps, retraces, done, t = _measure_light(
+                params, cfg, jobs, D, E, S, **kw)
+            if tps > tput[name]:
+                tput[name], rt[name], tele[name] = tps, retraces, t
+                done_by[name] = done
+    for name in done_by:
+        assert _contract(done_by[name], params, cfg), \
+            f"batching arm {name}: contract violation"
+    ratio = tput["batched"] / max(tput["per_region"], 1e-9)
+    return dict(tokens_per_s=tput, ratio_batched_vs_per_region=ratio,
+                steady_state_retraces=rt, telemetry=tele,
+                moe_batch_window=window, D=D, E=E, B=1, S=S,
+                jobs=len(jobs), d_ff=cfg.d_ff, top_k=cfg.top_k)
+
+
 def _contract(done, params, cfg, tol=5e-5) -> bool:
     return all(np.allclose(
         np.asarray(j.result),
@@ -110,10 +187,14 @@ def run(quick: bool = False) -> dict:
             done = ex.run(_per_group(small, D))
             contract[f"{path}|{pname}"] = _contract(done, params, cfg)
 
+    # --- ISSUE 10: cross-region continuous batching, light-load arm -------
+    batching = _run_batching_arm(quick)
+
     return dict(tokens_per_s=tput, steady_state_retraces=retraces,
                 speedup_fused_vs_eager=speedup, contract=contract,
                 zero_retraces=retraces.get("fused/pallas", -1) == 0
                 and retraces.get("fused/ref", -1) == 0,
+                batching=batching,
                 jobs=len(jobs), D=D, E=E, layers=cfg.num_layers,
                 experts=cfg.num_experts)
 
@@ -130,11 +211,40 @@ def main(quick: bool = False):
     bad = [k for k, ok in r["contract"].items() if not ok]
     print(f"dense-reference contract over {len(r['contract'])} "
           f"path x placement combos: {'PASS' if not bad else f'FAIL {bad}'}")
+
+    b = r["batching"]
+    tele = b["telemetry"]["batched"]
+    print(f"\n== Light-load arm: cross-region batching "
+          f"(D={b['D']}, E={b['E']}, window={b['moe_batch_window']}s) ==")
+    rows = [(name, f"{b['tokens_per_s'][name]:.0f}",
+             b["steady_state_retraces"][name],
+             f"{b['telemetry'][name]['regions_per_launch']:.2f}",
+             f"{b['telemetry'][name]['occupancy']:.0%}")
+            for name in ("per_region", "batched")]
+    print(fmt_table(rows, ["arm", "tokens/s", "retraces", "regions/launch",
+                           "occupancy"]))
+    print(f"batched vs per-region: {b['ratio_batched_vs_per_region']:.2f}x "
+          f"(target >= 1.3x, CI gate >= 0.95x)   "
+          f"buckets: {tele['bucket_hits']} hits / "
+          f"{tele['bucket_misses']} misses")
+
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(r, f, indent=2, sort_keys=True)
-    print(f"wrote {os.path.relpath(OUT)}")
+    with open(OCC_OUT, "w") as f:
+        json.dump(dict(arms=b["telemetry"],
+                       moe_batch_window=b["moe_batch_window"],
+                       D=b["D"], E=b["E"],
+                       ratio_batched_vs_per_region=b[
+                           "ratio_batched_vs_per_region"]),
+                  f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.relpath(OUT)} and {os.path.relpath(OCC_OUT)}")
     assert not bad, f"contract failures: {bad}"
+    assert b["steady_state_retraces"]["batched"] == 0, \
+        "batched arm retraced in steady state"
+    assert b["ratio_batched_vs_per_region"] >= 0.95, \
+        (f"batched path regressed below the 5% gate: "
+         f"{b['ratio_batched_vs_per_region']:.2f}x")
     return r
 
 

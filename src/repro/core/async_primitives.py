@@ -276,6 +276,66 @@ class MoEDeviceBuffer:
                     return None
                 self._cv.wait(wait)
 
+    def recv_many(self, max_regions: Optional[int] = None,
+                  timeout: Optional[float] = None,
+                  stop: Optional[threading.Event] = None,
+                  admit: Optional[Callable[[], bool]] = None,
+                  on_take: Optional[Callable[[int, List[DispatchPayload]],
+                                             None]] = None):
+        """Atomic MULTI-take: drain every currently-complete region (up to
+        `max_regions`) under ONE cv acquisition (ISSUE 10).  The continuous
+        batcher's primitive — N sequential `recv_any` calls would re-acquire
+        the cv N times and leave N-1 windows in which a supervisor fence or a
+        quiesce could interleave mid-drain; here the admission check, every
+        row migration, every `on_take` publication, and every flag clear
+        happen in one critical section, so the batch the worker serves is
+        exactly the batch it published.
+
+          max_regions  cap on regions taken this call (None = all D).
+          admit        worker-generation fence, evaluated under the cv BEFORE
+                       any take; False ⇒ fenced out, returns None.
+          on_take      runs under the cv per region, AFTER its rows migrate
+                       and BEFORE its flags clear — same publication contract
+                       as `recv_any` (no observable taken-but-unpublished
+                       gap), invoked once per region in take order.
+
+        Blocks like `recv_any` while NOTHING is ready; once at least one
+        region is complete it takes all complete regions WITHOUT waiting for
+        more (accumulation windows are the caller's policy, layered on
+        timeout=0 re-drains).  Returns a non-empty list of (region, rows)
+        pairs, or None on timeout/stop/fence."""
+        cap = self.D if max_regions is None else max(1, min(max_regions, self.D))
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if admit is not None and not admit():
+                    return None  # fenced out by a failover
+                taken: List[Tuple[int, List[DispatchPayload]]] = []
+                for i in range(self.D):
+                    if len(taken) >= cap:
+                        break
+                    if self.flags[i].full:
+                        # race-ok: region complete and cv held — identical
+                        # handshake to recv_any, repeated per region inside
+                        # the same critical section
+                        row = self.rows[i]
+                        out = list(row)
+                        for j in range(self.T):
+                            row[j] = None
+                        if on_take is not None:
+                            on_take(i, out)
+                        self.flags[i].clear()  # re-entrant: shares this cv
+                        taken.append((i, out))
+                if taken:
+                    return taken
+                if stop is not None and stop.is_set():
+                    return None
+                wait = 0.05 if timeout is None \
+                    else min(0.05, deadline - time.monotonic())
+                if wait <= 0 and timeout is not None:
+                    return None
+                self._cv.wait(wait)
+
     def fenced(self, fn: Callable[[], Any]) -> Any:
         """Run `fn` under the buffer's shared cv: the supervisor bumps the
         worker-generation fence through here, atomically w.r.t. every

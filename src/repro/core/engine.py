@@ -180,6 +180,20 @@ class EngineStats:
     statuses: Optional[Dict[str, int]] = None  # terminal status histogram
     hedges_issued: int = 0  # duplicate batches launched for overdue ones
     hedge_wins: int = 0  # hedges that finished before their primary
+    # cross-region continuous batching + launch telemetry (ISSUE 10)
+    moe_launches: int = 0  # jitted super-kernel launches issued
+    moe_batch_regions: float = 0.0  # regions served by those launches
+    moe_batch_occupancy: float = 0.0  # launched rows / capacity slots
+    bucket_hits: int = 0  # launches reusing an already-traced C bucket
+    bucket_misses: int = 0  # first-sighting launches (one jit trace each);
+    # growth AFTER warmup is a retrace regression — alert on it
+
+    def regions_per_launch(self) -> float:
+        """Mean regions merged per super-kernel launch (1.0 = the
+        per-region baseline; > 1 means the continuous batcher is packing)."""
+        if self.moe_launches <= 0:
+            return 0.0
+        return float(self.moe_batch_regions / self.moe_launches)
 
     def moe_imbalance(self) -> float:
         u = self.moe_device_util
@@ -1056,7 +1070,14 @@ class ExecutorEngine(ServingEngine):
             migrations=len(self.ex.migrations),
             migrated_bytes=self.ex.migrated_bytes,
             failovers=self.ex.failovers,
-            statuses=statuses, hedges_issued=hedges, hedge_wins=wins)
+            statuses=statuses, hedges_issued=hedges, hedge_wins=wins,
+            moe_launches=int(self.ex.moe_launches.sum()),
+            moe_batch_regions=float(self.ex.moe_launch_regions.sum()),
+            moe_batch_occupancy=float(
+                self.ex.moe_launch_rows.sum()
+                / max(self.ex.moe_launch_slots.sum(), 1.0)),
+            bucket_hits=int(self.ex.bucket_hits.sum()),
+            bucket_misses=int(self.ex.bucket_misses.sum()))
 
     def close(self):
         self._stop.set()

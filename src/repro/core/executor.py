@@ -84,8 +84,10 @@ from repro.core.async_primitives import (AbortedError, AttnDeviceBuffer,
                                          MoEDeviceBuffer)
 from repro.core.cost_model import Placement
 from repro.core.faults import FaultInjector, FaultPlan, InjectedFault
-from repro.kernels.super_gmm.ops import (pack_capacity, super_moe_ffn,
-                                         unpack_capacity)
+from repro.kernels.super_gmm.ops import (pack_capacity, pack_capacity_multi,
+                                         round_capacity, super_moe_ffn,
+                                         unpack_capacity,
+                                         unpack_capacity_multi)
 from repro.models.attention import attention_forward, attention_prefill
 from repro.models.common import ModelConfig, act_fn, apply_norm
 from repro.models.moe import gated_ffn, router_topk
@@ -134,11 +136,18 @@ class DisaggregatedExecutor:
                  max_worker_restarts: int = 3,
                  region_timeout: float = 60.0,
                  max_job_retries: int = 2,
-                 emit_kv: bool = False):
+                 emit_kv: bool = False,
+                 moe_batch_window: float = 0.0,
+                 moe_batch_max_tokens: Optional[int] = None):
         assert cfg.family == "moe", "executor drives MoE models"
         assert moe_path in ("fused", "eager"), moe_path
         assert moe_kernel in ("pallas", "ref"), moe_kernel
         assert combine_path in ("segsum", "host"), combine_path
+        assert moe_batch_window >= 0.0, moe_batch_window
+        assert not (moe_batch_window > 0 and moe_path == "eager"), \
+            "cross-region batching merges regions into ONE capacity buffer " \
+            "— it requires the fused super-kernel path"
+        assert moe_batch_max_tokens is None or moe_batch_max_tokens >= 1
         assert not (emit_kv and moe_path == "eager"), \
             "emit_kv requires the fused attention step (the KV cache is " \
             "exported by the jitted attention_prefill path)"
@@ -154,6 +163,15 @@ class DisaggregatedExecutor:
         self.combine_path = combine_path
         self.emit_kv = emit_kv
         self.idle_backoff = idle_backoff  # max CV wait in the MoE workers
+        # --- cross-region continuous batching (ISSUE 10) ------------------
+        # window > 0 turns each MoE worker into a continuous batcher: a
+        # drain takes EVERY pending region (recv_many) and keeps
+        # accumulating arrivals for up to `moe_batch_window` WALL seconds
+        # (bounded by `moe_batch_max_tokens` merged rows), then launches
+        # the super kernel layer-major over the merged capacity buffer.
+        # window == 0 preserves the per-region recv_any path bit-exactly.
+        self.moe_batch_window = float(moe_batch_window)
+        self.moe_batch_max_tokens = moe_batch_max_tokens
         self.stage = params["stages"][0]
         # --- replica-aware expert placement (ROADMAP item d) --------------
         # The SAME Placement.table that drives the simulator's
@@ -229,11 +247,14 @@ class DisaggregatedExecutor:
         # one iteration — the next recv_any re-validates under the cv)
         self._moe_gen = [0] * E
         # guarded_by: protocol
-        # (the region worker e took but has not combined yet, set under the
-        # buffer cv by recv_any's on_take and cleared by the worker BEFORE
-        # its combine_send; after the generation fence the supervisor is the
-        # cell's only reader/writer — "still set" proves the combine never
-        # happened, so the failover re-serve is exactly-once)
+        # (the regions worker e took but has not combined yet — a tuple of
+        # (region, rows) entries (the continuous batcher may hold several;
+        # per-region mode at most one), appended under the buffer cv by the
+        # recv_any/recv_many on_take and with each entry removed by the
+        # worker BEFORE that region's combine_send; after the generation
+        # fence the supervisor is the cell's only reader/writer — "entry
+        # still present" proves its combine never happened, so the failover
+        # re-serve is exactly-once)
         self._moe_current: List[Optional[tuple]] = [None] * E
         # guarded_by: protocol
         # (written once by dying worker e, read by the supervisor after it
@@ -283,6 +304,28 @@ class DisaggregatedExecutor:
         # EngineStats reads after join() or tolerates a slightly stale sum)
         self.moe_busy = np.zeros(E)
         self.group_busy = np.zeros(D)  # guarded_by: protocol
+        # --- super-kernel launch telemetry (ISSUE 10) ---------------------
+        # All per-device cells below follow the moe_busy ownership rule:
+        # only worker e (or the supervisor, after fencing e out) writes
+        # device e's cell; readers (EngineStats) tolerate a stale sum.
+        self.moe_launches = np.zeros(E)  # guarded_by: protocol
+        # (single-writer per element: worker e / post-fence supervisor)
+        self.moe_launch_regions = np.zeros(E)  # guarded_by: protocol
+        # (single-writer per element — regions merged across all launches)
+        self.moe_launch_rows = np.zeros(E)  # guarded_by: protocol
+        # (single-writer per element — real token rows launched)
+        self.moe_launch_slots = np.zeros(E)  # guarded_by: protocol
+        # (single-writer per element — n_e*C capacity slots launched; rows/
+        # slots is the occupancy the batcher exists to lift)
+        self.bucket_hits = np.zeros(E)  # guarded_by: protocol
+        # (single-writer per element — launches whose capacity bucket C was
+        # already traced on this device: the zero-retrace steady state)
+        self.bucket_misses = np.zeros(E)  # guarded_by: protocol
+        # (single-writer per element — first sighting of a bucket: a jit
+        # trace; a growing count in steady state is a retrace regression)
+        self._seen_buckets: List[set] = [set() for _ in range(E)]
+        # guarded_by: protocol
+        # (single-writer per element: same owner as bucket_hits/misses)
 
 
     def _logev(self, *ev):
@@ -588,14 +631,70 @@ class DisaggregatedExecutor:
 
         return jax.jit(step)
 
+    def prewarm_buckets(self, max_rows: int):
+        """Trace the fused super-kernel for EVERY capacity bucket up to
+        `round_capacity(max_rows)` on every device (ISSUE 10).  Call before
+        serving (single-threaded: the caller owns all cells until workers
+        start): the continuous batcher's merged drains have data-dependent
+        bucket sizes, so without pre-warming the first k-way merge of a new
+        size pays a jit compile mid-serve.  After this, every launch whose
+        merged rows stay under `max_rows` lands in an already-traced bucket —
+        zero steady-state retraces by construction, visible as
+        bucket_hits == launches in EngineStats."""
+        assert self.moe_path == "fused", "prewarm traces the fused step"
+        top = round_capacity(max(int(max_rows), 1))
+        lid = jnp.asarray([0], jnp.int32)
+        for e in range(self.E):
+            if self._moe_step[e] is None:
+                continue
+            n_e = len(self.dev_experts[e])
+            C = round_capacity(1)
+            while C <= top:
+                xb = jnp.zeros((n_e, C, self.cfg.d_model), jnp.float32)
+                self._moe_step[e](lid, xb).block_until_ready()
+                self._seen_buckets[e].add(C)
+                C *= 2
+
+    def _record_launch(self, e: int, C: int, n_regions: int, n_rows: int):
+        """Super-kernel launch telemetry (ISSUE 10).  Same ownership rule as
+        moe_busy: the caller is worker e or the post-fence supervisor — the
+        cell's single writer at that moment."""
+        n_e = len(self.dev_experts[e])
+        self.moe_launches[e] += 1  # race-ok: single-writer (see _record_launch contract)
+        self.moe_launch_regions[e] += n_regions  # race-ok: single-writer
+        self.moe_launch_rows[e] += n_rows  # race-ok: single-writer
+        self.moe_launch_slots[e] += n_e * C  # race-ok: single-writer
+        seen = self._seen_buckets[e]
+        if C in seen:
+            self.bucket_hits[e] += 1  # race-ok: single-writer
+        else:
+            seen.add(C)
+            self.bucket_misses[e] += 1  # race-ok: single-writer
+
     def _expert_ffn_fused(self, e: int, layer: int, tokens: np.ndarray,
                           eids: np.ndarray) -> np.ndarray:
         """Capacity-buffer pack -> one super-kernel call -> unpack."""
         n_e = len(self.dev_experts[e])
-        xb, order, slots, _ = pack_capacity(tokens, eids, n_e)
+        xb, order, slots, C = pack_capacity(tokens, eids, n_e)
+        self._record_launch(e, C, 1, len(tokens))
         yb = self._moe_step[e](jnp.asarray([layer], jnp.int32),
                                jnp.asarray(xb))
         return unpack_capacity(np.asarray(yb), order, slots, len(tokens))
+
+    def _expert_ffn_fused_multi(self, e: int, layer: int, token_list,
+                                eid_list) -> List[np.ndarray]:
+        """ONE super-kernel launch over several regions' rows merged into a
+        shared capacity buffer (the continuous batcher's serve step).
+        Returns one [n_r, d] output block per region, in input order — row
+        provenance comes back through `bounds`, so each region's outputs
+        scatter to its OWN combine path."""
+        n_e = len(self.dev_experts[e])
+        xb, order, slots, C, bounds = pack_capacity_multi(
+            token_list, eid_list, n_e)
+        self._record_launch(e, C, len(token_list), int(bounds[-1]))
+        yb = self._moe_step[e](jnp.asarray([layer], jnp.int32),
+                               jnp.asarray(xb))
+        return unpack_capacity_multi(np.asarray(yb), order, slots, bounds)
 
     def _expert_ffn_eager(self, e: int, layer: int, tokens: np.ndarray,
                           eids: np.ndarray) -> np.ndarray:
@@ -631,18 +730,153 @@ class DisaggregatedExecutor:
                 self._heartbeat[e] = self.clock()  # race-ok: single-writer (worker e stamps its own cell)
             time.sleep(0.001)
 
+    def _drain_window(self, e: int, gen: int, buf, on_take):
+        """Continuous-batching drain (ISSUE 10): block until the first
+        complete region(s) arrive — ONE atomic multi-take — then keep
+        accumulating arrivals until the window closes, every one of the D
+        regions is on board, or the merged row count reaches
+        `moe_batch_max_tokens`.  The window is WALL seconds (like
+        idle_backoff): it bounds added queueing latency, not clock-scaled
+        simulated time.
+
+        Accumulation is GAP-based inside the window: each extra wait is at
+        most a quarter-window, and the first empty gap closes the batch.
+        Waiting out the whole window for stragglers is self-defeating — the
+        device's pending combines are what release the lagging groups' next
+        regions in the first place, so a long idle wait here can stall the
+        very arrivals it hopes for (the MegaScale-style ping-pong coupling).
+
+        Returns the ordered (region, rows) list, or None on timeout (nothing
+        pending), stop, or fence — on a fence, every taken entry is still
+        published in `_moe_current[e]`, so the supervisor's orphan re-serve
+        covers the partial drain exactly once."""
+        got = buf.recv_many(
+            timeout=self.idle_backoff, stop=self.stop,
+            admit=lambda: self._moe_gen[e] == gen,  # race-ok: evaluated under the buffer cv by recv_many — atomic w.r.t. the fence bump
+            on_take=on_take)
+        if got is None:
+            return None
+        entries = list(got)
+
+        def nrows(es):
+            return sum(sum(len(r.tokens) for r in rows) for _, rows in es)
+
+        cap = self.moe_batch_max_tokens
+        total = nrows(entries)
+        gap = self.moe_batch_window / 4.0
+        deadline = time.monotonic() + self.moe_batch_window
+        while len(entries) < self.D and (cap is None or total < cap):
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            more = buf.recv_many(
+                max_regions=self.D - len(entries),
+                timeout=min(remaining, gap), stop=self.stop,
+                admit=lambda: self._moe_gen[e] == gen,  # race-ok: evaluated under the buffer cv by recv_many — atomic w.r.t. the fence bump
+                on_take=on_take)
+            if more is None:
+                if self.stop.is_set() or self._moe_gen[e] != gen:  # race-ok: fence read — ownership of the taken entries already transferred to the supervisor with the fence
+                    return None
+                break  # an empty gap: no region is imminent — launch now
+            entries.extend(more)
+            total += nrows(more)
+        return entries
+
+    def _chunk_by_row_cap(self, entries):
+        """Split a drain into sub-batches of <= `moe_batch_max_tokens` merged
+        rows each (>= 1 region per chunk, so an oversized single region still
+        serves).  The cap bounds the size of ONE merged launch; the first
+        atomic multi-take can exceed it when several regions were already
+        pending, so the bound is enforced here rather than by refusing the
+        take (taken regions are already published and must be served)."""
+        cap = self.moe_batch_max_tokens
+        if cap is None:
+            return [entries]
+        chunks, chunk, rows = [], [], 0
+        for ent in entries:
+            n = sum(len(r.tokens) for r in ent[1])
+            if chunk and rows + n > cap:
+                chunks.append(chunk)
+                chunk, rows = [], 0
+            chunk.append(ent)
+            rows += n
+        if chunk:
+            chunks.append(chunk)
+        return chunks
+
+    def _serve_batch(self, e: int, gen: int, entries) -> None:
+        """Serve one merged drain: group regions by layer id and launch the
+        super kernel ONCE per distinct layer over the merged capacity buffer
+        (layer-major — at most L launches per drain, vs one per region
+        before), then route every region's output block through the
+        per-region exactly-once combine protocol: clear ITS `_moe_current`
+        entry BEFORE its combine_send and re-check the fence per region, so
+        a mid-batch failover re-serves exactly the regions whose combine
+        never happened."""
+        prep = []  # (region, layer, slot, tokens, token_ids, eids)
+        for i, rows in entries:
+            prep.append((i, rows[0].layer, rows[0].slot,
+                         np.concatenate([r.tokens for r in rows], 0),
+                         np.concatenate([r.token_ids for r in rows], 0),
+                         np.concatenate([r.expert_ids for r in rows], 0)))
+        outs: Dict[int, Optional[np.ndarray]] = {}
+        by_layer: Dict[int, List[int]] = {}
+        for idx, p in enumerate(prep):
+            if len(p[3]):
+                by_layer.setdefault(p[1], []).append(idx)
+            else:
+                outs[idx] = None  # empty region: combine an empty marker
+        for layer in sorted(by_layer):
+            idxs = by_layer[layer]
+            t0 = self.clock()
+            blocks = self._expert_ffn_fused_multi(
+                e, layer, [prep[j][3] for j in idxs],
+                [prep[j][5] for j in idxs])
+            self.moe_busy[e] += self.clock() - t0  # race-ok: single-writer (worker e accumulates its own cell)
+            for j, blk in zip(idxs, blocks):
+                outs[j] = blk
+        for idx, (i, layer, slot, tokens, token_ids, eids) in enumerate(prep):
+            self._logev("moe", e, i, slot, layer, len(tokens))
+            # clear THIS region's entry BEFORE its combine attempt — same
+            # proof obligation as the per-region path: "entry still
+            # published" ⇒ the combine never happened ⇒ the failover
+            # re-serve is exactly-once
+            cur = self._moe_current[e]  # race-ok: single-writer until fenced (worker e)
+            rest = tuple(c for c in (cur or ()) if c[0] != i)
+            self._moe_current[e] = rest or None  # race-ok: single-writer until fenced; cleared before combine_send by protocol
+            inj = self.fault_injector
+            if inj is not None and inj.should_drop_combine(e):
+                self._logev("drop-combine", e, i, slot, layer)
+                continue
+            # race-ok: fence re-check — fenced out mid-batch means the
+            # failover already re-served the still-published regions;
+            # sending a stale combine here could corrupt a LATER
+            # batch-layer's segment
+            if self._moe_gen[e] != gen:
+                continue
+            self.attn_bufs[i][slot].combine_send(
+                e, CombinePayload(layer=layer, token_ids=token_ids,
+                                  expert_ids=eids, outputs=outs[idx]),
+                stop=self.stop)
+        self._moe_active[e] = False  # race-ok: single-writer (worker e); the batch's combines happened-before
+
     def _moe_worker(self, e: int, gen: int = 0):
         buf = self.moe_bufs[e]
         ffn = self._expert_ffn_fused if self.moe_path == "fused" \
             else self._expert_ffn_eager
+        batched = self.moe_batch_window > 0
 
         def on_take(i, rows):
             # runs UNDER the buffer cv, after the rows migrated and before
-            # the flags clear (recv_any): in-flight state is published with
-            # no gap the quiesce poll or the supervisor could observe.
+            # the flags clear (recv_any/recv_many): in-flight state is
+            # published with no gap the quiesce poll or the supervisor could
+            # observe.  APPENDS an entry: the continuous batcher holds
+            # several taken-not-yet-combined regions at once (per-region
+            # mode never sees more than one).
             # race-ok: single-writer (worker e); set before flags clear so the quiesce poll never sees a gap
             self._moe_active[e] = True
-            self._moe_current[e] = (i, rows)  # race-ok: published under the buffer cv; the supervisor reads it only after fencing this worker out
+            cur = self._moe_current[e]  # race-ok: single-writer until fenced (worker e)
+            self._moe_current[e] = (cur or ()) + ((i, rows),)  # race-ok: published under the buffer cv; the supervisor reads it only after fencing this worker out
 
         try:
             while True:
@@ -661,6 +895,16 @@ class DisaggregatedExecutor:
                                 f"(scheduled t={ev.t})")
                         self._injected_sleep(e, gen, ev)
                         continue
+                if batched:
+                    entries = self._drain_window(e, gen, buf, on_take)
+                    if entries is None:
+                        if self.stop.is_set():
+                            return
+                        continue  # timeout (nothing pending) or fence —
+                        # the loop top re-validates the fence
+                    for chunk in self._chunk_by_row_cap(entries):
+                        self._serve_batch(e, gen, chunk)
+                    continue
                 # block on "any region complete" + take it in ONE atomic
                 # step (the split wait_any/dispatch_recv would race the
                 # supervisor's failover evacuation — ISSUE 8)
@@ -889,7 +1133,7 @@ class DisaggregatedExecutor:
                 # region-g take invisible here would still have shown set
                 # flags above; a stale non-None read just polls again
                 cur = self._moe_current[e]
-                if cur is not None and cur[0] == g:
+                if cur is not None and any(c[0] == g for c in cur):
                     busy = True
                     break
             if not busy:
@@ -1143,21 +1387,23 @@ class DisaggregatedExecutor:
         exactly like a worker's."""
         served = 0
         # race-ok: worker e is fenced out — the supervisor owns the cell.
-        # "_moe_current still set" is the proof the worker's combine for
-        # this region never happened (it clears BEFORE combine_send), so
-        # re-serving here is exactly-once.
+        # An "entry still present" is the proof the worker's combine for
+        # that region never happened (each entry is removed BEFORE its
+        # combine_send), so re-serving every remaining entry here is
+        # exactly-once — a fenced continuous batcher may leave SEVERAL
+        # (its partial drain); serve them all.
         cur = self._moe_current[e]
         if cur is not None:
-            i, rows = cur
-            self._serve_region(e, i, rows)
+            for i, rows in cur:
+                self._serve_region(e, i, rows)
+                served += 1
             self._moe_current[e] = None  # race-ok: supervisor-owned after the fence
-            served += 1
         buf = self.moe_bufs[e]
 
         def on_take(i, rows):
             # race-ok: published under the buffer cv; supervisor-owned
             # after the fence (scrub protocol: set before flags clear)
-            self._moe_current[e] = (i, rows)
+            self._moe_current[e] = ((i, rows),)
 
         while True:
             got = buf.recv_any(timeout=0, on_take=on_take)

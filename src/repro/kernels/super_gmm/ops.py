@@ -9,12 +9,13 @@ layer id is scan data, and XLA emits ONE kernel for all layers.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.super_gmm import tuning
 from repro.kernels.super_gmm.ref import super_moe_ffn_ref
 from repro.kernels.super_gmm.super_gmm import super_gmm
 from repro.models.common import ModelConfig, act_fn
@@ -43,13 +44,20 @@ def super_moe_ffn(layer_id: jax.Array, experts: dict, xb: jax.Array,
         return super_moe_ffn_ref(jnp.reshape(layer_id, ()), experts, xb, act)
     E, C, d = xb.shape
     f = experts["w_gate"].shape[-1]
-    bc, bn, bk = _pick_blocks(C, f, d)
+    # autotuned grid blocking when a table entry covers this geometry ×
+    # capacity bucket (ISSUE 10); the lookup key is a function of the jit
+    # cache key only, so tuned launches stay zero-retrace in steady state
+    tuned = tuning.lookup_blocks(E, d, f, xb.dtype, C)
+    if tuned is not None:
+        (bc, bn, bk), (bc2, bn2, bk2) = tuned
+    else:
+        bc, bn, bk = _pick_blocks(C, f, d)
+        bc2, bn2, bk2 = _pick_blocks(C, d, f)
     g = super_gmm(layer_id, experts["w_gate"], xb, block_c=bc, block_n=bn,
                   block_k=bk, interpret=interpret)
     u = super_gmm(layer_id, experts["w_up"], xb, block_c=bc, block_n=bn,
                   block_k=bk, interpret=interpret)
     h = (act(g) * u).astype(xb.dtype)
-    bc2, bn2, bk2 = _pick_blocks(C, d, f)
     return super_gmm(layer_id, experts["w_down"], h, block_c=bc2, block_n=bn2,
                      block_k=bk2, interpret=interpret)
 
@@ -120,3 +128,46 @@ def unpack_capacity(yb: np.ndarray, order: np.ndarray, slots: np.ndarray,
     out = np.empty((n, d), yb.dtype)
     out[order] = yb.reshape(-1, d)[slots]
     return out
+
+
+def pack_capacity_multi(token_list: Sequence[np.ndarray],
+                        eid_list: Sequence[np.ndarray], n_experts: int,
+                        capacity: Optional[int] = None
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int,
+                                   np.ndarray]:
+    """Pack SEVERAL regions' rows into ONE shared capacity buffer (ISSUE 10).
+
+    The continuous batcher's merge step: regions drained from different DP
+    groups (same layer) are concatenated row-major and packed with ONE
+    `pack_capacity` call, so one `super_moe_ffn` launch serves them all.  Row
+    provenance is preserved via `bounds` — the cumulative row count per
+    region — which `unpack_capacity_multi` uses to scatter each region's
+    outputs back to its OWN combine path, exactly once.
+
+    Bit-equality with the per-region path holds because every capacity-buffer
+    row is an independent dot-product chain: merging regions (or growing C to
+    the merged bucket) changes WHERE a row sits, never the reduction order
+    over d_model/d_ff — pinned by tests/test_kernels.py.
+
+    Returns (xb [n_experts, C, d], order, slots, C, bounds) where
+    (order, slots) invert the merged packing and bounds[r] is the first row
+    index AFTER region r in the concatenated order.
+    """
+    assert len(token_list) == len(eid_list) and token_list, "no regions"
+    bounds = np.cumsum([len(t) for t in token_list])
+    tokens = token_list[0] if len(token_list) == 1 \
+        else np.concatenate(token_list, axis=0)
+    eids = eid_list[0] if len(eid_list) == 1 \
+        else np.concatenate(eid_list, axis=0)
+    xb, order, slots, C = pack_capacity(tokens, eids, n_experts, capacity)
+    return xb, order, slots, C, bounds
+
+
+def unpack_capacity_multi(yb: np.ndarray, order: np.ndarray,
+                          slots: np.ndarray, bounds: np.ndarray
+                          ) -> list[np.ndarray]:
+    """Split merged expert outputs back into per-region row blocks (inverse
+    of `pack_capacity_multi`).  yb: [n_experts, C, d] -> one [n_r, d] array
+    per region, in the region order the packer was given."""
+    out = unpack_capacity(yb, order, slots, int(bounds[-1]))
+    return np.split(out, bounds[:-1])

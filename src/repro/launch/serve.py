@@ -97,6 +97,7 @@ from repro.core.scheduler import LengthAwareBatcher
 from repro.core.simulator import SimConfig
 from repro.core.trace import Request, TraceClock, TraceConfig, \
     generate_requests, sample_lengths, sample_out_len
+from repro.kernels.super_gmm import tuning
 from repro.models.lm import init_lm_params
 
 
@@ -119,6 +120,13 @@ def run_executor(args) -> int:
           f"placement={placement.policy}"
           + (f"(hot={placement.replicate_hot})" if placement.replicate_hot
              else "") + f" time-scale={args.time_scale}x]")
+    if args.tuning_table:
+        tuning.set_table(tuning.TuningTable.load(args.tuning_table))
+        print(f"super-kernel tuning table loaded from {args.tuning_table}")
+    if args.moe_batch_window:
+        print(f"continuous MoE batching: window={args.moe_batch_window * 1e3:g}ms"
+              + (f" max_tokens={args.moe_batch_max_tokens}"
+                 if args.moe_batch_max_tokens else ""))
 
     # timed arrivals: Poisson at --rps on the replayable trace clock
     # (satellite: --rps now drives the executor path, not just the sim)
@@ -141,7 +149,9 @@ def run_executor(args) -> int:
     ex = DisaggregatedExecutor(params, cfg, D=D, E=E, placement=boot,
                                moe_path=args.moe_path,
                                moe_kernel=args.moe_kernel,
-                               idle_backoff=args.idle_backoff)
+                               idle_backoff=args.idle_backoff,
+                               moe_batch_window=args.moe_batch_window,
+                               moe_batch_max_tokens=args.moe_batch_max_tokens)
     # the SAME FaultPlan format the sim interprets analytically drives the
     # executor's injector + supervised failover (ISSUE 8)
     plan = FaultPlan.from_flags(args.failure_at, args.failure_duration,
@@ -202,6 +212,11 @@ def run_executor(args) -> int:
     print(f"MoE device util: mean {u.mean() * 100:.0f}%  max "
           f"{u.max() * 100:.0f}%  imbalance {st.moe_imbalance():.2f}x; "
           f"attention group util: {np.round(st.group_util, 2)}")
+    if st.moe_launches:
+        print(f"super-kernel launches: {st.moe_launches} "
+              f"({st.regions_per_launch():.2f} regions/launch, occupancy "
+              f"{st.moe_batch_occupancy * 100:.0f}%, capacity buckets "
+              f"{st.bucket_hits} hit / {st.bucket_misses} traced)")
     fr = st.expert_fractions
     hot = [int(e) for e in engine.router_stats.hot_experts(3)]
     print(f"measured router stats: {st.router_assignments:.0f} assignments, "
@@ -243,6 +258,13 @@ def run_executor(args) -> int:
                 "failovers": st.failovers,
                 "hedges_issued": st.hedges_issued,
                 "hedge_wins": st.hedge_wins,
+                "moe_batch_window": args.moe_batch_window,
+                "moe_launches": st.moe_launches,
+                "moe_batch_regions": st.moe_batch_regions,
+                "regions_per_launch": st.regions_per_launch(),
+                "moe_batch_occupancy": st.moe_batch_occupancy,
+                "bucket_hits": st.bucket_hits,
+                "bucket_misses": st.bucket_misses,
             }, f, indent=2)
         print(f"engine stats saved to {args.save_stats}")
     engine.close()
@@ -420,10 +442,15 @@ def run_pd(args) -> int:
           f"devices -> decode runtime with {slots} slots x {max_len} tokens; "
           f"{args.requests} requests, out_lens "
           f"{[r.out_len for r in reqs]}")
+    if args.tuning_table:
+        tuning.set_table(tuning.TuningTable.load(args.tuning_table))
+        print(f"super-kernel tuning table loaded from {args.tuning_table}")
     ex = DisaggregatedExecutor(params, cfg, D=D, E=E, emit_kv=True,
                                moe_path=args.moe_path,
                                moe_kernel=args.moe_kernel,
-                               idle_backoff=args.idle_backoff)
+                               idle_backoff=args.idle_backoff,
+                               moe_batch_window=args.moe_batch_window,
+                               moe_batch_max_tokens=args.moe_batch_max_tokens)
     clock = TraceClock(speed=args.time_scale)
     pre = ExecutorEngine(
         ex, clock=clock, keep_kv=True,
@@ -579,6 +606,23 @@ def main():
                     choices=["pallas", "ref"],
                     help="fused path backend: Pallas super_gmm grid or the "
                          "layer-indexed einsum oracle")
+    ap.add_argument("--moe-batch-window", type=float, default=0.0,
+                    help="executor engine (ISSUE 10): cross-region continuous "
+                         "batching — after the first drained region each MoE "
+                         "worker keeps accumulating arrivals for up to this "
+                         "many WALL seconds and launches the super kernel "
+                         "ONCE per layer over the merged capacity buffer; 0 "
+                         "(default) reproduces the per-region path bit-"
+                         "exactly")
+    ap.add_argument("--moe-batch-max-tokens", type=int, default=None,
+                    help="cap on merged token rows per batched drain "
+                         "(bounds the capacity bucket the merged launch "
+                         "lands in); requires --moe-batch-window > 0")
+    ap.add_argument("--tuning-table", default=None, metavar="PATH",
+                    help="super-kernel autotuning table JSON (from "
+                         "benchmarks/tune_superkernel.py) consulted per "
+                         "launch for Pallas block sizes; absent entries fall "
+                         "back to the built-in heuristic")
     ap.add_argument("--idle-backoff", type=float, default=0.05,
                     help="max seconds a MoE worker waits on its condition "
                          "variable before re-checking the stop flag")
@@ -627,6 +671,28 @@ def main():
             if val is not None:
                 ap.error(f"{flag} is an executor-engine request-lifecycle "
                          f"knob; --engine sim does not consume it")
+    # cross-region batching / tuning flag validation (ISSUE 10 satellite):
+    # the sim has no super-kernel launches to batch or tune — these knobs
+    # only exist on the REAL executor, so reject them loudly there
+    if args.moe_batch_window < 0:
+        ap.error("--moe-batch-window must be >= 0")
+    if args.engine == "sim":
+        for flag, val, default in (
+                ("--moe-batch-window", args.moe_batch_window, 0.0),
+                ("--moe-batch-max-tokens", args.moe_batch_max_tokens, None),
+                ("--tuning-table", args.tuning_table, None)):
+            if val != default:
+                ap.error(f"{flag} batches/tunes the REAL executor's super-"
+                         f"kernel launches; --engine sim does not consume it")
+    if args.moe_batch_window > 0 and args.moe_path == "eager":
+        ap.error("--moe-batch-window requires --moe-path fused (batching "
+                 "merges regions into ONE capacity buffer)")
+    if args.moe_batch_max_tokens is not None:
+        if args.moe_batch_max_tokens < 1:
+            ap.error("--moe-batch-max-tokens must be >= 1")
+        if args.moe_batch_window <= 0:
+            ap.error("--moe-batch-max-tokens bounds the accumulation window; "
+                     "it requires --moe-batch-window > 0")
     if args.rebalance_interval is not None \
             and Placement.parse(args.placement,
                                 args.replicate_hot) == Placement():

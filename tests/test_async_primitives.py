@@ -188,3 +188,89 @@ def test_async_beats_sync_under_busy_receiver():
     async_latency = time.monotonic() - t0
     assert sync_latency >= busy * 0.9
     assert async_latency < busy / 4
+
+
+# ------------------------------------------------------------- recv_many
+
+
+def test_recv_many_takes_all_complete_regions_atomically():
+    """ISSUE 10: one call drains EVERY complete region under one cv
+    acquisition, in region order, and clears their flags (backpressure
+    released for all of them)."""
+    buf = MoEDeviceBuffer(D=3, T=1)
+    buf.dispatch_send(2, 0, _payload(layer=7))
+    buf.dispatch_send(0, 0, _payload(layer=3))
+    taken = buf.recv_many(timeout=1.0)
+    assert [i for i, _ in taken] == [0, 2]
+    assert taken[0][1][0].layer == 3 and taken[1][1][0].layer == 7
+    # flags cleared: senders can refill both regions without backpressure
+    buf.dispatch_send(0, 0, _payload())
+    buf.dispatch_send(2, 0, _payload())
+
+
+def test_recv_many_respects_max_regions():
+    buf = MoEDeviceBuffer(D=3, T=1)
+    for i in range(3):
+        buf.dispatch_send(i, 0, _payload(layer=i))
+    first = buf.recv_many(max_regions=2, timeout=1.0)
+    assert [i for i, _ in first] == [0, 1]
+    rest = buf.recv_many(timeout=1.0)
+    assert [i for i, _ in rest] == [2]
+
+
+def test_recv_many_skips_incomplete_regions():
+    buf = MoEDeviceBuffer(D=2, T=2)
+    buf.dispatch_send(0, 0, _payload())
+    buf.dispatch_send(0, 1, _payload())
+    buf.dispatch_send(1, 0, _payload())  # 1 of T=2 rows: incomplete
+    taken = buf.recv_many(timeout=0.1)
+    assert [i for i, _ in taken] == [0]
+
+
+def test_recv_many_blocks_until_first_completion():
+    buf = MoEDeviceBuffer(D=2, T=2)
+    buf.dispatch_send(1, 0, _payload())
+    got = []
+
+    def recv():
+        got.append(buf.recv_many(timeout=5.0))
+
+    t = threading.Thread(target=recv, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not got, "recv_many must block while no region is complete"
+    buf.dispatch_send(1, 1, _payload())  # completes region 1 -> wakes waiter
+    t.join(timeout=2)
+    assert [i for i, _ in got[0]] == [1]
+
+
+def test_recv_many_timeout_stop_and_fence():
+    buf = MoEDeviceBuffer(D=1, T=1)
+    t0 = time.monotonic()
+    assert buf.recv_many(timeout=0.05) is None
+    assert time.monotonic() - t0 < 1.0
+    stop = threading.Event()
+    stop.set()
+    assert buf.recv_many(timeout=5.0, stop=stop) is None
+    # admission fence: evaluated under the cv BEFORE any take — a fenced-out
+    # worker must not drain even a ready region
+    buf.dispatch_send(0, 0, _payload())
+    assert buf.recv_many(timeout=1.0, admit=lambda: False) is None
+    assert buf.poll_ready() == 0  # region untouched, supervisor will own it
+
+
+def test_recv_many_on_take_publishes_before_flag_clear():
+    """The exactly-once publication contract: on_take(i, rows) runs with the
+    region's rows already migrated but its flags STILL SET, so there is no
+    observable taken-but-unpublished window."""
+    buf = MoEDeviceBuffer(D=2, T=1)
+    buf.dispatch_send(0, 0, _payload(layer=1))
+    buf.dispatch_send(1, 0, _payload(layer=2))
+    seen = []
+
+    def on_take(i, rows):
+        seen.append((i, rows[0].layer, buf.flags[i].all_set()))
+
+    taken = buf.recv_many(timeout=1.0, on_take=on_take)
+    assert [i for i, _ in taken] == [0, 1]
+    assert seen == [(0, 1, True), (1, 2, True)]

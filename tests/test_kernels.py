@@ -149,6 +149,66 @@ def test_pack_capacity_rejects_dropping_capacity():
         pack_capacity(tokens, eids, 1, capacity=8)  # 10 rows won't fit
 
 
+def test_pack_capacity_multi_roundtrip_and_bit_equality():
+    """ISSUE 10: packing SEVERAL regions into one shared capacity buffer and
+    running one super-kernel launch must be BIT-equal to running each region
+    through its own pack -> launch -> unpack.  Every capacity row is an
+    independent dot chain, so merging changes WHERE a row sits, never the
+    reduction order — checked with a real (ref-kernel) expert FFN, not just
+    the identity."""
+    from repro.kernels.super_gmm.ops import (pack_capacity, pack_capacity_multi,
+                                             unpack_capacity,
+                                             unpack_capacity_multi)
+    rng = np.random.RandomState(7)
+    n_experts, d, f = 4, 16, 32
+    L = 2
+    experts = {
+        "w_gate": jnp.asarray(rng.randn(L, n_experts, d, f), jnp.float32),
+        "w_up": jnp.asarray(rng.randn(L, n_experts, d, f), jnp.float32),
+        "w_down": jnp.asarray(rng.randn(L, n_experts, f, d), jnp.float32),
+    }
+    cfg = ModelConfig(name="k", family="moe", vocab_size=8, d_model=d,
+                      d_ff=f, num_layers=L, num_heads=2, num_kv_heads=2,
+                      head_dim=8, num_experts=n_experts, top_k=2, moe_d_ff=f,
+                      dtype=jnp.float32)
+    lid = jnp.asarray([1], jnp.int32)
+
+    def ffn(xb):
+        return np.asarray(super_moe_ffn(lid, experts, xb.astype(np.float32),
+                                        cfg, kernel="ref"))
+
+    sizes = [5, 1, 12, 3]
+    token_list = [rng.randn(n, d).astype(np.float32) for n in sizes]
+    eid_list = [rng.randint(0, n_experts, n) for n in sizes]
+
+    # merged: one pack, ONE launch, split outputs by provenance bounds
+    xb, order, slots, C, bounds = pack_capacity_multi(
+        token_list, eid_list, n_experts)
+    assert list(bounds) == list(np.cumsum(sizes))
+    outs_multi = unpack_capacity_multi(ffn(xb), order, slots, bounds)
+
+    # per-region reference: own pack/launch/unpack each — with the MERGED
+    # bucket C so the jitted shape matches, and separately with each
+    # region's OWN bucket (the per-region serving path)
+    for r, (tokens, eids) in enumerate(zip(token_list, eid_list)):
+        for cap in (C, None):
+            xb1, o1, s1, _ = pack_capacity(tokens, eids, n_experts,
+                                           capacity=cap)
+            ref = unpack_capacity(ffn(xb1), o1, s1, len(tokens))
+            np.testing.assert_array_equal(outs_multi[r], ref)
+
+    # single-region degenerate case: multi == plain pack
+    xb1, o1, s1, C1, b1 = pack_capacity_multi(token_list[:1], eid_list[:1],
+                                              n_experts)
+    xb2, o2, s2, C2 = pack_capacity(token_list[0], eid_list[0], n_experts)
+    np.testing.assert_array_equal(xb1, xb2)
+    assert C1 == C2 and list(b1) == [sizes[0]]
+
+    # empty region list is a caller bug, not a silent no-op
+    with pytest.raises(AssertionError):
+        pack_capacity_multi([], [], n_experts)
+
+
 def test_round_capacity_buckets():
     from repro.kernels.super_gmm.ops import round_capacity
     assert round_capacity(0) == 8

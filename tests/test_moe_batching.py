@@ -1,0 +1,201 @@
+"""Cross-region continuous batching for the MoE super-kernel (ISSUE 10).
+
+The batcher merges regions from many DP groups into ONE capacity buffer and
+ONE launch per distinct layer — these tests pin the invariants that make
+that safe: bit-equality with the per-region path, the exactly-once combine
+protocol under mid-drain crashes, zero steady-state retraces, and the
+window=0 degenerate case being literally the per-region path."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import Placement
+from repro.core.engine import ExecutorEngine
+from repro.core.executor import BatchJob, DisaggregatedExecutor
+from repro.core.faults import FaultEvent, FaultPlan
+from repro.core.scheduler import LengthAwareBatcher
+from repro.core.trace import Request, TraceClock
+from repro.models.lm import init_lm_params, lm_backbone
+
+# threaded executor + jit compiles: slow lane (same policy as test_executor)
+pytestmark = pytest.mark.slow
+
+
+def _setup(num_layers=3, num_experts=8, top_k=2):
+    cfg = get_config("qwen3_moe_235b_a22b").smoke().replace(
+        num_layers=num_layers, num_experts=num_experts, top_k=top_k)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _jobs(cfg, n, B=1, S=8, seed=0):
+    return [BatchJob(tokens=np.random.RandomState(seed + i).randint(
+        0, cfg.vocab_size, (B, S)), bid=i) for i in range(n)]
+
+
+def _fresh(jobs, D):
+    return [[BatchJob(tokens=j.tokens, bid=j.bid) for j in jobs[g::D]]
+            for g in range(D)]
+
+
+def _check(done, params, cfg, tol=5e-5):
+    for j in done:
+        ref, _ = lm_backbone(params, cfg, jnp.asarray(j.tokens),
+                             moe_mode="dense")
+        np.testing.assert_allclose(np.asarray(j.result), np.asarray(ref),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "greedy_balanced",
+                                    "replicated(2)"])
+def test_batched_bitwise_equals_per_region_all_placements(policy):
+    """Merging regions into one shared capacity buffer changes WHERE each
+    row sits, never its dot-chain reduction order — so the batched path must
+    be BIT-equal to the per-region path, replica fan-out included."""
+    cfg, params = _setup()
+    D, E = 4, 2
+    jobs = _jobs(cfg, 8, seed=17)
+    pl = Placement.parse(policy)
+    ex0 = DisaggregatedExecutor(params, cfg, D=D, E=E, placement=pl,
+                                moe_kernel="ref")
+    ex1 = DisaggregatedExecutor(params, cfg, D=D, E=E, placement=pl,
+                                moe_kernel="ref", moe_batch_window=0.02)
+    ex1.prewarm_buckets(D * 8 * cfg.top_k)
+    done0, done1 = ex0.run(_fresh(jobs, D)), ex1.run(_fresh(jobs, D))
+    for a, b in zip(sorted(done0, key=lambda j: j.bid),
+                    sorted(done1, key=lambda j: j.bid)):
+        np.testing.assert_array_equal(np.asarray(a.result),
+                                      np.asarray(b.result))
+    _check(done1, params, cfg)
+    # the batcher actually merged (else this test pins nothing)
+    assert ex1.moe_launch_regions.sum() > ex1.moe_launches.sum()
+    assert ex0.moe_launch_regions.sum() == ex0.moe_launches.sum()
+
+
+def test_window_zero_is_exactly_the_per_region_path():
+    """serve.py contract: --moe-batch-window 0 must be the UNCHANGED
+    per-region worker — bit-equal outputs and 1.0 regions/launch."""
+    cfg, params = _setup()
+    D, E = 2, 2
+    jobs = _jobs(cfg, 4, seed=29)
+    exd = DisaggregatedExecutor(params, cfg, D=D, E=E, moe_kernel="ref")
+    ex0 = DisaggregatedExecutor(params, cfg, D=D, E=E, moe_kernel="ref",
+                                moe_batch_window=0.0)
+    dd, d0 = exd.run(_fresh(jobs, D)), ex0.run(_fresh(jobs, D))
+    for a, b in zip(sorted(dd, key=lambda j: j.bid),
+                    sorted(d0, key=lambda j: j.bid)):
+        np.testing.assert_array_equal(np.asarray(a.result),
+                                      np.asarray(b.result))
+    assert ex0.moe_launches.sum() == ex0.moe_launch_regions.sum()
+
+
+def test_batched_window_rejects_eager_path():
+    cfg, params = _setup()
+    with pytest.raises(AssertionError, match="fused"):
+        DisaggregatedExecutor(params, cfg, D=1, E=2, moe_path="eager",
+                              moe_batch_window=0.01)
+
+
+def test_moe_batch_max_tokens_bounds_each_merge():
+    """The row cap closes a drain batch early: no single merged launch may
+    exceed `moe_batch_max_tokens` rows (the dual constraint to the window)."""
+    cfg, params = _setup()
+    D, E, S = 4, 1, 8
+    cap = S * cfg.top_k + 1  # one region fills ~S*top_k rows: cap ~= 1 region
+    ex = DisaggregatedExecutor(params, cfg, D=D, E=E, moe_kernel="ref",
+                               moe_batch_window=0.05,
+                               moe_batch_max_tokens=cap)
+    ex.prewarm_buckets(D * S * cfg.top_k)
+    done = ex.run(_fresh(_jobs(cfg, 8, S=S, seed=31), D))
+    _check(done, params, cfg)
+    assert ex.moe_launches.sum() > 0
+    # <= 2 regions per merge: the cap admits one full region plus at most
+    # the region that crossed the threshold
+    assert ex.moe_launch_regions.sum() <= 2 * ex.moe_launches.sum()
+
+
+def test_jit_cache_stable_after_warmup_batched():
+    """The dispatch-bubble criterion extended to the batcher: after bucket
+    pre-warming plus one warmup run, steady state performs ZERO new traces
+    even though merged drains produce data-dependent (mixed-size) capacity
+    buckets."""
+    cfg, params = _setup(num_layers=4)
+    D, S = 4, 8
+    ex = DisaggregatedExecutor(params, cfg, D=D, E=2, moe_kernel="ref",
+                               moe_batch_window=0.02, interleave=True)
+    # the ladder up to a full-drain merge (D regions x S tokens x top_k)
+    ex.prewarm_buckets(D * S * cfg.top_k)
+    jobs = _jobs(cfg, 8, S=S, seed=37)
+    ex.run(_fresh(jobs, D))
+    warm = dict(ex.trace_counts)
+    hits0, miss0 = ex.bucket_hits.sum(), ex.bucket_misses.sum()
+    done = ex.run(_fresh(jobs, D))
+    assert dict(ex.trace_counts) == warm, "steady state must not retrace"
+    # telemetry agrees: every launch after warmup hit a pre-traced bucket
+    assert ex.bucket_misses.sum() == miss0
+    assert ex.bucket_hits.sum() > hits0
+    _check(done, params, cfg)
+
+
+def test_crash_moe_mid_drain_exactly_once():
+    """A device crash while the batcher holds SEVERAL regions: the failover
+    protocol must re-serve every un-combined region exactly once (nothing
+    lost, nothing duplicated) — `_moe_current` entries are removed before
+    each combine_send, so 'entry still present' proves combine never ran."""
+    plan = FaultPlan(events=[FaultEvent(t=0.4, kind="crash_moe", device=1)])
+    cfg, params = _setup(num_layers=2)
+    ex = DisaggregatedExecutor(params, cfg, D=2, E=4, moe_kernel="ref",
+                               moe_batch_window=0.02)
+    eng = ExecutorEngine(
+        ex, clock=TraceClock(speed=50.0), fault_plan=plan,
+        batcher=LengthAwareBatcher(inflection=48, max_tokens=128,
+                                   exclusive_cutoff=1 << 30, max_wait=0.05))
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i, arrival=i * 0.1,
+                    length=int(rng.choice([8, 16, 24, 32])))
+            for i in range(8)]
+    eng.submit_all(reqs)
+    results = eng.drain(timeout=300)
+    eng.close()
+    assert sorted(r.rid for r in results) == sorted(r.rid for r in reqs)
+    assert all(r.status == "ok" for r in results), \
+        [(r.rid, r.status) for r in results]
+    assert ex.failovers >= 1
+    assert 1 in ex.placement.dead
+
+
+def test_engine_stats_expose_batching_telemetry():
+    cfg, params = _setup(num_layers=2)
+    ex = DisaggregatedExecutor(params, cfg, D=2, E=2, moe_kernel="ref",
+                               moe_batch_window=0.02)
+    eng = ExecutorEngine(
+        ex, clock=TraceClock(speed=50.0),
+        batcher=LengthAwareBatcher(inflection=48, max_tokens=128,
+                                   exclusive_cutoff=1 << 30, max_wait=0.05))
+    reqs = [Request(rid=i, arrival=i * 0.05, length=8) for i in range(4)]
+    eng.submit_all(reqs)
+    eng.drain(timeout=300)
+    st = eng.stats()
+    eng.close()
+    assert st.moe_launches > 0
+    assert st.moe_batch_regions >= st.moe_launches
+    assert st.regions_per_launch() >= 1.0
+    assert 0.0 < st.moe_batch_occupancy <= 1.0
+    assert st.bucket_hits + st.bucket_misses == st.moe_launches
+
+
+def test_serve_cli_rejects_batching_flags_on_sim_engine():
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "HOME": "/root"}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--engine", "sim",
+         "--moe-batch-window", "0.01"],
+        capture_output=True, text=True, timeout=300, env=env,
+        cwd="/root/repo")
+    assert out.returncode != 0
+    assert "--moe-batch-window" in out.stderr
